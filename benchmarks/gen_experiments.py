@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts.
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments [--tag TAG]
+
+Prints markdown to stdout (pasted/refreshed into EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.bench_roofline import load_records
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | mode | compile | flops/dev | "
+          "bytes/dev | coll/dev (AG/AR/AA/CP) | temp mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        nm = f"{r['arch']} | {r['shape']} | {r['mesh']}"
+        if "skipped" in r:
+            print(f"| {nm} | - | - | - | - | SKIP: {r['skipped'][:48]} | - |")
+            continue
+        if "error" in r:
+            print(f"| {nm} | - | - | - | - | ERROR | - |")
+            continue
+        cb = r["collective_bytes"]
+        coll = "/".join(fmt_bytes(cb.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "all-to-all",
+                         "collective-permute"))
+        tmp = r.get("memory", {}).get("temp_size_in_bytes")
+        print(f"| {nm} | {r.get('sharding_mode', '-')} "
+              f"| {r.get('compile_s', 0):.0f}s "
+              f"| {r['flops']:.2e} | {fmt_bytes(r['bytes_accessed'])} "
+              f"| {coll} | {fmt_bytes(tmp)} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | useful ratio | model GFLOPs/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        nm = f"{r['arch']} | {r['shape']} | {r['mesh']}"
+        if "skipped" in r or "error" in r:
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        mf = r["model_flops"] / r["n_chips"] / 1e9
+        print(f"| {nm} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+              f"| {fmt_s(rf['collective_s'])} "
+              f"| {rf['dominant'].replace('_s', '')} "
+              f"| {ur:.2f} | {mf:.1f} |" if ur is not None else
+              f"| {nm} | - | - | - | - | - | - |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    recs = load_records(tag=args.tag)
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        dryrun_table(recs)
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline table\n")
+        roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

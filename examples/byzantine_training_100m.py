@@ -1,0 +1,70 @@
+"""End-to-end driver: train the ~100M-parameter ``paper-100m`` config for a
+few hundred steps under an active Byzantine attack, with a gradient filter
+defending, checkpointing, and a final serving check.
+
+This is the survey's experimental setting at modern scale: n agents run
+D-SGD (here AdamW server-side), f of them are adversarial, the server
+aggregates with a Table-2 gradient filter.
+
+Full run (a few hours on this CPU container; minutes on one TPU host):
+  PYTHONPATH=src python examples/byzantine_training_100m.py --steps 300
+
+Quick validation:
+  PYTHONPATH=src python examples/byzantine_training_100m.py \
+      --steps 30 --seq-len 64 --per-agent-batch 1
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--per-agent-batch", type=int, default=2)
+    ap.add_argument("--n-agents", type=int, default=8)
+    ap.add_argument("--f", type=int, default=2)
+    ap.add_argument("--filter", default="phocas")
+    ap.add_argument("--attack", default="alie")
+    ap.add_argument("--momentum-alpha", type=float, default=0.2)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_100m")
+    ap.add_argument("--history-out", default="artifacts/history_100m.json")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, num_params
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, cosine_warmup
+    from repro.serving import generate
+    from repro.training import ByzantineConfig, train_loop
+
+    cfg = get_config("paper-100m")
+    print(f"arch {cfg.name}: {num_params(cfg)/1e6:.1f}M params")
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                     n_agents=args.n_agents,
+                     per_agent_batch=args.per_agent_batch, regime="noniid")
+    bz = ByzantineConfig(
+        n_agents=args.n_agents, f=args.f, filter_name=args.filter,
+        attack=args.attack, momentum_alpha=args.momentum_alpha, remat=True)
+    opt = adamw(cosine_warmup(3e-4, max(args.steps // 20, 5), args.steps))
+    params, hist = train_loop(cfg, bz, opt, ds, steps=args.steps,
+                              log_every=max(args.steps // 30, 1),
+                              ckpt_dir=args.ckpt_dir,
+                              ckpt_every=max(args.steps // 3, 1))
+    if args.history_out:
+        with open(args.history_out, "w") as fh:
+            json.dump(hist, fh, indent=1)
+
+    # serve a continuation of the learnable stream
+    prompt = {"tokens": ds.batch(jax.random.PRNGKey(42), 0)
+              ["tokens"][0, :, :32]}
+    out = generate(cfg, params, prompt, 8)
+    print("greedy continuation ids:", out[0].tolist())
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(started {hist[0]['loss']:.4f}) under attack={args.attack} "
+          f"defence={args.filter}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Federated setting (survey §3.4): each agent has its OWN data distribution
+D_i.  Two honest lessons from the literature, demonstrated live:
+
+1. PURE DATA POISONING (label flips, no gradient manipulation): the mean is
+   dragged by the poisoned agents; coordinate-wise/geometric medians shrug
+   it off.
+2. HETEROGENEITY HURTS SELECTION FILTERS: Krum picks ONE agent's gradient —
+   under non-iid data that discards most of the signal (the survey's
+   federated-learning caveat; RSA/RFA [66, 83] were designed for exactly
+   this).  The mean-family robust filters (trimmed mean, Phocas) degrade
+   far less.
+
+Run:  PYTHONPATH=src python examples/federated_noniid.py
+"""
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.training import ByzantineConfig, train_loop
+
+CFG = get_config("paper-100m-smoke").replace(vocab_size=64)
+STEPS = 120
+
+
+def run(filter_name, attack="none", poison=False, regime="noniid"):
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
+                     per_agent_batch=2, regime=regime)
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name=filter_name,
+                         attack=attack)
+    _, hist = train_loop(CFG, bz, adamw(constant(3e-3)), ds, steps=STEPS,
+                         poison_labels=poison, log_fn=lambda *_: None)
+    return hist[-1]["loss"]
+
+
+if __name__ == "__main__":
+    print("1) label-flip poisoning only (f=2/8 poisoned agents, non-iid):\n")
+    print(f"{'defence':22s} {'final honest loss':>18s}")
+    for name in ("mean", "coordinate_median", "geometric_median",
+                 "trimmed_mean"):
+        print(f"{name:22s} {run(name, poison=True):18.4f}")
+
+    print("\n2) heterogeneity vs selection filters (no attack, non-iid):\n")
+    print(f"{'defence':22s} {'final honest loss':>18s}")
+    for name in ("mean", "trimmed_mean", "phocas", "krum"):
+        print(f"{name:22s} {run(name):18.4f}")
+    print("\n   (krum selects a single agent's gradient -> it cannot fit")
+    print("    all 8 non-iid streams; the survey's §3.4 heterogeneous-data")
+    print("    formulation and RSA/RFA-style methods target exactly this)")

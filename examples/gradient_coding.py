@@ -1,0 +1,44 @@
+"""Algorithmic redundancy / gradient coding — survey §3.3.3.
+
+The parallel setting: the server assigns the SAME data shard to r agents
+(Draco repetition code).  Majority voting recovers EXACT gradients under up
+to (r-1)/2 Byzantine agents per group — contrast with the approximate
+guarantees of gradient filters.  DETOX trades vote groups for robust
+bucket aggregation; randomized reactive redundancy amortizes the cost.
+
+Run:  PYTHONPATH=src python examples/gradient_coding.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.redundancy import init_reactive
+from repro.core.redundancy.reactive import (check_and_aggregate,
+                                            plain_aggregate)
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.training import ByzantineConfig, train_loop
+
+cfg = get_config("paper-100m-smoke").replace(vocab_size=64)
+ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2,
+                 regime="parallel")
+
+print("Draco repetition coding (r=4, f=1, large-value attack):")
+bz = ByzantineConfig(n_agents=8, f=1, draco_r=4, attack="large_value")
+_, hist = train_loop(cfg, bz, adamw(constant(3e-3)), ds, steps=40,
+                     log_every=20)
+print(f"  -> converged to {hist[-1]['loss']:.4f} "
+      "(exact recovery: coding, not filtering)\n")
+
+print("Randomized reactive redundancy [44] (fixed Byzantine agent):")
+n, d = 8, 16
+truth = jnp.ones((d,))
+state = init_reactive(n)
+g = jnp.tile(truth, (n, 1)).at[5].set(-100.0)
+print(f"  active agents before check: {int(jnp.sum(state.active))}")
+agg, state = check_and_aggregate(g, state, lambda i: truth)
+print(f"  after one checking iteration: active="
+      f"{int(jnp.sum(state.active))}, detected={state.detected}")
+out = plain_aggregate(jnp.tile(truth, (n, 1)).at[5].set(999.0), state)
+print(f"  subsequent plain iterations ignore it: max err "
+      f"{float(jnp.max(jnp.abs(out - truth))):.2e}")

@@ -1,0 +1,52 @@
+"""Decentralized (peer-to-peer) fault-tolerant optimization — survey §3.3.5.
+
+Eight agents with quadratic costs run p2p DGD over different topologies;
+two Byzantine agents broadcast poisoned estimates.  Compare the plain
+Metropolis mixing against Local-Filtering dynamics and Comparative
+Elimination, and demonstrate the Wu et al. data-injection attack detection.
+
+Run:  PYTHONPATH=src python examples/p2p_consensus.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.p2p import (complete_graph, data_injection_attack,
+                            detect_injection, is_r_s_robust, p2p_dgd_run,
+                            ring_graph, vertex_connectivity)
+
+key = jax.random.PRNGKey(0)
+n, d, f = 8, 3, 2
+targets = 0.3 * jax.random.normal(key, (n, d))
+grad_fn = lambda i, x: x - targets[i]
+x0 = jnp.zeros((n, d)) + 2.0
+byz = jnp.arange(n) < f
+hm = jnp.mean(targets[f:], axis=0)
+
+graphs = {"complete": complete_graph(n), "ring(k=2)": ring_graph(n, 2)}
+print("graph properties:")
+for name, adj in graphs.items():
+    print(f"  {name:10s} connectivity={vertex_connectivity(adj)} "
+          f"(2f+1={2*f+1} needed for f-total robustness)")
+
+print("\nByzantine broadcast (constant 50.0), honest error to optimum:")
+byz_fn = lambda k, t, s: jnp.full_like(s, 50.0)
+print(f"{'graph':12s} {'plain':>8s} {'lf':>8s} {'ce':>8s}")
+for name, adj in graphs.items():
+    errs = []
+    for combine in ("plain", "lf", "ce"):
+        traj = p2p_dgd_run(adj, grad_fn, x0, 100, f=f, combine=combine,
+                           byz_mask=byz, byz_fn=byz_fn)
+        errs.append(float(jnp.max(jnp.linalg.norm(traj[-1][f:] - hm,
+                                                  axis=-1))))
+    print(f"{name:12s} {errs[0]:8.3f} {errs[1]:8.3f} {errs[2]:8.3f}")
+
+print("\ndata-injection attack (Wu et al. [114]) + detection:")
+atk = data_injection_attack(10.0 * jnp.ones((d,)))
+byz1 = jnp.arange(n) < 1
+traj = p2p_dgd_run(complete_graph(n), grad_fn, x0, 60, combine="plain",
+                   byz_mask=byz1, byz_fn=atk, key=key)
+scores = detect_injection(traj, complete_graph(n))
+flagged = [int(np.argmax(scores[i])) for i in range(1, n)]
+print(f"  every honest agent flags its most-suspicious neighbour: {flagged}"
+      f"  (adversary is agent 0)")

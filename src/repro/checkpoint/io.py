@@ -1,0 +1,73 @@
+"""Pytree checkpointing (single-controller: gathers to host, npz on disk).
+
+Layout: <dir>/step_<n>.npz with arrays keyed by their tree path; structure is
+recovered against a like-structured prototype (restore(like=...)) so no
+pickling of treedefs is needed — robust across refactors that keep key names.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def to_np(leaf):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":    # ml_dtypes (bf16 etc.) -> fp32
+            arr = np.asarray(leaf, np.float32)
+        return arr
+    arrays = {_path_key(path): to_np(leaf) for path, leaf in flat}
+    out = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = out + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **arrays)
+    os.replace(tmp, out)
+    return out
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, step: int | None = None):
+    """Restore into the structure (and dtypes) of ``like``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, proto in flat:
+        key = _path_key(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(proto.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: {arr.shape} vs {proto.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=proto.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves), step

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config("<id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, active_params, num_params
+
+_MODULES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-small": "whisper_small",
+    "mamba2-130m": "mamba2_130m",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "llama3-8b": "llama3_8b",
+    "internlm2-20b": "internlm2_20b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "paper-100m": "paper_100m",
+}
+
+ASSIGNED_ARCHS = [k for k in _MODULES if k != "paper-100m"]
+
+
+def get_config(name: str) -> ArchConfig:
+    smoke = name.endswith("-smoke")
+    base = name[:-len("-smoke")] if smoke else name
+    if base not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[base]}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if smoke else cfg
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "ASSIGNED_ARCHS",
+           "num_params", "active_params"]

@@ -1,0 +1,17 @@
+"""The survey's own experimental scale: a ~100M-parameter dense LM used by
+the end-to-end examples (the surveyed papers evaluate on small models —
+MNIST/CIFAR MLPs & CNNs; we use a modern equivalent decoder LM)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paper-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32000,
+    source="survey experimental scale",
+)

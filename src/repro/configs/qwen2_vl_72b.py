@@ -1,0 +1,27 @@
+"""Qwen2-VL-72B  [arXiv:2409.12191]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 — M-RoPE
+(t/h/w sections 16/24/24 of head_dim/2=64), dynamic-resolution ViT stubbed:
+input_specs() provides 256 patch embeddings per image.  Full attention:
+long_500k decode skipped (DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    positional="mrope",
+    mrope_sections=(16, 24, 24),
+    frontend="vision",
+    frontend_tokens=256,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    source="arXiv:2409.12191",
+)

@@ -1,0 +1,28 @@
+"""Whisper-small  [arXiv:2212.04356]
+
+Encoder-decoder, 12+12L, d_model=768, 12H (MHA), d_ff=3072, vocab=51865.
+The mel-spectrogram + conv frontend is the allowed STUB: input_specs()
+provides (B, 1500, 768) frame embeddings.  LayerNorm + GELU + sinusoid
+positions (decoder learned positions replaced by sinusoid — DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    encoder_layers=12,
+    encoder_seq=1500,
+    frontend="audio",
+    norm="layer",
+    act="gelu",
+    positional="sinusoid",
+    qkv_bias=True,
+    source="arXiv:2212.04356",
+)

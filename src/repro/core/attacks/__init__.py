@@ -1,0 +1,4 @@
+from repro.core.attacks.gradient import (ATTACKS, apply_attack, get_attack,
+                                         make_byzantine_mask)
+
+__all__ = ["ATTACKS", "get_attack", "apply_attack", "make_byzantine_mask"]

@@ -1,0 +1,139 @@
+"""Byzantine attack models (survey §3.1 behaviours + §4.1 adversarial models).
+
+An attack rewrites the update vectors of the f Byzantine agents.  Attacks see
+everything (omniscient adversary): the honest gradients, the mask, and shared
+randomness — the strongest standard threat model.
+
+Signature: ``attack(key, g, byz_mask, **hyper) -> g_attacked`` with
+``g: (n, d)`` and ``byz_mask: (n,) bool`` (True = Byzantine).  SPMD-uniform:
+implemented as a dense ``where`` so the same program runs on every shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+ATTACKS: dict = {}
+
+
+def register(name):
+    def deco(fn):
+        ATTACKS[name] = fn
+        return fn
+    return deco
+
+
+def get_attack(name: str, **hyper):
+    fn = ATTACKS[name]
+    return functools.partial(fn, **hyper) if hyper else fn
+
+
+def make_byzantine_mask(n: int, f: int, fixed: bool = True, key=None):
+    """First f agents are Byzantine (fixed); or a random subset (mobile —
+    the survey notes most algorithms tolerate changing Byzantine identity)."""
+    if fixed or key is None:
+        return jnp.arange(n) < f
+    perm = jax.random.permutation(key, n)
+    return jnp.isin(jnp.arange(n), perm[:f])
+
+
+def _honest_stats(g, byz_mask):
+    w = (~byz_mask).astype(g.dtype)[:, None]
+    cnt = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(g * w, axis=0) / cnt
+    var = jnp.sum(jnp.square(g - mu[None]) * w, axis=0) / cnt
+    return mu, jnp.sqrt(var + 1e-12)
+
+
+def _replace(g, byz_mask, bad):
+    return jnp.where(byz_mask[:, None], bad, g)
+
+
+@register("none")
+def none(key, g, byz_mask):
+    return g
+
+
+@register("sign_flip")
+def sign_flip(key, g, byz_mask, scale: float = 1.0):
+    """Send -scale * (honest mean): classic reversal attack."""
+    mu, _ = _honest_stats(g, byz_mask)
+    return _replace(g, byz_mask, -scale * mu[None, :])
+
+
+@register("gaussian")
+def gaussian(key, g, byz_mask, sigma: float = 10.0):
+    noise = sigma * jax.random.normal(key, g.shape, g.dtype)
+    return _replace(g, byz_mask, noise)
+
+
+@register("large_value")
+def large_value(key, g, byz_mask, magnitude: float = 1e6):
+    bad = jnp.full_like(g, magnitude)
+    return _replace(g, byz_mask, bad)
+
+
+@register("constant_drift")
+def constant_drift(key, g, byz_mask, target=None, scale: float = 1.0):
+    """Push the aggregate toward a fixed direction (data-injection flavour,
+    Wu et al. [114])."""
+    d = g.shape[-1]
+    if target is None:
+        target = jnp.ones((d,), g.dtype) / jnp.sqrt(d)
+    return _replace(g, byz_mask, scale * target[None, :])
+
+
+@register("alie")
+def alie(key, g, byz_mask, z: float = 1.5):
+    """"A little is enough": mean - z * std per coordinate — stays inside the
+    honest spread so distance/median filters keep it."""
+    mu, sd = _honest_stats(g, byz_mask)
+    return _replace(g, byz_mask, (mu - z * sd)[None, :])
+
+
+@register("ipm")
+def ipm(key, g, byz_mask, epsilon: float = 0.5):
+    """Inner-product manipulation: -epsilon * honest mean.  epsilon < 1
+    keeps norms small (defeats naive norm filters); makes <agg, true> <= 0
+    when it succeeds."""
+    mu, _ = _honest_stats(g, byz_mask)
+    return _replace(g, byz_mask, -epsilon * mu[None, :])
+
+
+@register("mimic")
+def mimic(key, g, byz_mask, victim: int = -1):
+    """All Byzantine agents copy one honest agent — breaks iid-variance
+    assumptions of (alpha, f)-resilience-style analyses."""
+    n = g.shape[0]
+    if victim < 0:
+        victim = n - 1          # last agent is honest under the fixed mask
+    return _replace(g, byz_mask, g[victim][None, :])
+
+
+@register("zero")
+def zero(key, g, byz_mask):
+    """Stalling attack: contribute nothing (models crash faults too)."""
+    return _replace(g, byz_mask, jnp.zeros_like(g[0])[None, :])
+
+
+@register("saddle_push")
+def saddle_push(key, g, byz_mask, saddle_dir=None, scale: float = 1.0):
+    """Saddle-point attack (Yin et al. [122]): cancel the honest mean and add
+    a push along the saddle's unstable direction's *opposite*, trying to pin
+    iterates near a first-order stationary point."""
+    mu, _ = _honest_stats(g, byz_mask)
+    n_byz = jnp.maximum(jnp.sum(byz_mask.astype(g.dtype)), 1.0)
+    n_hon = jnp.sum((~byz_mask).astype(g.dtype))
+    cancel = -(n_hon / n_byz) * mu
+    if saddle_dir is not None:
+        cancel = cancel + scale * saddle_dir
+    return _replace(g, byz_mask, cancel[None, :])
+
+
+def apply_attack(attack, key, g, byz_mask):
+    """Uniform entry point used by the training step."""
+    if isinstance(attack, str):
+        attack = get_attack(attack)
+    return attack(key, g, byz_mask)

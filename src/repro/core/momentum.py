@@ -1,0 +1,32 @@
+"""Worker-side momentum — survey §3.3.4 "variance reducing techniques".
+
+Karimireddy et al. [60]: agents send exponentially-averaged updates
+m_i^t = (1-alpha) m_i^{t-1} + alpha g_i^t instead of raw stochastic gradients;
+combined with any (delta_max, c)-robust aggregator this provably fixes
+convergence for non-convex smooth losses.  El-Mhamdi et al. [33]: the same
+mechanism computed at agents boosts robustness of existing filters.
+
+Implemented as a transform on the per-agent gradient stack so it composes
+with every filter and with the attack-injection point (Byzantine agents
+corrupt the *sent* momentum, mirroring the real protocol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_momentum(grads_proto):
+    """Zero momentum buffers shaped like the per-agent gradient stack."""
+    return jax.tree.map(jnp.zeros_like, grads_proto)
+
+
+def worker_momentum(momentum, grads, alpha: float = 0.1):
+    """Returns (sent_updates, new_momentum).  alpha is the survey's
+    'averaging historical gradients' knob ([49] empirically, [60] provably):
+    smaller alpha -> stronger variance reduction."""
+    new_m = jax.tree.map(
+        lambda m, g: ((1.0 - alpha) * m.astype(jnp.float32)
+                      + alpha * g.astype(jnp.float32)).astype(m.dtype),
+        momentum, grads)
+    return new_m, new_m

@@ -1,0 +1,164 @@
+"""Peer-to-peer (decentralized) fault-tolerant DGD — survey §3.3.5.
+
+In the p2p architecture agents broadcast their local ESTIMATES x_i (not
+gradients, eq. 14).  Byzantine agents broadcast arbitrary vectors.  Honest
+agent i combines the received values with a local rule, then takes a local
+(sub)gradient step with a diminishing step size:
+
+  x_i^{t+1} = Combine_i({x_j : j in N_i^in} ∪ {x_i}) - eta_t * grad Q_i(x_i)
+
+Combine rules implemented:
+  * plain    — Metropolis-weighted average (non-robust DGD baseline)
+  * lf       — Local Filtering dynamics (Sundaram–Gharesifard [105]):
+               coordinate-wise remove the f largest and f smallest neighbour
+               values (relative to own), average the rest; sound on
+               (2f+1)-robust graphs.
+  * ce       — Comparative Elimination (Gupta–Doan–Vaidya [48]): drop the f
+               neighbour estimates FARTHEST (euclidean) from own, average the
+               rest; designed for fully-connected networks with
+               2f-redundancy.
+
+The data-injection attack of Wu et al. [114] and its detect/localize metric
+are provided for the adversarial-models section (§4.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.p2p.graph import metropolis_weights
+
+BIG = 1e30
+
+
+def _neighbor_tensor(adj, states):
+    """states: (n, d) -> received: (n, n, d) with non-neighbors masked later.
+    (Dense n^2 d tensor: p2p simulations are small-n by design.)"""
+    n = states.shape[0]
+    return jnp.broadcast_to(states[None, :, :], (n, n, states.shape[1]))
+
+
+def combine_plain(adj, W, states, f):
+    return jnp.asarray(W, states.dtype) @ states
+
+
+def combine_lf(adj, W, states, f):
+    """Trimmed-mean local filtering, coordinate-wise per receiver."""
+    n, d = states.shape
+    inc = jnp.asarray(np.asarray(adj, bool).T)        # inc[i, j]: j -> i
+    recv = _neighbor_tensor(adj, states)              # (n, n, d)
+    hi = jnp.where(inc[:, :, None], recv, BIG)
+    lo = jnp.where(inc[:, :, None], recv, -BIG)
+    s_hi = jnp.sort(hi, axis=1)                       # masked -> top
+    s_lo = jnp.sort(lo, axis=1)
+    deg = jnp.sum(inc, axis=1)                        # (n,)
+    # per receiver: sum of neighbour values minus f largest & f smallest
+    total = jnp.sum(jnp.where(inc[:, :, None], recv, 0.0), axis=1)
+    if f:
+        # ascending sort of `hi` puts masked (+BIG) entries last — the f
+        # largest real values sit at positions [deg - f, deg)
+        idx_hi = (deg - f)[:, None] + jnp.arange(f)[None, :]     # (n, f)
+        top_f = jnp.take_along_axis(
+            s_hi, jnp.broadcast_to(idx_hi[:, :, None], (n, f, d)).astype(
+                jnp.int32), axis=1)
+        # ascending sort of `lo` puts masked (-BIG) entries first — the f
+        # smallest real values start at offset n - deg per row
+        idx_lo = (n - deg)[:, None] + jnp.arange(f)[None, :]     # (n, f)
+        bot_f = jnp.take_along_axis(
+            s_lo, jnp.broadcast_to(idx_lo[:, :, None], (n, f, d)).astype(
+                jnp.int32), axis=1)
+        trimmed = total - jnp.sum(top_f, axis=1) - jnp.sum(bot_f, axis=1)
+        cnt = jnp.maximum(deg - 2 * f, 1)[:, None]
+    else:
+        trimmed = total
+        cnt = jnp.maximum(deg, 1)[:, None]
+    nbr_avg = trimmed / cnt
+    return 0.5 * states + 0.5 * nbr_avg               # keep own estimate
+
+
+def combine_ce(adj, W, states, f):
+    """Comparative elimination: drop f farthest-from-own, average rest+own."""
+    n, d = states.shape
+    inc = jnp.asarray(np.asarray(adj, bool).T)
+    recv = _neighbor_tensor(adj, states)
+    d2 = jnp.sum(jnp.square(recv - states[:, None, :]), axis=-1)   # (n, n)
+    d2 = jnp.where(inc, d2, jnp.inf)
+    deg = jnp.sum(inc, axis=1)
+    keep_k = jnp.maximum(deg - f, 0)                               # (n,)
+    order = jnp.argsort(d2, axis=1)                                # nearest..
+    rank = jnp.argsort(order, axis=1)
+    keep = (rank < keep_k[:, None]) & inc
+    total = jnp.sum(jnp.where(keep[:, :, None], recv, 0.0), axis=1)
+    cnt = jnp.sum(keep, axis=1)[:, None] + 1                       # + self
+    return (total + states) / cnt
+
+
+COMBINE = {"plain": combine_plain, "lf": combine_lf, "ce": combine_ce}
+
+
+def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
+                combine: str = "plain", byz_mask=None, byz_fn=None,
+                eta0: float = 0.5, eta_decay: float = 1.0, key=None):
+    """Simulate T rounds of p2p DGD.
+
+    grad_fn(i, x) -> gradient of Q_i at x (vmapped over agents).
+    byz_fn(key, t, states) -> broadcast values of Byzantine agents.
+    Returns trajectory (steps+1, n, d)."""
+    adj = np.asarray(adj, bool)
+    W = metropolis_weights(adj)
+    comb = COMBINE[combine]
+    n, d = x0.shape
+    if byz_mask is None:
+        byz_mask = jnp.zeros((n,), bool)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    states = jnp.asarray(x0)
+    traj = [states]
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        sent = states
+        if byz_fn is not None:
+            bad = byz_fn(sub, t, states)
+            sent = jnp.where(byz_mask[:, None], bad, states)
+        mixed = comb(adj, W, sent, f)
+        eta = eta0 / (1.0 + eta_decay * t)     # diminishing (appendix A.2)
+        grads = jax.vmap(grad_fn, in_axes=(0, 0))(jnp.arange(n), mixed)
+        states = jnp.where(byz_mask[:, None], sent,
+                           mixed - eta * grads)
+        traj.append(states)
+    return jnp.stack(traj)
+
+
+# ---------------------------------------------------------------------------
+# data-injection attack + detection metric (Wu et al. [114], §4.1)
+
+
+def data_injection_attack(target, sigma0: float = 1.0, decay: float = 0.05):
+    """Adversary broadcasts  target + z_t  with ||z_t|| -> 0 a.s. — it fakes
+    convergence toward its target point."""
+    def byz_fn(key, t, states):
+        n, d = states.shape
+        z = sigma0 * jnp.exp(-decay * t) * jax.random.normal(key, (n, d))
+        return target[None, :] + z
+    return byz_fn
+
+
+def detect_injection(traj, adj, window: int = 10):
+    """Local detect metric (simplified from [114]): for receiver i and
+    in-neighbour j, the accumulated deviation of j's broadcast from the
+    neighbourhood consensus.  Large score -> flag j as adversarial.
+    Returns (n, n) scores (i's suspicion of j)."""
+    adj = np.asarray(adj, bool)
+    x = np.asarray(traj[-window:])                  # (w, n, d)
+    mean_nbhd = []
+    n = adj.shape[0]
+    scores = np.zeros((n, n))
+    for i in range(n):
+        nbrs = np.flatnonzero(adj[:, i])
+        if len(nbrs) == 0:
+            continue
+        center = x[:, nbrs].mean(axis=1)            # (w, d)
+        for j in nbrs:
+            scores[i, j] = np.mean(
+                np.linalg.norm(x[:, j] - center, axis=-1))
+    return scores

@@ -1,0 +1,14 @@
+from repro.core.redundancy.coding import (detox_aggregate, draco_aggregate,
+                                          draco_assignment)
+from repro.core.redundancy.properties import (check_2f_eps_redundancy,
+                                              check_2f_redundancy,
+                                              hausdorff_distance,
+                                              quadratic_argmin)
+from repro.core.redundancy.reactive import (ReactiveState, init_reactive,
+                                            reactive_step)
+
+__all__ = [
+    "draco_assignment", "draco_aggregate", "detox_aggregate",
+    "check_2f_redundancy", "check_2f_eps_redundancy", "hausdorff_distance",
+    "quadratic_argmin", "ReactiveState", "init_reactive", "reactive_step",
+]

@@ -1,0 +1,84 @@
+"""Gradient coding / algorithmic redundancy — survey §3.3.3.
+
+Draco [18]: the parallel setting — the server assigns the SAME data shard to
+r agents (repetition / fractional-repetition code).  With <= (r-1)/2 Byzantine
+agents per group, a majority vote over each group recovers the exact gradient
+(linear-time decode).  We implement the repetition code with a distance-based
+majority (floating-point-safe plurality).
+
+DETOX [86]: hierarchical — (1) Draco-style majority vote inside groups of r,
+(2) partition the n/r voted gradients into buckets and average, (3) a robust
+aggregation (any gradient filter) over bucket means.  Trades redundancy for
+both speed and robustness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import dense as D
+
+
+def draco_assignment(n: int, r: int):
+    """Fractional repetition assignment: group g = agents [g*r, (g+1)*r).
+    Returns (num_groups, group_of_agent index array)."""
+    assert n % r == 0, (n, r)
+    return n // r, jnp.arange(n) // r
+
+
+def majority_vote(g, tol: float = 1e-6):
+    """Plurality vector among rows of g: (r, d) -> (d,).
+
+    Counts, for each row, how many rows lie within ``tol`` (relative) —
+    returns the row with the highest count.  Exact-agreement majority in
+    fp arithmetic."""
+    d2 = D.pairwise_sq_dists(g)
+    scale = jnp.maximum(jnp.max(jnp.sum(jnp.square(g), axis=-1)), 1e-30)
+    votes = jnp.sum(d2 <= tol * scale, axis=-1)
+    return g[jnp.argmax(votes)]
+
+
+def draco_aggregate(g, r: int, tol: float = 1e-6):
+    """g: (n, d) with groups of r computing identical tasks.
+    Returns the summed (over groups) majority gradient — exact when each
+    group has at most (r-1)//2 Byzantine members."""
+    n, d = g.shape
+    k, _ = draco_assignment(n, r)
+    grouped = g.reshape(k, r, d)
+    voted = jax.vmap(lambda grp: majority_vote(grp, tol))(grouped)
+    return jnp.mean(voted, axis=0)
+
+
+def detox_aggregate(g, r: int, f: int = 0, buckets: int = 0,
+                    filter_name: str = "geometric_median",
+                    tol: float = 1e-6):
+    """DETOX: vote -> bucket-average -> robust aggregate."""
+    n, d = g.shape
+    k, _ = draco_assignment(n, r)
+    voted = jax.vmap(lambda grp: majority_vote(grp, tol))(
+        g.reshape(k, r, d))
+    b = buckets if buckets else max(1, k // max(2 * f + 1, 1))
+    while k % b:
+        b -= 1
+    means = jnp.mean(voted.reshape(b, k // b, d), axis=1)
+    return D.FILTERS[filter_name](means, min(f, max((b - 1) // 2, 0)))
+
+
+def tree_draco_aggregate(grads, r: int, tol: float = 1e-6):
+    """Draco on pytree gradient stacks: vote weights are global (from the
+    pairwise Gram of each group), applied per leaf — exact and sharded."""
+    from repro.core.aggregation import tree_gram, tree_weighted_sum
+    n = jax.tree.leaves(grads)[0].shape[0]
+    assert n % r == 0
+    k = n // r
+    gram = tree_gram(grads)
+    sq = jnp.diag(gram)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    scale = jnp.maximum(jnp.max(sq), 1e-30)
+    same_group = (jnp.arange(n)[:, None] // r) == (jnp.arange(n)[None, :] // r)
+    votes = jnp.sum((d2 <= tol * scale) & same_group, axis=-1)      # (n,)
+    # winner per group -> one-hot weights / k
+    votes_g = votes.reshape(k, r)
+    win = jnp.argmax(votes_g, axis=-1) + jnp.arange(k) * r          # (k,)
+    w = jnp.zeros((n,)).at[win].set(1.0 / k)
+    return tree_weighted_sum(grads, w)

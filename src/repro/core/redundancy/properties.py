@@ -1,0 +1,93 @@
+"""Executable redundancy theory — survey §3.2 (solvability).
+
+2f-redundancy (Gupta & Vaidya [45], Def. 1) and (2f, eps)-redundancy
+(Liu et al. [68], Def. 2) are *properties of the agents' cost functions*.
+We make them checkable for the closed-form family used throughout the
+fault-tolerance literature's analyses: quadratic costs
+Q_i(x) = 1/2 (x - x_i*)^T H_i (x - x_i*) with H_i PSD, whose subset-aggregate
+argmin is (sum_S H_i)^{-1} (sum_S H_i x_i*) — a single point, so Hausdorff
+distance reduces to the euclidean metric (general finite-set Hausdorff is
+also provided, appendix A.1)."""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hausdorff_distance(X, Y):
+    """Finite point sets X: (a, d), Y: (b, d) — survey appendix A.1."""
+    X, Y = jnp.atleast_2d(X), jnp.atleast_2d(Y)
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum(jnp.square(X[:, None] - Y[None]), axis=-1), 0.0))
+    return jnp.maximum(jnp.max(jnp.min(d, axis=1)), jnp.max(jnp.min(d, axis=0)))
+
+
+def quadratic_argmin(Hs, xstars, subset=None):
+    """argmin_x sum_{i in subset} 1/2 (x-x_i*)^T H_i (x-x_i*)."""
+    Hs, xstars = np.asarray(Hs), np.asarray(xstars)
+    idx = np.asarray(subset) if subset is not None else np.arange(len(Hs))
+    H = Hs[idx].sum(0)
+    rhs = np.einsum("ijk,ik->j", Hs[idx], xstars[idx])
+    return np.linalg.solve(H, rhs)
+
+
+def _subsets(n, size, limit):
+    combos = itertools.combinations(range(n), size)
+    out = list(itertools.islice(combos, limit + 1))
+    if len(out) > limit:
+        # deterministic subsample to keep the check tractable
+        rng = np.random.default_rng(0)
+        all_combos = list(itertools.combinations(range(n), size))
+        pick = rng.choice(len(all_combos), size=limit, replace=False)
+        out = [all_combos[i] for i in sorted(pick)]
+    return out
+
+
+def check_2f_redundancy(Hs, xstars, f: int, tol: float = 1e-6,
+                        max_subsets: int = 2000):
+    """Def. 1: every subset of size >= n-2f has the same argmin as the full
+    set.  Returns (holds, worst_violation)."""
+    n = len(Hs)
+    full = quadratic_argmin(Hs, xstars)
+    worst = 0.0
+    for size in range(n - 2 * f, n + 1):
+        for S in _subsets(n, size, max_subsets):
+            x = quadratic_argmin(Hs, xstars, S)
+            worst = max(worst, float(np.linalg.norm(x - full)))
+    return worst <= tol, worst
+
+
+def check_2f_eps_redundancy(Hs, xstars, f: int, max_subsets: int = 2000):
+    """Def. 2: returns the smallest eps for which (2f, eps)-redundancy holds
+    (max over pairs S (|S| = n-f) superset-of Shat (|Shat| >= n-2f) of the
+    argmin distance)."""
+    n = len(Hs)
+    eps = 0.0
+    for S in _subsets(n, n - f, max_subsets):
+        xS = quadratic_argmin(Hs, xstars, S)
+        inner_budget = max(max_subsets // max(len(S), 1), 50)
+        for size in range(n - 2 * f, n - f + 1):
+            if size > len(S):
+                continue
+            for Shat in _subsets(len(S), size, inner_budget):
+                sub = [S[j] for j in Shat]
+                xh = quadratic_argmin(Hs, xstars, sub)
+                eps = max(eps, float(np.linalg.norm(xS - xh)))
+    return eps
+
+
+def make_redundant_quadratics(n: int, d: int, eps: float = 0.0, seed: int = 0):
+    """Construct n quadratic agents sharing a common minimizer (exact
+    2f-redundancy) perturbed by radius eps (giving (2f, O(eps))-redundancy)."""
+    rng = np.random.default_rng(seed)
+    common = rng.normal(size=(d,))
+    Hs, xs = [], []
+    for _ in range(n):
+        A = rng.normal(size=(d, d))
+        Hs.append(A @ A.T + np.eye(d))
+        delta = rng.normal(size=(d,))
+        delta = eps * delta / max(np.linalg.norm(delta), 1e-12)
+        xs.append(common + delta)
+    return np.stack(Hs), np.stack(xs), common

@@ -1,0 +1,81 @@
+"""Randomized reactive redundancy — Gupta & Vaidya [44] (survey §3.3.3).
+
+Instead of paying the coding overhead every iteration, the server invokes the
+redundancy check only with probability q; otherwise it runs plain DGD
+(mean aggregation over still-active agents).  When the Byzantine set is
+FIXED (the paper's assumption for removal), a detected faulty agent is
+removed forever, so the amortized overhead is O(q) — arbitrarily small.
+
+Protocol (paper's scheme specialized to the parallel setting):
+ 1. The server samples check-vs-plain *before* assigning work
+    (``should_check``); in a checking iteration, consecutive active agents
+    are paired on identical data shards.
+ 2. A mismatching pair is resolved by the server recomputing that shard
+    itself ("heuristic checking by server" [44]), exposing the liar(s).
+
+Detection mutates the active set — inherently sequential, rare, host-side;
+the hot path (plain iterations) stays pure-jnp.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ReactiveState:
+    active: jnp.ndarray          # (n,) bool — agents not yet exposed
+    checks_run: int = 0
+    detected: int = 0
+
+
+def init_reactive(n: int) -> ReactiveState:
+    return ReactiveState(active=jnp.ones((n,), bool))
+
+
+def should_check(key, q: float) -> bool:
+    return bool(jax.random.uniform(key) < q)
+
+
+def check_pairs(state: ReactiveState):
+    """Consecutive pairing of active agents (the announced assignment)."""
+    idx = [int(i) for i in np.flatnonzero(np.asarray(state.active))]
+    return list(zip(idx[0::2], idx[1::2]))
+
+
+def plain_aggregate(g, state: ReactiveState):
+    w = state.active.astype(g.dtype)
+    return jnp.sum(g * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def check_and_aggregate(g, state: ReactiveState, server_recompute,
+                        tol: float = 1e-6):
+    """Checking iteration: agents in each pair computed the SAME shard, so
+    honest pairs agree exactly; disagreement triggers server recompute and
+    removal of whoever differs from the truth."""
+    gn = np.asarray(g, np.float64)
+    active = np.asarray(state.active).copy()
+    detected = state.detected
+    scale = max(float(np.max(np.sum(gn ** 2, axis=-1))), 1e-30)
+    for a, b in check_pairs(state):
+        if np.sum((gn[a] - gn[b]) ** 2) > tol * scale:
+            truth = np.asarray(server_recompute(int(a)), np.float64)
+            for c in (a, b):
+                if np.sum((gn[c] - truth) ** 2) > tol * scale:
+                    active[c] = False
+                    detected += 1
+    new_state = ReactiveState(active=jnp.asarray(active),
+                              checks_run=state.checks_run + 1,
+                              detected=detected)
+    return plain_aggregate(g, new_state), new_state
+
+
+def reactive_step(key, g, state: ReactiveState, q: float,
+                  server_recompute=None, tol: float = 1e-6):
+    """Convenience wrapper: sample, then check or run plain."""
+    if server_recompute is not None and should_check(key, q):
+        return check_and_aggregate(g, state, server_recompute, tol)
+    return plain_aggregate(g, state), state

@@ -1,0 +1,83 @@
+"""Resilience notations as measurement harnesses — survey §3.5.
+
+(f, eps)-resilience [68]: deterministic-algorithm output within eps of the
+true (honest-aggregate) minimum — measured directly on quadratic systems.
+
+(alpha, f)-Byzantine resilience [6]: a property of an aggregation rule under
+iid vectors — estimated by Monte Carlo: (i) E<V, g> >= (1 - sin(alpha)) ||g||^2
+and a bounded-moments condition.
+
+(delta_max, c)-robust aggregator [60]: E||V - mean(honest)||^2 <= c*delta*rho^2
+— the constant c is estimated empirically over attacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import apply_attack, make_byzantine_mask
+from repro.core.filters import FILTERS
+from repro.core.redundancy.properties import quadratic_argmin
+
+
+def measure_f_eps(output, Hs, xstars, honest_idx):
+    """dist(output, argmin sum_{i in H} Q_i) — eq. (29)."""
+    true_min = quadratic_argmin(np.asarray(Hs), np.asarray(xstars),
+                                honest_idx)
+    return float(np.linalg.norm(np.asarray(output) - true_min))
+
+
+def estimate_alpha_f(filter_name: str, n: int, f: int, d: int = 32,
+                     trials: int = 64, sigma: float = 0.2,
+                     attack: str = "sign_flip", attack_hyper: dict = None,
+                     seed: int = 0, **hyper):
+    """Monte-Carlo estimate of the angle alpha of (alpha, f)-resilience:
+    returns (alpha_hat_deg, ok) where ok = E<V,g> > 0 for all trials'
+    average.  alpha_hat from  E<V, g> = (1 - sin alpha) ||g||^2."""
+    from repro.core.attacks import get_attack
+    key = jax.random.PRNGKey(seed)
+    g_true = jnp.ones((d,)) / jnp.sqrt(d)
+    fn = FILTERS[filter_name]
+    attack_fn = get_attack(attack, **(attack_hyper or {}))
+    mask = make_byzantine_mask(n, f)
+    dots = []
+    for t in range(trials):
+        key, k1, k2 = jax.random.split(key, 3)
+        G = g_true[None, :] + sigma * jax.random.normal(k1, (n, d))
+        G = attack_fn(k2, G, mask)
+        v = fn(G, f, **hyper)
+        dots.append(float(v @ g_true))
+    e_dot = float(np.mean(dots))
+    ratio = e_dot / float(g_true @ g_true)
+    sin_alpha = min(max(1.0 - ratio, 0.0), 1.0)
+    alpha = float(np.degrees(np.arcsin(sin_alpha)))
+    return alpha, e_dot > 0.0
+
+
+def estimate_delta_c(filter_name: str, n: int, f: int, d: int = 32,
+                     trials: int = 64, rho: float = 1.0,
+                     attacks=("sign_flip", "alie", "ipm", "large_value"),
+                     seed: int = 0, **hyper):
+    """Estimate the constant c of a (delta_max, c)-robust aggregator:
+    c_hat = max over attacks of  E||V - mean_honest||^2 / (delta * rho^2),
+    delta = f/n.  Honest vectors: iid with pairwise E||V_i - V_j||^2 = rho^2
+    (i.e. per-vector variance rho^2/2)."""
+    key = jax.random.PRNGKey(seed)
+    fn = FILTERS[filter_name]
+    mask = make_byzantine_mask(n, f)
+    delta = f / n
+    worst = 0.0
+    for attack in attacks:
+        errs = []
+        for t in range(trials):
+            key, k1, k2 = jax.random.split(key, 3)
+            G = (jax.random.normal(k1, (n, d))
+                 * (rho / np.sqrt(2.0)) / np.sqrt(d))
+            Ga = apply_attack(attack, k2, G, mask)
+            v = fn(Ga, f, **hyper)
+            honest_mean = jnp.mean(G[f:], axis=0)
+            errs.append(float(jnp.sum(jnp.square(v - honest_mean))))
+        c = np.mean(errs) / max(delta * rho ** 2, 1e-12)
+        worst = max(worst, float(c))
+    return worst

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, label_flip
+
+__all__ = ["SyntheticLM", "label_flip"]

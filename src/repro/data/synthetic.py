@@ -1,0 +1,62 @@
+"""Synthetic data pipeline with per-agent distributions.
+
+Covers the survey's three data-distribution regimes (§3.3.1):
+  (1) iid        — every agent samples the same process D;
+  (2) non-iid    — agent i samples its own D_i (federated setting, §3.4);
+  (3) parallel   — all agents receive identical batches (the gradient-coding
+                   setting of Draco/DETOX, §3.3.3).
+
+The process is a learnable modular-arithmetic LM: within a sequence,
+token_{k+1} = (token_k + step) mod V where ``step`` is fixed (iid/parallel) or
+agent-specific (non-iid).  A model can drive the loss well below log V by
+learning the transition — giving convergence signal for end-to-end tests.
+
+Data poisoning (label-flip attack, §3.4) is a data-level Byzantine behaviour:
+the f Byzantine agents train on labels rotated by V/2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    n_agents: int
+    per_agent_batch: int
+    regime: str = "iid"              # iid | noniid | parallel
+    base_step: int = 7
+
+    def _steps(self):
+        if self.regime == "noniid":
+            # distinct residues -> distinct agent distributions
+            return (self.base_step
+                    + 2 * jnp.arange(self.n_agents)) % self.vocab_size
+        return jnp.full((self.n_agents,), self.base_step)
+
+    def batch(self, key, step_idx: int = 0):
+        """Returns {"tokens": (n, b, T), "labels": (n, b, T)} int32."""
+        n, b, T, V = (self.n_agents, self.per_agent_batch, self.seq_len,
+                      self.vocab_size)
+        k_start = jax.random.fold_in(key, step_idx)
+        if self.regime == "parallel":
+            starts = jax.random.randint(k_start, (1, b), 0, V)
+            starts = jnp.broadcast_to(starts, (n, b))
+        else:
+            starts = jax.random.randint(k_start, (n, b), 0, V)
+        steps = self._steps()[:, None]                        # (n, 1)
+        ks = jnp.arange(T + 1)[None, None, :]                 # (1, 1, T+1)
+        seq = (starts[..., None] + ks * steps[..., None]) % V  # (n, b, T+1)
+        return {"tokens": seq[..., :-1].astype(jnp.int32),
+                "labels": seq[..., 1:].astype(jnp.int32)}
+
+
+def label_flip(batch, byz_mask, vocab_size: int):
+    """Rotate the labels of Byzantine agents by V/2 (poisoning attack)."""
+    flipped = (batch["labels"] + vocab_size // 2) % vocab_size
+    mask = byz_mask.reshape((-1,) + (1,) * (batch["labels"].ndim - 1))
+    return dict(batch, labels=jnp.where(mask, flipped, batch["labels"]))

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (agent_axes, batch_pspec, grads_pspecs,
+                                        param_pspecs)
+
+__all__ = ["param_pspecs", "grads_pspecs", "batch_pspec", "agent_axes"]

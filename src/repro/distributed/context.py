@@ -1,0 +1,50 @@
+"""Lowering-time sharding hints for model code.
+
+Model code is mesh-agnostic; launchers set this context so perf-critical
+blocks (MoE dispatch) can pin the partitioning the SPMD partitioner won't
+find on its own.  No-op when unset (single-device tests/training)."""
+from __future__ import annotations
+
+import contextlib
+
+_MOE_DISPATCH = {"axes": None, "expert_parallel": False, "sizes": {}}
+
+
+@contextlib.contextmanager
+def moe_dispatch_sharding(axes, expert_parallel: bool, sizes: dict):
+    """axes: mesh axis name (or tuple) for the capacity dim of the MoE
+    dispatch buffer; expert_parallel: shard the expert dim over "model";
+    sizes: mesh axis-name -> size (for divisibility checks)."""
+    old = dict(_MOE_DISPATCH)
+    _MOE_DISPATCH.update(axes=axes, expert_parallel=expert_parallel,
+                         sizes=dict(sizes))
+    try:
+        yield
+    finally:
+        _MOE_DISPATCH.update(old)
+
+
+def get_moe_dispatch():
+    return (_MOE_DISPATCH["axes"], _MOE_DISPATCH["expert_parallel"],
+            _MOE_DISPATCH["sizes"])
+
+
+_LAYER_REMAT = {"on": False}
+
+
+@contextlib.contextmanager
+def layer_remat(on: bool = True):
+    """Wrap every scan-layer body in jax.checkpoint: residuals become the
+    layer inputs only; attention probs / MoE activations are recomputed in
+    the backward scan (whole-loss jax.checkpoint does NOT achieve this —
+    scan still stacks per-layer residuals; measured in §Perf pair A)."""
+    old = _LAYER_REMAT["on"]
+    _LAYER_REMAT["on"] = on
+    try:
+        yield
+    finally:
+        _LAYER_REMAT["on"] = old
+
+
+def layer_remat_on() -> bool:
+    return _LAYER_REMAT["on"]

@@ -1,0 +1,206 @@
+"""Sharding rules: param/grad/batch/cache PartitionSpecs from tree paths.
+
+Mesh axes
+  single pod : ("data", "model")            — 16 x 16 = 256 chips
+  multi pod  : ("pod", "data", "model")     — 2 x 16 x 16 = 512 chips
+
+The Byzantine *agent* axis maps onto the data-parallel axes: agents =
+pod x data ranks.  Tensor/expert parallelism uses "model".
+
+Modes
+  ddp  — params replicated over data axes, sharded over "model"
+  fsdp — params additionally sharded over "data" (ZeRO-3-ish); XLA inserts
+         the per-layer all-gathers.
+
+Every rule is a CANDIDATE LIST: the first spec whose axis sizes divide the
+leaf's dimensions (given the mesh) is used — e.g. Mixtral's 8 experts cannot
+be expert-parallel over model=16, so its experts fall back to tensor-parallel
+d_ff sharding; Mamba2-130m's fused in_proj (output 3352) falls back to
+input-dim (row-parallel) sharding.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def agent_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _fs(mode):
+    """The axis params are sharded over in fsdp mode (None in ddp)."""
+    return "data" if mode == "fsdp" else None
+
+
+def _rules(mode):
+    fs = _fs(mode)
+    col = [P(fs, "model"), P(None, "model"), P("model", None), P()]
+    row = [P("model", fs), P("model", None), P(None, "model"), P()]
+    vec = [P("model"), P()]
+    return {
+        # embeddings / heads
+        ("embed",): [P("model", fs), P(None, "model"), P()],
+        ("lm_head",): [P(fs, "model"), P("model", None), P()],
+        ("frontend_proj",): col,
+        # attention
+        ("attn", "wq"): col, ("attn", "wk"): col, ("attn", "wv"): col,
+        ("attn", "wo"): row,
+        ("attn", "bq"): vec, ("attn", "bk"): vec, ("attn", "bv"): vec,
+        ("cross", "wq"): col, ("cross", "wk"): col, ("cross", "wv"): col,
+        ("cross", "wo"): row,
+        ("cross", "bq"): vec, ("cross", "bk"): vec, ("cross", "bv"): vec,
+        # dense mlp
+        ("mlp", "w_gate"): col, ("mlp", "w_up"): col,
+        ("mlp", "w_down"): row,
+        ("mlp", "w_in"): col, ("mlp", "w_out"): row,
+        # moe: expert-parallel first, tensor-parallel fallback
+        ("moe", "router"): [P()],
+        ("moe", "w_gate"): [P("model", fs, None), P(None, fs, "model"), P()],
+        ("moe", "w_up"): [P("model", fs, None), P(None, fs, "model"), P()],
+        ("moe", "w_down"): [P("model", None, fs), P(None, "model", fs),
+                            P(None, "model", None), P()],
+        ("shared", "w_gate"): col, ("shared", "w_up"): col,
+        ("shared", "w_down"): row,
+        # ssm
+        ("ssm", "in_proj"): [P(fs, "model"), P("model", None),
+                             P(None, "model"), P()],
+        ("ssm", "conv_w"): [P(None, "model"), P()],
+        ("ssm", "conv_b"): vec,
+        ("ssm", "A_log"): [P()], ("ssm", "dt_bias"): [P()],
+        ("ssm", "D_skip"): [P()],
+        ("ssm", "norm_scale"): vec,
+        ("ssm", "out_proj"): row,
+        # norms
+        ("attn_norm",): [P()], ("mlp_norm",): [P()], ("cross_norm",): [P()],
+        ("final_norm",): [P()], ("norm",): [P()],
+    }
+
+
+def _axis_size(axis, axis_sizes):
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= axis_sizes.get(a, 1)
+        return n
+    return axis_sizes.get(axis, 1)
+
+
+def _divides(spec, shape, axis_sizes) -> bool:
+    for dim, axis in zip(shape[-len(spec):] if spec else (), spec):
+        sz = _axis_size(axis, axis_sizes)
+        if sz > 1 and dim % sz:
+            return False
+    return True
+
+
+def _pad(spec, ndim):
+    pad = ndim - len(spec)
+    if pad > 0:
+        return P(*([None] * pad + list(spec)))
+    if pad < 0:
+        return P(*list(spec)[-ndim:]) if ndim else P()
+    return spec
+
+
+def _match(path_names, rules):
+    for suffix, specs in rules.items():
+        if tuple(path_names[-len(suffix):]) == suffix:
+            return specs
+    return None
+
+
+def _mesh_sizes(mesh):
+    if mesh is None:
+        return {}
+    return dict(mesh.shape)
+
+
+def _leaf_spec(path, leaf, mode, axis_sizes, lead=()):
+    names = [str(p.key) for p in path if hasattr(p, "key")]
+    candidates = _match(names, _rules(mode)) or [P()]
+    for spec in candidates:
+        padded = _pad(spec, leaf.ndim - len(lead))
+        full = P(*lead, *padded)
+        if not axis_sizes or _divides(full, leaf.shape, axis_sizes):
+            return full
+    return P(*lead, *([None] * (leaf.ndim - len(lead))))
+
+
+def param_pspecs(params, mode: str = "ddp", mesh=None):
+    """PartitionSpec pytree matching ``params``."""
+    sizes = _mesh_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mode, sizes), params)
+
+
+def grads_pspecs(params, multi_pod: bool = False, mesh=None):
+    """Per-agent gradient stacks: leading agent axis over the data axes;
+    param dims keep their model-axis (ddp) sharding."""
+    ax = agent_axes(multi_pod)
+    ax = ax[0] if len(ax) == 1 else ax
+    sizes = _mesh_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, l: _leaf_spec(path, l, "ddp", sizes, lead=(ax,)),
+        params)
+
+
+def batch_pspec(multi_pod: bool = False, extra_dims: int = 2):
+    """Batches shaped (n_agents, per_agent, ...): agent axis on data axes."""
+    ax = agent_axes(multi_pod)
+    ax = ax[0] if len(ax) == 1 else ax
+    return P(ax, *([None] * extra_dims))
+
+
+def cache_pspecs(cache, multi_pod: bool = False, mesh=None,
+                 layout: str = "headdim"):
+    """KV/SSM caches: batch dim over data axes; a model-axis dim chosen with
+    divisibility fallbacks (kv-heads -> head_dim; ssm-heads -> head_dim).
+
+    Layouts (leading layer-stack dim possible):
+      kv k/v:    (L, B, C, K, hd)
+      ssm state: (L, B, h, p, n)
+      ssm conv:  (L, B, k, conv_dim)
+    long_500k decode has B=1: the batch axis stays unsharded then."""
+    ax = agent_axes(multi_pod)
+    ax = ax[0] if len(ax) == 1 else ax
+    sizes = _mesh_sizes(mesh)
+
+    def pick(shape, candidates):
+        for spec in candidates:
+            if not sizes or _divides(spec, shape, sizes):
+                return spec
+        return P(*([None] * len(shape)))
+
+    def leaf(path, l):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if l.ndim == 0 or name not in ("k", "v", "state", "conv"):
+            return P()
+        stacked = (l.ndim == 5) if name in ("k", "v", "state") \
+            else (l.ndim == 4)
+        body = l.shape[1:] if stacked else l.shape
+        b_ax = ax if body[0] > 1 else None
+        if name in ("k", "v"):
+            if layout == "seq":
+                # shard the cache-length dim: softmax over shards reduces to
+                # cheap scalar all-reduces instead of score-tensor psums
+                cands = [P(b_ax, "model", None, None),
+                         P(b_ax, None, "model", None),
+                         P(b_ax, None, None, "model"),
+                         P(b_ax, None, None, None)]
+            else:
+                cands = [P(b_ax, None, "model", None),
+                         P(b_ax, None, None, "model"),
+                         P(b_ax, None, None, None)]
+        elif name == "state":
+            cands = [P(b_ax, "model", None, None),
+                     P(b_ax, None, "model", None),
+                     P(b_ax, None, None, None)]
+        else:
+            cands = [P(b_ax, None, "model"), P(b_ax, None, None)]
+        spec = pick(body, cands)
+        return P(None, *spec) if stacked else spec
+    return jax.tree_util.tree_map_with_path(leaf, cache)

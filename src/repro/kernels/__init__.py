@@ -1,0 +1,6 @@
+from repro.kernels.ops import (kernel_cge, kernel_coordinate_median,
+                               kernel_krum, kernel_pairwise_sq_dists,
+                               kernel_trimmed_mean)
+
+__all__ = ["kernel_coordinate_median", "kernel_trimmed_mean", "kernel_krum",
+           "kernel_cge", "kernel_pairwise_sq_dists"]

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels: padding, reshaping, and
+filter-level compositions (kernel-backed median / trimmed mean / Krum / CGE).
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware pass interpret=False (the BlockSpecs are TPU-shaped: n sublanes
+x 512 lanes, fp32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coord_stats import TILE_D, coord_sort
+from repro.kernels.pairwise import gram
+from repro.kernels.wsum import weighted_sum
+
+
+def _pad_d(g, fill=0.0):
+    n, d = g.shape
+    rem = (-d) % TILE_D
+    if rem:
+        g = jnp.pad(g, ((0, 0), (0, rem)), constant_values=fill)
+    return g, d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_coordinate_median(g, f=0, *, interpret: bool = True):
+    gp, d = _pad_d(g)
+    s = coord_sort(gp, interpret=interpret)
+    return ref.median_from_sorted(s)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("b", "interpret"))
+def kernel_trimmed_mean(g, b: int, *, interpret: bool = True):
+    gp, d = _pad_d(g)
+    s = coord_sort(gp, interpret=interpret)
+    return ref.trimmed_mean_from_sorted(s, b)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_pairwise_sq_dists(g, *, interpret: bool = True):
+    gp, _ = _pad_d(g)
+    gr = gram(gp, interpret=interpret)
+    sq = jnp.diag(gr)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("f", "interpret"))
+def kernel_krum(g, f: int, *, interpret: bool = True):
+    """Krum with Pallas Gram + Pallas weighted-select."""
+    from repro.core.filters.dense import krum_scores
+    n = g.shape[0]
+    d2 = kernel_pairwise_sq_dists(g, interpret=interpret)
+    s = krum_scores(d2, f)
+    w = jax.nn.one_hot(jnp.argmin(s), n)
+    gp, d = _pad_d(g)
+    return weighted_sum(w, gp, interpret=interpret)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("f", "normalize", "interpret"))
+def kernel_cge(g, f: int, normalize: bool = True, *, interpret: bool = True):
+    """CGE: norms from the Gram diagonal, masked weighted sum."""
+    n = g.shape[0]
+    gp, d = _pad_d(g)
+    gr = gram(gp, interpret=interpret)
+    norms = jnp.sqrt(jnp.maximum(jnp.diag(gr), 0.0))
+    _, idx = jax.lax.top_k(-norms, n - f)
+    w = jnp.zeros((n,)).at[idx].set(1.0)
+    if normalize:
+        w = w / (n - f)
+    return weighted_sum(w, gp, interpret=interpret)[:d]

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: Gram matrix of the agent-gradient stack.
+
+Krum / multi-Krum / MDA / Bulyan need all pairwise squared distances
+||g_i - g_j||^2 = ||g_i||^2 + ||g_j||^2 - 2 <g_i, g_j>.  On GPU the surveyed
+systems loop over pairs; on TPU the inner products are one MXU matmul
+(n x d)(d x n) — the kernel tiles the huge d axis into VMEM blocks and
+accumulates the (n, n) Gram in fp32 across grid steps (output block pinned
+at (0, 0), revisited every step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 512
+
+
+def _gram_kernel(g_ref, out_ref):
+    i = pl.program_id(0)
+    x = g_ref[...].astype(jnp.float32)            # (n, T)
+    part = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (n, n) on the MXU
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram(g, *, interpret: bool = True):
+    """g: (n, d) -> (n, n) fp32 Gram.  d must be a multiple of TILE_D."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(d // TILE_D,),
+        in_specs=[pl.BlockSpec((n, TILE_D), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(g)

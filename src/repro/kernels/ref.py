@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coord_sort_ref(g):
+    return jnp.sort(g.astype(jnp.float32), axis=0)
+
+
+def gram_ref(g):
+    x = g.astype(jnp.float32)
+    return x @ x.T
+
+
+def weighted_sum_ref(w, g):
+    return w.astype(jnp.float32) @ g.astype(jnp.float32)
+
+
+def median_from_sorted(s):
+    n = s.shape[0]
+    return 0.5 * (s[(n - 1) // 2] + s[n // 2])
+
+
+def trimmed_mean_from_sorted(s, b: int):
+    n = s.shape[0]
+    kept = s[b:n - b] if b else s
+    return jnp.mean(kept, axis=0)

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: weighted sum of agent gradients, out = w^T G.
+
+The application stage of every weights-decomposable filter (Krum selection,
+CGE mask, CGC clip scales, MDA subset, Draco votes): given per-agent weights
+w (n,), produce sum_i w_i g_i without materializing a gathered copy — fused
+per VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 512
+
+
+def _wsum_kernel(w_ref, g_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)            # (1, n)
+    x = g_ref[...].astype(jnp.float32)            # (n, T)
+    out_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (1, T)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_sum(w, g, *, interpret: bool = True):
+    """w: (n,), g: (n, d) -> (d,) fp32.  d multiple of TILE_D."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    out = pl.pallas_call(
+        _wsum_kernel,
+        grid=(d // TILE_D,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(w.reshape(1, n), g)
+    return out[0]

@@ -1,0 +1,248 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of its
+trip count, so scan-over-layers programs (everything here) under-report
+FLOPs/bytes/collectives by ~num_layers.  This module parses the optimized HLO
+module text, builds the computation call graph, extracts loop trip counts
+from while-condition constants, and accumulates:
+
+  * flops             — 2 * prod(result dims) * prod(contracting dims) per
+                        dot/convolution, weighted by execution count;
+  * result_bytes      — sum of op result-shape bytes (HBM-traffic proxy),
+                        counted at call-site level (fusions = one result);
+  * collective_bytes  — per collective kind, result-shape bytes, weighted.
+
+Validated against unrolled-vs-scanned twins in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1, "s4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+_CALLED = re.compile(
+    r"(?:to_apply|body|condition|calls|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_list(seg: str):
+    return [(dt, [int(x) for x in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_TOKEN.findall(seg)]
+
+
+def _shape_bytes(seg: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        cnt = 1
+        for d in dims:
+            cnt *= d
+        total += cnt * _DTYPE_BYTES[dt]
+    return total
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations = {}          # name -> list of op dicts
+        self.shapes_by_comp = {}        # comp -> {op name -> shape segment}
+        self.entry = None
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if not stripped:
+                continue
+            # computation header: at column 0 (or ENTRY), "name (params) ->
+            # result {".  Param lists may contain nested parens.
+            if (not raw.startswith(" ") and stripped.endswith("{")
+                    and " -> " in stripped and " = " not in stripped):
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    self.shapes_by_comp = getattr(self, "shapes_by_comp", {})
+                    self.shapes_by_comp[cur] = {}
+                    if m.group(1):
+                        self.entry = cur
+                    continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            om = _OP_LINE.match(line)
+            if not om:
+                continue
+            name, shape_seg, opname, rest = om.groups()
+            called = []
+            for g1, g2 in _CALLED.findall(rest):
+                if g1:
+                    called += [c.strip().lstrip("%") for c in g1.split(",")]
+                elif g2:
+                    called.append(g2)
+            self.computations[cur].append({
+                "name": name, "shape": shape_seg, "op": opname,
+                "rest": rest, "called": called,
+            })
+            self.shapes_by_comp[cur][name] = shape_seg
+
+    # ------------------------------------------------------------------
+    def _result_elems_and_shape(self, op):
+        shapes = _shape_list(op["shape"])
+        return shapes
+
+    def _operand_shape(self, comp_name, op, idx):
+        """Shape string of the idx-th operand: inline if printed, else look
+        up the operand name in this computation's op table."""
+        args = op["rest"].split("), ")[0] if "), " in op["rest"] \
+            else op["rest"].rstrip(")")
+        parts = args.split(",")
+        if idx >= len(parts):
+            return None
+        part = parts[idx]
+        if _SHAPE_TOKEN.search(part):
+            return part
+        mn = _OPERAND_NAME.search(part)
+        if mn:
+            return self.shapes_by_comp.get(comp_name, {}).get(mn.group(1))
+        return None
+
+    def _dot_flops(self, comp_name, op):
+        """2 * prod(result) * prod(contracting dims of lhs)."""
+        res_shapes = _shape_list(op["shape"])
+        if not res_shapes:
+            return 0
+        _, rdims = res_shapes[0]
+        result = 1
+        for d in rdims:
+            result *= d
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op["rest"])
+        lhs_seg = self._operand_shape(comp_name, op, 0)
+        if mc and lhs_seg:
+            lhs = _shape_list(lhs_seg)
+            if lhs:
+                _, lhs_dims = lhs[0]
+                contract = 1
+                for i in (int(x) for x in mc.group(1).split(",") if x):
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+                return 2 * result * contract
+        if op["op"] == "convolution":
+            k_seg = self._operand_shape(comp_name, op, 1)
+            if k_seg:
+                ks = _shape_list(k_seg)
+                if ks:
+                    k = 1
+                    for d in ks[0][1]:
+                        k *= d
+                    return 2 * result * k
+        return 2 * result        # unknown: at least count result writes
+
+    def trip_count(self, cond_name: str) -> int:
+        """Loop trip count from the while-condition's integer constant
+        (scan conditions compare the induction variable against the length).
+        Falls back to 1 when no constant is found."""
+        ops = self.computations.get(cond_name, [])
+        text = "\n".join(o["name"] + " = " + o["shape"] + " " + o["op"]
+                         + "(" + o["rest"] for o in ops)
+        consts = [int(m.group(1))
+                  for m in re.finditer(r"constant\((\d+)\)", text)]
+        if not consts:
+            return 1
+        return max(max(consts), 1)
+
+    # ------------------------------------------------------------------
+    def analyze(self):
+        """Walk from ENTRY, multiplying execution weights through whiles."""
+        flops = 0.0
+        result_bytes = 0.0
+        coll = defaultdict(float)
+        coll_counts = defaultdict(float)
+        bytes_by_op = defaultdict(float)
+        seen_stack = []
+
+        def walk(comp_name, weight, count_bytes):
+            nonlocal flops, result_bytes
+            if comp_name not in self.computations:
+                return
+            if comp_name in seen_stack:       # recursion guard
+                return
+            seen_stack.append(comp_name)
+            for op in self.computations[comp_name]:
+                o = op["op"]
+                if o in ("dot", "convolution"):
+                    flops += weight * self._dot_flops(comp_name, op)
+                base = None
+                for c in COLLECTIVES:
+                    if o == c or o == c + "-start":
+                        base = c
+                        break
+                if base:
+                    b = _shape_bytes(op["shape"])
+                    coll[base] += weight * b
+                    coll_counts[base] += weight
+                if count_bytes and o not in ("parameter", "constant",
+                                             "get-tuple-element", "tuple",
+                                             "bitcast"):
+                    if o == "dynamic-update-slice":
+                        # in-place on hardware: traffic = the update slice,
+                        # not the full aliased buffer (scan carries would
+                        # otherwise count L x full-stack bytes)
+                        seg = self._operand_shape(comp_name, op, 1)
+                        b = _shape_bytes(seg or "")
+                    else:
+                        b = _shape_bytes(op["shape"])
+                    result_bytes += weight * b
+                    bytes_by_op[o] += weight * b
+                if o == "while":
+                    body = cond = None
+                    mb = re.search(r"body=%?([\w\.\-]+)", op["rest"])
+                    mcnd = re.search(r"condition=%?([\w\.\-]+)", op["rest"])
+                    if mb and mcnd:
+                        trips = self.trip_count(mcnd.group(1))
+                        walk(mb.group(1), weight * trips, count_bytes)
+                        walk(mcnd.group(1), weight * trips, False)
+                elif o in ("fusion", "call", "custom-call", "map"):
+                    for c in op["called"]:
+                        # descend for dots; bytes counted at call-site result
+                        walk(c, weight, False)
+                elif o == "conditional":
+                    for c in op["called"]:
+                        walk(c, weight, count_bytes)
+                elif o in ("reduce", "sort", "scatter", "select-and-scatter",
+                           "reduce-window"):
+                    pass                      # tiny applied computations
+            seen_stack.pop()
+
+        walk(self.entry, 1.0, True)
+        top = dict(sorted(bytes_by_op.items(), key=lambda kv: -kv[1])[:12])
+        return {
+            "flops": flops,
+            "result_bytes": result_bytes,
+            "collective_bytes": dict(coll),
+            "collective_counts": {k: int(v) for k, v in coll_counts.items()},
+            "collective_bytes_total": float(sum(coll.values())),
+            "bytes_by_op": top,
+        }
+
+
+def analyze_hlo_text(text: str):
+    return HloModule(text).analyze()

@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) combination —
+weak-type-correct, shardable, no device allocation.
+
+INPUT SHAPES (assignment):
+  train_4k     seq 4,096    global_batch 256   -> train_step
+  prefill_32k  seq 32,768   global_batch 32    -> prefill_step
+  decode_32k   seq 32,768   global_batch 128   -> decode_step (1 new token)
+  long_500k    seq 524,288  global_batch 1     -> decode_step (sub-quadratic
+                                                  archs only, see DESIGN.md)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, init_params
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_supported(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k decode is quadratic; "
+                       "skipped per DESIGN.md")
+    if shape_name == "long_500k" and cfg.is_encdec:
+        return False, "enc-dec (whisper) out of domain at 500k; skipped"
+    return True, ""
+
+
+def _frontend_specs(cfg, lead_dims):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "vision":
+        return {"vision_embeds": sds(lead_dims + (cfg.frontend_tokens,
+                                                  cfg.d_model), dt)}
+    if cfg.frontend == "audio":
+        return {"audio_embeds": sds(lead_dims + (cfg.encoder_seq,
+                                                 cfg.d_model), dt)}
+    return {}
+
+
+def train_batch_specs(cfg, n_agents: int, seq_len: int = 4096,
+                      global_batch: int = 256):
+    assert global_batch % n_agents == 0
+    b = global_batch // n_agents
+    batch = {
+        "tokens": sds((n_agents, b, seq_len), jnp.int32),
+        "labels": sds((n_agents, b, seq_len), jnp.int32),
+    }
+    batch.update(_frontend_specs(cfg, (n_agents, b)))
+    return batch
+
+
+def serve_batch_specs(cfg, batch: int, seq_len: int):
+    out = {"tokens": sds((batch, seq_len), jnp.int32)}
+    out.update(_frontend_specs(cfg, (batch,)))
+    return out
+
+
+def params_specs(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg, params_sds, batch_size: int, seq_len: int):
+    """Decode-cache ShapeDtypeStructs via eval_shape (enc-dec caches depend
+    on the encoder inputs, passed through as SDS too)."""
+    batch = serve_batch_specs(cfg, batch_size, 1)
+    return jax.eval_shape(
+        lambda p, b: init_cache(cfg, p, batch_size, seq_len, b),
+        params_sds, batch)
+
+
+def input_specs(cfg, shape_name: str, n_agents: int = 16):
+    """Returns (kind, specs dict) for lowering the right step function."""
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    if kind == "train":
+        return kind, {
+            "batch": train_batch_specs(cfg, n_agents, info["seq_len"],
+                                       info["global_batch"]),
+        }
+    p = params_specs(cfg)
+    if kind == "prefill":
+        batch = serve_batch_specs(cfg, info["global_batch"], info["seq_len"])
+        cache = cache_specs(cfg, p, info["global_batch"], info["seq_len"])
+        return kind, {"batch": batch, "cache": cache}
+    # decode: ONE token against a seq_len cache
+    cache = cache_specs(cfg, p, info["global_batch"], info["seq_len"])
+    token = sds((info["global_batch"], 1), jnp.int32)
+    return kind, {"token": token, "cache": cache}

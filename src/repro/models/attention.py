@@ -1,0 +1,218 @@
+"""GQA attention with full / sliding-window masking and KV (ring) caches.
+
+Layouts
+  q:      (B, T, H, hd)
+  k, v:   (B, S, K, hd)          K = kv heads, H % K == 0
+  cache:  {"k": (B, C, K, hd), "v": ..., "pos": ()}   C = cache capacity
+          For sliding-window archs at long context the cache is a ring
+          buffer of capacity ``min(seq_len, window)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def init_attention(key, cfg, dtype):
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, cfg.num_heads * hd), dtype),
+        "wk": dense_init(ks[1], (D, cfg.num_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (D, cfg.num_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg, params, x, x_kv=None):
+    B, T, D = x.shape
+    hd = cfg.resolved_head_dim
+    x_kv = x if x_kv is None else x_kv
+    S = x_kv.shape[1]
+    q = x @ params["wq"]
+    k = x_kv @ params["wk"]
+    v = x_kv @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, T, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _rotary(cfg, q, k, q_pos, k_pos, mrope_pos=None):
+    if cfg.positional == "rope":
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    elif cfg.positional == "mrope":
+        # mrope_pos: (3, B, T) for q and (3, B, S) for k
+        qp, kp = mrope_pos
+        q = apply_mrope(q, qp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, kp, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+def gqa_scores(cfg, q, k):
+    """(B,T,H,hd)x(B,S,K,hd) -> (B,K,H/K,T,S) grouped attention logits."""
+    B, T, H, hd = q.shape
+    K = k.shape[2]
+    q = q.reshape(B, T, K, H // K, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=jnp.float32)
+    return scores / jnp.sqrt(hd).astype(jnp.float32)
+
+
+def gqa_out(cfg, probs, v, params):
+    B, K, G, T, S = probs.shape
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+    out = out.reshape(B, T, K * G * v.shape[-1])
+    return out @ params["wo"]
+
+
+def _causal_window_mask(T, S, q_offset, window: int):
+    """Mask (T, S): query i (abs pos q_offset+i) attends key j iff
+    j <= pos and pos - j < window (window=0 -> unlimited)."""
+    q_pos = q_offset + jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    m = k_pos <= q_pos
+    if window:
+        m &= (q_pos - k_pos) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# full-sequence (training / prefill) attention
+
+
+def attention(cfg, params, x, *, positions=None, mrope_pos=None,
+              causal: bool = True, x_kv=None, k_pos=None):
+    """Full-sequence attention.  Returns (B, T, D)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, x_kv)
+    S = k.shape[1]
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    if k_pos is None:
+        k_pos = positions if x_kv is None else jnp.arange(S)[None, :]
+    q, k = _rotary(cfg, q, k, positions, k_pos, mrope_pos)
+    scores = gqa_scores(cfg, q, k)
+    if causal:
+        mask = _causal_window_mask(T, S, 0, cfg.sliding_window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return gqa_out(cfg, probs, v, params)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, dtype):
+    """Cache capacity: full seq, or ring of ``window`` for SWA archs."""
+    hd = cfg.resolved_head_dim
+    cap = seq_len
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        cap = cfg.sliding_window
+    return {
+        "k": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),     # number of tokens written
+    }
+
+
+def prefill_attention(cfg, params, x, cache, *, positions=None,
+                      mrope_pos=None):
+    """Run full attention over a prompt AND build the cache."""
+    out = attention(cfg, params, x, positions=positions, mrope_pos=mrope_pos)
+    B, T, _ = x.shape
+    _, k, v = _project_qkv(cfg, params, x)
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    if cfg.positional == "rope":
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.positional == "mrope":
+        k = apply_mrope(k, mrope_pos[1], cfg.rope_theta, cfg.mrope_sections)
+    cap = cache["k"].shape[1]
+    if T <= cap:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+            "pos": jnp.asarray(T, jnp.int32),
+        }
+    else:  # keep last ``cap`` tokens, rolled so token p sits at slot p % cap
+        shift = T % cap
+        cache = {
+            "k": jnp.roll(k[:, -cap:], shift, axis=1),
+            "v": jnp.roll(v[:, -cap:], shift, axis=1),
+            "pos": jnp.asarray(T, jnp.int32),
+        }
+    return out, cache
+
+
+def decode_attention(cfg, params, x, cache, *, mrope_pos=None):
+    """Single-token decode: x (B, 1, D) against the cache (ring-aware)."""
+    B, T, _ = x.shape
+    assert T == 1
+    q, k, v = _project_qkv(cfg, params, x)
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.positional == "mrope":
+        qp = jnp.broadcast_to(positions, (3,) + positions.shape)
+        q = apply_mrope(q, qp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, qp, cfg.rope_theta, cfg.mrope_sections)
+    cap = cache["k"].shape[1]
+    slot = jnp.mod(pos, cap)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    scores = gqa_scores(cfg, q, ck)                  # (B,K,G,1,cap)
+    # valid = slots already written (ring: window constraint is implied by
+    # the capacity — old slots get overwritten)
+    idx = jnp.arange(cap)
+    written = jnp.where(pos >= cap, cap, pos + 1)
+    valid = idx < written
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = gqa_out(cfg, probs, cv, params)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention cache (enc-dec)
+
+
+def init_cross_cache(cfg, params, enc_out):
+    """Precompute K/V over encoder output once per request."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (enc_out @ params["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attention(cfg, params, x, cross_cache):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, T, cfg.num_heads, hd)
+    scores = gqa_scores(cfg, q, cross_cache["k"])
+    probs = jax.nn.softmax(scores, axis=-1)
+    return gqa_out(cfg, probs, cross_cache["v"], params)

@@ -1,0 +1,151 @@
+"""Shared model building blocks: norms, activations, RoPE / M-RoPE, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every ``init_*``
+has a mirror ``*_specs`` in :mod:`repro.distributed.sharding` mapping the same
+tree structure to PartitionSpecs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias=None, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg, x, scale, bias=None):
+    if cfg.norm == "layer":
+        return layer_norm(x, scale, bias, cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def activate(cfg, gate, up=None):
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(gate)
+        return h if up is None else h * up
+    # SwiGLU default
+    h = jax.nn.silu(gate)
+    return h if up is None else h * up
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    angles = angles[..., None, :]                           # (..., T, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (Qwen2-VL).  positions3: (3, ..., T) t/h/w position ids.
+
+    The hd/2 frequency slots are split into ``sections`` (t, h, w); each slice
+    rotates by its own position stream.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta))              # (half,)
+    # build per-slot position ids: (..., T, half)
+    chunks = []
+    start = 0
+    for sec, pos in zip(sections, positions3):
+        chunks.append(jnp.broadcast_to(
+            pos[..., None].astype(jnp.float32),
+            pos.shape + (sec,)))
+        start += sec
+    pos_per_slot = jnp.concatenate(chunks, axis=-1)          # (..., T, half)
+    angles = (pos_per_slot * freqs)[..., None, :]            # (..., T, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(max_len: int, d_model: int):
+    pos = np.arange(max_len, dtype=np.float32)[:, None]
+    dim = np.arange(0, d_model, 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10000.0, dim / d_model)
+    table = np.zeros((max_len, d_model), np.float32)
+    table[:, 0::2] = np.sin(angle)
+    table[:, 1::2] = np.cos(angle)
+    return jnp.asarray(table)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+
+
+def init_mlp(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], (D, F), dtype),
+            "w_up": dense_init(ks[1], (D, F), dtype),
+            "w_down": dense_init(ks[2], (F, D), dtype),
+        }
+    return {
+        "w_in": dense_init(ks[0], (D, F), dtype),
+        "w_out": dense_init(ks[1], (F, D), dtype),
+    }
+
+
+def mlp(cfg, params, x):
+    if cfg.act == "silu":
+        h = activate(cfg, x @ params["w_gate"], x @ params["w_up"])
+        return h @ params["w_down"]
+    h = activate(cfg, x @ params["w_in"])
+    return h @ params["w_out"]

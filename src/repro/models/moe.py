@@ -1,0 +1,117 @@
+"""Top-k mixture-of-experts block with capacity-based token dispatch.
+
+TPU-native layout: tokens are scattered into a dense (E, C, D) buffer
+(E = experts on the ``model`` mesh axis -> scatter lowers to all-to-all),
+experts run as grouped matmuls on the MXU, results gather back weighted by
+router probabilities.  Overflow tokens beyond capacity are dropped (their
+residual path passes through), standard Switch/GShard semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activate, dense_init
+
+
+def init_moe(key, cfg, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if cfg.shared_expert:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (D, F), dtype),
+            "w_up": dense_init(sk[1], (D, F), dtype),
+            "w_down": dense_init(sk[2], (F, D), dtype),
+        }
+    return p
+
+
+def capacity(cfg, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def moe_block(cfg, params, x):
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * T
+    C = capacity(cfg, N)
+    xf = x.reshape(N, D)
+
+    logits = xf.astype(jnp.float32) @ params["router"]          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)             # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * sum_e fraction_e * prob_e
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)   # (N, K, E)
+    density = jnp.mean(jnp.sum(onehot, axis=1), axis=0)         # (E,)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_prob) * cfg.router_aux_coef
+
+    # position of each (token, k) inside its expert's capacity buffer
+    flat_ids = expert_ids.reshape(-1)                           # (N*K,)
+    flat_onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)
+    slot = jnp.cumsum(flat_onehot, axis=0) * flat_onehot        # rank within expert
+    slot = jnp.sum(slot, axis=-1) - 1                           # (N*K,)
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+    safe_expert = jnp.where(keep, flat_ids, 0)
+
+    # scatter tokens -> (E, C, D); duplicates (K>1) write the same token twice
+    buf = jnp.zeros((E, C, D), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(N), K)
+    buf = buf.at[safe_expert, slot].set(
+        jnp.where(keep[:, None], xf[tok_idx], 0).astype(x.dtype),
+        mode="drop")
+
+    # serving-path sharding hint: without it the partitioner replicates the
+    # capacity dim and every device computes ALL experts over the GLOBAL
+    # token set (measured 32x redundant compute on mixtral prefill —
+    # EXPERIMENTS.md §Perf pair C)
+    from repro.distributed.context import get_moe_dispatch
+    dp_axes, ep, sizes = get_moe_dispatch()
+    cap_spec = None
+    if dp_axes is not None:
+        sz = 1
+        for a in (dp_axes if isinstance(dp_axes, tuple) else (dp_axes,)):
+            sz *= sizes.get(a, 1)
+        if sz > 1 and C % sz == 0:
+            from jax.sharding import PartitionSpec as P
+            cap_spec = P("model" if ep else None, dp_axes, None)
+            buf = jax.lax.with_sharding_constraint(buf, cap_spec)
+
+    # expert computation: grouped matmuls (E, C, D) @ (E, D, F)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = activate(cfg, h, u)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, C, D)
+    if cap_spec is not None:
+        out_buf = jax.lax.with_sharding_constraint(out_buf, cap_spec)
+
+    # gather back, weighted by the (renormalized) gate values
+    gathered = out_buf[safe_expert, slot]                       # (N*K, D)
+    if cap_spec is not None:
+        from jax.sharding import PartitionSpec as P
+        # pin the combine result back to token sharding so the capacity->
+        # token regrouping lowers as an exchange, not a full all-gather
+        gathered = jax.lax.with_sharding_constraint(
+            gathered, P(dp_axes, None))
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gathered = gathered * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum(gathered.reshape(N, K, D), axis=1)
+
+    if cfg.shared_expert:
+        s = params["shared"]
+        sh = activate(cfg, xf @ s["w_gate"], xf @ s["w_up"])
+        out = out + sh @ s["w_down"]
+    return out.reshape(B, T, D), aux

@@ -1,0 +1,550 @@
+"""Family-dispatched model stacks (dense / moe / ssm / hybrid / vlm / audio).
+
+All stacks use STACKED per-layer parameters + ``lax.scan`` so HLO size is
+independent of depth — required to compile 48-81 layer configs for 512
+placeholder devices on a 1-core host.
+
+Public API
+  init_params(cfg, key)                     -> params
+  forward_train(cfg, params, batch)         -> (logits, aux_loss)
+  init_cache(cfg, batch, seq_len)           -> cache
+  prefill(cfg, params, batch, cache)        -> (logits_last, cache)
+  decode_step(cfg, params, token, cache)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_norm, dense_init, embed_init, init_mlp,
+                                 mlp, sinusoid_positions)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+
+
+def _init_dense_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg, dtype),
+    }
+
+
+def _init_moe_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "moe": moe_lib.init_moe(ks[1], cfg, dtype),
+    }
+
+
+def _init_ssm_block(key, cfg, dtype):
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "ssm": ssm_lib.init_ssm(key, cfg, dtype),
+    }
+
+
+def _init_cross_block(key, cfg, dtype):
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 3)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+        "cross_norm": jnp.zeros((cfg.d_model,), dtype),
+        "cross": attn_lib.init_attention(ks[1], cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[2], cfg, dtype),
+    }
+
+
+def _block_init_fn(cfg):
+    if cfg.family == "moe":
+        return _init_moe_block
+    if cfg.family in ("ssm", "hybrid"):
+        return _init_ssm_block
+    if cfg.is_encdec:
+        return _init_cross_block
+    return _init_dense_block
+
+
+def _stack_init(key, cfg, n, fn, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(k, cfg, dtype))(keys)
+
+
+def init_params(cfg, key):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": _stack_init(ks[1], cfg, cfg.num_layers,
+                              _block_init_fn(cfg), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_dense_block(ks[3], cfg, dtype)
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "blocks": _stack_init(ks[4], cfg, cfg.encoder_layers,
+                                  _init_dense_block, dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(
+            ks[5], (cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / full sequence)
+
+
+def _dense_body(cfg, blk, h, positions, mrope_pos, causal=True):
+    a = apply_norm(cfg, h, blk["attn_norm"])
+    h = h + attn_lib.attention(cfg, blk["attn"], a, positions=positions,
+                               mrope_pos=mrope_pos, causal=causal)
+    m = apply_norm(cfg, h, blk["mlp_norm"])
+    return h + mlp(cfg, blk["mlp"], m)
+
+
+def _moe_body(cfg, blk, h, positions, mrope_pos):
+    a = apply_norm(cfg, h, blk["attn_norm"])
+    h = h + attn_lib.attention(cfg, blk["attn"], a, positions=positions,
+                               mrope_pos=mrope_pos)
+    m = apply_norm(cfg, h, blk["mlp_norm"])
+    out, aux = moe_lib.moe_block(cfg, blk["moe"], m)
+    return h + out, aux
+
+
+def _ssm_body(cfg, blk, h):
+    a = apply_norm(cfg, h, blk["norm"])
+    out, _ = ssm_lib.mamba_block(cfg, blk["ssm"], a)
+    return h + out
+
+
+def _hybrid_groups(cfg):
+    k = cfg.hybrid_attn_every
+    n_full = (cfg.num_layers // k) * k
+    return n_full, n_full // k, cfg.num_layers - n_full
+
+
+def _split_stacked(blocks, n_full, k):
+    main = jax.tree.map(
+        lambda a: a[:n_full].reshape((n_full // k, k) + a.shape[1:]), blocks)
+    tail = jax.tree.map(lambda a: a[n_full:], blocks)
+    return main, tail
+
+
+def _maybe_remat(body):
+    """Per-layer activation checkpointing (see distributed.context)."""
+    from repro.distributed.context import layer_remat_on
+    if layer_remat_on():
+        return jax.checkpoint(body, prevent_cse=False)
+    return body
+
+
+def _backbone(cfg, params, x, positions=None, mrope_pos=None):
+    """Run the stacked decoder blocks over (B, T, D).  Returns (h, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        @_maybe_remat
+        def body(h, blk):
+            h, a = _moe_body(cfg, blk, h, positions, mrope_pos)
+            return h, a
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        return x, jnp.sum(auxs)
+    if cfg.family == "ssm":
+        @_maybe_remat
+        def body(h, blk):
+            return _ssm_body(cfg, blk, h), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x, aux
+    if cfg.family == "hybrid":
+        n_full, groups, tail_n = _hybrid_groups(cfg)
+        main, tail = _split_stacked(params["blocks"], n_full,
+                                    cfg.hybrid_attn_every)
+        shared = params["shared_attn"]
+
+        @_maybe_remat
+        def ssm_body(h, blk):
+            return _ssm_body(cfg, blk, h), None
+
+        @_maybe_remat
+        def group_body(h, grp):
+            h, _ = jax.lax.scan(ssm_body, h, grp)
+            h = _dense_body(cfg, shared, h, positions, mrope_pos)
+            return h, None
+        x, _ = jax.lax.scan(group_body, x, main)
+        if tail_n:
+            x, _ = jax.lax.scan(ssm_body, x, tail)
+        return x, aux
+    # dense / vlm / audio-decoder
+    @_maybe_remat
+    def body(h, blk):
+        return _dense_body(cfg, blk, h, positions, mrope_pos), None
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x, aux
+
+
+def _encoder(cfg, params, audio_embeds):
+    """Whisper encoder: bidirectional blocks over stub frame embeddings."""
+    x = audio_embeds + sinusoid_positions(
+        audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)
+
+    def body(h, blk):
+        return _dense_body(cfg, blk, h, None, None, causal=False), None
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return apply_norm(cfg, x, params["encoder"]["final_norm"])
+
+
+def _decdec_forward(cfg, params, tokens, enc_out):
+    """Whisper decoder full-sequence forward with cross attention."""
+    x = params["embed"][tokens]
+    T = tokens.shape[1]
+    x = x + sinusoid_positions(T, cfg.d_model).astype(x.dtype)
+
+    def body(h, blk):
+        a = apply_norm(cfg, h, blk["attn_norm"])
+        h = h + attn_lib.attention(cfg, blk["attn"], a)
+        c = apply_norm(cfg, h, blk["cross_norm"])
+        cc = attn_lib.init_cross_cache(cfg, blk["cross"], enc_out)
+        h = h + attn_lib.cross_attention(cfg, blk["cross"], c, cc)
+        m = apply_norm(cfg, h, blk["mlp_norm"])
+        return h + mlp(cfg, blk["mlp"], m), None
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def _mrope_positions(cfg, batch, n_vis, n_txt):
+    """Stub M-RoPE position ids: vision tokens on a sqrt grid at t=0,
+    text tokens linear after the grid."""
+    side = max(int(n_vis ** 0.5), 1)
+    iv = jnp.arange(n_vis)
+    vis = jnp.stack([jnp.zeros_like(iv), iv // side, iv % side])   # (3, Tv)
+    # text positions continue from the raw token count so that cached decode
+    # (which tracks written-token count) stays consistent with prefill
+    it = jnp.arange(n_txt) + n_vis
+    txt = jnp.stack([it, it, it])
+    pos = jnp.concatenate([vis, txt], axis=1)                      # (3, T)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, n_vis + n_txt))
+
+
+def embed_inputs(cfg, params, batch):
+    """tokens (+ frontend embeddings) -> (x, positions, mrope_pos)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    mrope_pos = None
+    positions = None
+    if cfg.frontend == "vision":
+        vis = batch["vision_embeds"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+        if cfg.positional == "mrope":
+            p = _mrope_positions(cfg, B, vis.shape[1], T)
+            mrope_pos = (p, p)
+    return x, positions, mrope_pos
+
+
+def forward_train(cfg, params, batch):
+    """Full forward.  Returns (logits over the token positions, aux_loss)."""
+    if cfg.is_encdec:
+        enc_out = _encoder(cfg, params, batch["audio_embeds"].astype(
+            _dtype(cfg)))
+        h = _decdec_forward(cfg, params, batch["tokens"], enc_out)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, positions, mrope_pos = embed_inputs(cfg, params, batch)
+        h, aux = _backbone(cfg, params, x, positions, mrope_pos)
+        if cfg.frontend == "vision":            # only score text positions
+            h = h[:, -batch["tokens"].shape[1]:]
+    h = apply_norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward_train(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+def init_cache(cfg, params, batch_size: int, seq_len: int, batch=None):
+    """Decode cache for every family.  ``batch`` supplies encoder inputs
+    (enc-dec) so cross K/V can be cached."""
+    dtype = _dtype(cfg)
+
+    def stacked(n, fn):
+        proto = fn()
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), proto)
+
+    if cfg.family == "ssm":
+        cache = stacked(cfg.num_layers,
+                        lambda: ssm_lib.init_ssm_cache(cfg, batch_size, dtype))
+        return {"blocks": cache, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_full, groups, tail_n = _hybrid_groups(cfg)
+        return {
+            "blocks": stacked(cfg.num_layers,
+                              lambda: ssm_lib.init_ssm_cache(cfg, batch_size,
+                                                             dtype)),
+            "attn": stacked(groups,
+                            lambda: attn_lib.init_kv_cache(cfg, batch_size,
+                                                           seq_len, dtype)),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.is_encdec:
+        enc_out = _encoder(cfg, params, batch["audio_embeds"].astype(dtype))
+
+        def cross_for_layer(blk):
+            return attn_lib.init_cross_cache(cfg, blk["cross"], enc_out)
+        cross = jax.vmap(lambda blk: cross_for_layer(blk))(params["blocks"])
+        self_c = stacked(cfg.num_layers,
+                         lambda: attn_lib.init_kv_cache(cfg, batch_size,
+                                                        seq_len, dtype))
+        return {"self": self_c, "cross": cross,
+                "pos": jnp.zeros((), jnp.int32)}
+    # dense / moe / vlm
+    return {
+        "blocks": stacked(cfg.num_layers,
+                          lambda: attn_lib.init_kv_cache(cfg, batch_size,
+                                                         seq_len, dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# prefill
+
+
+def prefill(cfg, params, batch, cache):
+    """Full-prompt forward that fills the cache.  Returns (last-token logits,
+    cache)."""
+    dtype = _dtype(cfg)
+    if cfg.is_encdec:
+        x = params["embed"][batch["tokens"]]
+        T = x.shape[1]
+        x = x + sinusoid_positions(T, cfg.d_model).astype(x.dtype)
+
+        def body(h, xs):
+            blk, self_c, cross_c = xs
+            a = apply_norm(cfg, h, blk["attn_norm"])
+            out, self_c = attn_lib.prefill_attention(cfg, blk["attn"], a,
+                                                     self_c)
+            h = h + out
+            c = apply_norm(cfg, h, blk["cross_norm"])
+            h = h + attn_lib.cross_attention(cfg, blk["cross"], c, cross_c)
+            m = apply_norm(cfg, h, blk["mlp_norm"])
+            return h + mlp(cfg, blk["mlp"], m), self_c
+        h, self_c = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["self"],
+                                  cache["cross"]))
+        cache = {"self": self_c, "cross": cache["cross"],
+                 "pos": jnp.asarray(T, jnp.int32)}
+    elif cfg.family in ("ssm", "hybrid"):
+        x, positions, mrope_pos = embed_inputs(cfg, params, batch)
+        T = x.shape[1]
+        if cfg.family == "ssm":
+            def body(h, xs):
+                blk, c = xs
+                a = apply_norm(cfg, h, blk["norm"])
+                out, state = ssm_lib.mamba_block(cfg, blk["ssm"], a)
+                new_c = {"state": state,
+                         "conv": _conv_tail(cfg, blk, a, c["conv"])}
+                return h + out, new_c
+            h, blocks_c = jax.lax.scan(body, x,
+                                       (params["blocks"], cache["blocks"]))
+            cache = {"blocks": blocks_c, "pos": jnp.asarray(T, jnp.int32)}
+        else:
+            n_full, groups, tail_n = _hybrid_groups(cfg)
+            k = cfg.hybrid_attn_every
+            main, tailb = _split_stacked(params["blocks"], n_full, k)
+            main_c, tail_c = _split_stacked(cache["blocks"], n_full, k)
+            shared = params["shared_attn"]
+
+            def ssm_body(h, xs):
+                blk, c = xs
+                a = apply_norm(cfg, h, blk["norm"])
+                out, state = ssm_lib.mamba_block(cfg, blk["ssm"], a)
+                return h + out, {"state": state,
+                                 "conv": _conv_tail(cfg, blk, a, c["conv"])}
+
+            def group_body(h, xs):
+                grp, grp_c, attn_c = xs
+                h, grp_c = jax.lax.scan(ssm_body, h, (grp, grp_c))
+                a = apply_norm(cfg, h, shared["attn_norm"])
+                out, attn_c = attn_lib.prefill_attention(cfg, shared["attn"],
+                                                         a, attn_c)
+                h = h + out
+                m = apply_norm(cfg, h, shared["mlp_norm"])
+                h = h + mlp(cfg, shared["mlp"], m)
+                return h, (grp_c, attn_c)
+            h, (main_c, attn_c) = jax.lax.scan(
+                group_body, x, (main, main_c, cache["attn"]))
+            if tail_n:
+                h, tail_c = jax.lax.scan(ssm_body, h, (tailb, tail_c))
+            blocks_c = jax.tree.map(
+                lambda m, t: jnp.concatenate(
+                    [m.reshape((n_full,) + m.shape[2:]), t], axis=0),
+                main_c, tail_c)
+            cache = {"blocks": blocks_c, "attn": attn_c,
+                     "pos": jnp.asarray(T, jnp.int32)}
+    else:
+        x, positions, mrope_pos = embed_inputs(cfg, params, batch)
+        T = x.shape[1]
+
+        def body(h, xs):
+            blk, c = xs
+            a = apply_norm(cfg, h, blk["attn_norm"])
+            out, c = attn_lib.prefill_attention(cfg, blk["attn"], a, c,
+                                                positions=positions,
+                                                mrope_pos=mrope_pos)
+            h = h + out
+            m = apply_norm(cfg, h, blk["mlp_norm"])
+            if cfg.family == "moe":
+                o, _ = moe_lib.moe_block(cfg, blk["moe"], m)
+            else:
+                o = mlp(cfg, blk["mlp"], m)
+            return h + o, c
+        h, blocks_c = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["blocks"]))
+        cache = {"blocks": blocks_c, "pos": jnp.asarray(T, jnp.int32)}
+
+    h = apply_norm(cfg, h[:, -1:], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[:, 0], cache
+
+
+def _conv_tail(cfg, blk, a, conv_prev):
+    """Last (k-1) conv inputs after a full-sequence pass (for decode)."""
+    k = cfg.ssm_conv
+    di = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xBC = (a @ blk["ssm"]["in_proj"])[..., di:di + di + 2 * gn]
+    return xBC[:, -(k - 1):]
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def decode_step(cfg, params, token, cache):
+    """token: (B, 1) int32.  Returns (logits (B, V), new cache)."""
+    x = params["embed"][token]
+
+    if cfg.is_encdec:
+        x = x + _sin_at(cfg, cache["pos"], x.dtype)
+
+        def body(h, xs):
+            blk, self_c, cross_c = xs
+            a = apply_norm(cfg, h, blk["attn_norm"])
+            out, self_c = attn_lib.decode_attention(cfg, blk["attn"], a,
+                                                    self_c)
+            h = h + out
+            c = apply_norm(cfg, h, blk["cross_norm"])
+            h = h + attn_lib.cross_attention(cfg, blk["cross"], c, cross_c)
+            m = apply_norm(cfg, h, blk["mlp_norm"])
+            return h + mlp(cfg, blk["mlp"], m), self_c
+        h, self_c = jax.lax.scan(body, x, (params["blocks"], cache["self"],
+                                           cache["cross"]))
+        new_cache = {"self": self_c, "cross": cache["cross"],
+                     "pos": cache["pos"] + 1}
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            blk, c = xs
+            a = apply_norm(cfg, h, blk["norm"])
+            out, c = ssm_lib.mamba_decode(cfg, blk["ssm"], a, c)
+            return h + out, c
+        h, blocks_c = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["blocks"]))
+        new_cache = {"blocks": blocks_c, "pos": cache["pos"] + 1}
+    elif cfg.family == "hybrid":
+        n_full, groups, tail_n = _hybrid_groups(cfg)
+        k = cfg.hybrid_attn_every
+        main, tailb = _split_stacked(params["blocks"], n_full, k)
+        main_c, tail_c = _split_stacked(cache["blocks"], n_full, k)
+        shared = params["shared_attn"]
+
+        def ssm_body(h, xs):
+            blk, c = xs
+            a = apply_norm(cfg, h, blk["norm"])
+            out, c = ssm_lib.mamba_decode(cfg, blk["ssm"], a, c)
+            return h + out, c
+
+        def group_body(h, xs):
+            grp, grp_c, attn_c = xs
+            h, grp_c = jax.lax.scan(ssm_body, h, (grp, grp_c))
+            a = apply_norm(cfg, h, shared["attn_norm"])
+            out, attn_c = attn_lib.decode_attention(cfg, shared["attn"], a,
+                                                    attn_c)
+            h = h + out
+            m = apply_norm(cfg, h, shared["mlp_norm"])
+            h = h + mlp(cfg, shared["mlp"], m)
+            return h, (grp_c, attn_c)
+        h, (main_c, attn_c) = jax.lax.scan(group_body, x,
+                                           (main, main_c, cache["attn"]))
+        if tail_n:
+            h, tail_c = jax.lax.scan(ssm_body, h, (tailb, tail_c))
+        blocks_c = jax.tree.map(
+            lambda m, t: jnp.concatenate(
+                [m.reshape((n_full,) + m.shape[2:]), t], axis=0),
+            main_c, tail_c)
+        new_cache = {"blocks": blocks_c, "attn": attn_c,
+                     "pos": cache["pos"] + 1}
+    else:
+        def body(h, xs):
+            blk, c = xs
+            a = apply_norm(cfg, h, blk["attn_norm"])
+            out, c = attn_lib.decode_attention(cfg, blk["attn"], a, c)
+            h = h + out
+            m = apply_norm(cfg, h, blk["mlp_norm"])
+            if cfg.family == "moe":
+                o, _ = moe_lib.moe_block(cfg, blk["moe"], m)
+            else:
+                o = mlp(cfg, blk["mlp"], m)
+            return h + o, c
+        h, blocks_c = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["blocks"]))
+        new_cache = {"blocks": blocks_c, "pos": cache["pos"] + 1}
+
+    h = apply_norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[:, 0], new_cache
+
+
+def _sin_at(cfg, pos, dtype):
+    """Sinusoid position row at a dynamic position (decode)."""
+    dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+    inv = jnp.power(10000.0, dim / cfg.d_model)
+    angle = pos.astype(jnp.float32) / inv
+    row = jnp.zeros((cfg.d_model,), jnp.float32)
+    row = row.at[0::2].set(jnp.sin(angle)).at[1::2].set(jnp.cos(angle))
+    return row[None, :].astype(dtype)

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import Optimizer, adamw, apply_updates, sgd
+from repro.optim.schedules import (constant, cosine_warmup, diminishing,
+                                   inverse_sqrt)
+
+__all__ = ["Optimizer", "sgd", "adamw", "apply_updates", "constant",
+           "diminishing", "cosine_warmup", "inverse_sqrt"]

@@ -1,0 +1,83 @@
+"""Minimal production optimizers (pytree-native, jit/SPMD friendly).
+
+Optimizer state lives in fp32 regardless of parameter dtype (mixed-precision
+training); updates are cast back to the parameter dtype on apply."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable       # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(
+            p.dtype), params, updates)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, _step=None):
+        step = state["step"]
+        eta = lr(step)
+        g = jax.tree.map(lambda gr, p: gr.astype(jnp.float32)
+                         + weight_decay * p.astype(jnp.float32),
+                         grads, params)
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda gr: -eta * gr, g)
+            return upd, {"step": step + 1}
+        mu = jax.tree.map(lambda m, gr: momentum * m + gr, state["mu"], g)
+        if nesterov:
+            upd = jax.tree.map(lambda m, gr: -eta * (momentum * m + gr),
+                               mu, g)
+        else:
+            upd = jax.tree.map(lambda m: -eta * m, mu)
+        return upd, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, _step=None):
+        step = state["step"] + 1
+        eta = lr(state["step"])
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -eta * (mhat / (jnp.sqrt(vhat) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

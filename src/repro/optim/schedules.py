@@ -1,0 +1,33 @@
+"""Step-size schedules.
+
+``diminishing`` implements the survey's Appendix A.2 condition
+(sum eta_t = inf, sum eta_t^2 < inf): eta_t = eta0 / (1 + decay * t) —
+required by the DGD/BGD convergence analyses the survey cites."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def diminishing(eta0: float, decay: float = 1.0):
+    return lambda step: eta0 / (1.0 + decay * step.astype(jnp.float32))
+
+
+def inverse_sqrt(eta0: float, warmup: int = 100):
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return eta0 * jnp.minimum(s / warmup, jnp.sqrt(warmup / s))
+    return fn
+
+
+def cosine_warmup(base: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,4 @@
+from repro.serving.engine import (generate, make_decode_step,
+                                  make_prefill_step)
+
+__all__ = ["make_prefill_step", "make_decode_step", "generate"]

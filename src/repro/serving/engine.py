@@ -1,0 +1,57 @@
+"""Serving path: batched prefill + single-token decode steps.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``decode_step`` — ONE new
+token against a seq_len-sized KV (ring) / SSM-state cache.  Ring caches bound
+the 500k-context cache to the attention window for SWA archs; SSM state is
+O(1) — see DESIGN.md for the per-arch applicability."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, cache):
+        return prefill(cfg, params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(cfg, sample: str = "greedy", temperature: float = 1.0):
+    def decode(params, token, cache, key=None):
+        logits, cache = decode_step(cfg, params, token, cache)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(
+                key, logits.astype(jnp.float32) / temperature, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, cache
+    return decode
+
+
+def generate(cfg, params, prompt_batch, max_new_tokens: int,
+             seq_capacity: int | None = None, sample: str = "greedy",
+             key=None, jit: bool = True):
+    """Host loop: prefill the prompt, then decode max_new_tokens greedily.
+    Returns (B, max_new_tokens) int32."""
+    B, T = prompt_batch["tokens"].shape
+    cap = seq_capacity or (T + max_new_tokens)
+    cache = init_cache(cfg, params, B, cap, prompt_batch)
+    pre = make_prefill_step(cfg)
+    dec = make_decode_step(cfg, sample=sample)
+    if jit:
+        pre = jax.jit(pre)
+        dec = jax.jit(dec, static_argnames=())
+    logits, cache = pre(params, prompt_batch, cache)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [token]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        token, logits, cache = dec(params, token, cache,
+                                   sub if sample != "greedy" else None)
+        out.append(token)
+    return jnp.concatenate(out, axis=1)

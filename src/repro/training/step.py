@@ -1,0 +1,178 @@
+"""Byzantine-robust distributed training step.
+
+Maps the survey's server-based BGD framework (Algorithm 2) onto an SPMD TPU
+program:
+
+  1. the global batch is split along the leading AGENT axis (agents =
+     data-parallel ranks; batch leaves are (n_agents, per_agent, ...));
+  2. per-agent gradients are computed with vmap(grad) — agent axis sharded
+     over the mesh's data axes;
+  3. Byzantine behaviour is *injected* by rewriting the gradients of the f
+     adversarial agents (SPMD-uniform where on the agent index — semantically
+     identical to f agents sending arbitrary vectors, line 11 of Alg. 2);
+  4. a gradient filter aggregates across the agent axis (eq. 17) —
+     ``impl="gather"`` reproduces the survey's server literally,
+     ``impl="fused"`` uses the stats->weights decomposition (see
+     repro.core.aggregation);
+  5. the server-side optimizer applies the filtered update.
+
+Worker momentum (§3.3.4 variance reduction) and Draco-style coded
+aggregation (§3.3.3) slot in between (2) and (4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import tree_aggregate
+from repro.core.attacks import get_attack, make_byzantine_mask
+from repro.core.momentum import worker_momentum
+from repro.core.redundancy.coding import tree_draco_aggregate
+from repro.models import loss_fn
+from repro.optim import apply_updates
+
+
+@dataclass(frozen=True)
+class ByzantineConfig:
+    n_agents: int = 16
+    f: int = 3
+    filter_name: str = "trimmed_mean"
+    filter_hyper: dict = field(default_factory=dict)
+    impl: str = "fused"                 # fused | gather
+    attack: str = "none"
+    attack_hyper: dict = field(default_factory=dict)
+    momentum_alpha: float = 0.0         # 0 = raw gradients
+    draco_r: int = 0                    # >0 = coded aggregation instead
+    remat: bool = False
+    # ---- §Perf knobs (EXPERIMENTS.md) ----
+    # >1: median-of-means grouping [19] — group-mean the sent gradients in
+    # g groups of group_size BEFORE filtering (psum inside mesh subgroups
+    # instead of gathering all n agent stacks).
+    group_size: int = 1
+    # cast the exchanged gradients to this dtype before aggregation
+    # (beyond-paper quantized exchange; fp32 re-accumulated after):
+    agg_dtype: str = ""                 # "" = keep native
+    # reshard the (n, ...) gradient stack so the agent axis is replicated
+    # and the parameter dims are sharded over BOTH mesh axes before the
+    # coordinate-wise filter (beyond-paper collective schedule):
+    reshard: bool = False
+
+
+def tree_attack(attack_fn, key, grads, byz_mask):
+    """Apply a gradient attack leaf-wise (all implemented attacks are
+    coordinate-decomposable, so leaf-wise == flat-wise)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, l in zip(keys, leaves):
+        n = l.shape[0]
+        flat = l.reshape(n, -1).astype(jnp.float32)
+        out.append(attack_fn(k, flat, byz_mask).reshape(l.shape).astype(
+            l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _group_mean(grads, group_size: int):
+    """Median-of-means stage 1 [19]: mean of the *sent* gradients within
+    consecutive groups (aligned with mesh data-axis subgroups, so XLA lowers
+    it to subgroup reductions instead of a full agent-stack gather)."""
+    def leaf(l):
+        n = l.shape[0]
+        k = n // group_size
+        return jnp.mean(
+            l.astype(jnp.float32).reshape((k, group_size) + l.shape[1:]),
+            axis=1).astype(l.dtype)
+    return jax.tree.map(leaf, grads)
+
+
+def _reshard_specs(grads, mesh_sizes):
+    """Specs that replicate the agent axis and shard parameter dims over
+    both mesh axes (first two dims that divide), for the coordinate-wise
+    filter's local sort."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(l):
+        axes_left = ["data", "model"]
+        dims = [None]                    # agent axis replicated
+        for d in l.shape[1:]:
+            placed = None
+            if axes_left and d % mesh_sizes.get(axes_left[0], 1) == 0:
+                placed = axes_left.pop(0)
+            dims.append(placed)
+        return P(*dims)
+    return jax.tree.map(leaf, grads)
+
+
+def make_train_step(cfg, bz: ByzantineConfig, optimizer,
+                    mesh_sizes: dict | None = None):
+    """Returns train_step(params, opt_state, momentum, batch, key) ->
+    (params, opt_state, momentum, metrics)."""
+    attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
+        if bz.attack != "none" else None
+    byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
+
+    def agent_loss(p, agent_batch):
+        return loss_fn(cfg, p, agent_batch)
+
+    def train_step(params, opt_state, momentum, batch, key):
+        # (2) per-agent gradients — agent axis on the data mesh axes.
+        # bz.remat = PER-LAYER activation checkpointing inside the scan
+        # (whole-loss jax.checkpoint leaves the scan's stacked residuals in
+        # place — measured in EXPERIMENTS.md §Perf pair A iteration A5)
+        import contextlib
+
+        from repro.distributed.context import layer_remat
+        ctx = layer_remat(True) if bz.remat else contextlib.nullcontext()
+        with ctx:
+            losses, grads = jax.vmap(
+                jax.value_and_grad(agent_loss), in_axes=(None, 0))(
+                    params, batch)
+
+        # variance reduction: agents send momentum, not raw gradients
+        if bz.momentum_alpha > 0.0:
+            momentum, grads = worker_momentum(momentum, grads,
+                                              bz.momentum_alpha)
+
+        # (3) Byzantine injection at the communication boundary
+        if attack_fn is not None:
+            grads = tree_attack(attack_fn, key, grads, byz_mask)
+
+        # (4) robust aggregation (+ §Perf variants)
+        filter_hyper = dict(bz.filter_hyper)
+        if bz.agg_dtype:
+            grads = jax.tree.map(
+                lambda l: l.astype(jnp.dtype(bz.agg_dtype)), grads)
+            filter_hyper["native_dtype"] = True   # sort/exchange in agg_dtype
+        f_eff = bz.f
+        if bz.group_size > 1:
+            grads = _group_mean(grads, bz.group_size)
+            k = bz.n_agents // bz.group_size
+            f_eff = min(bz.f, max((k - 1) // 2, 0))
+        if bz.reshard and mesh_sizes:
+            grads = jax.lax.with_sharding_constraint(
+                grads, _reshard_specs(grads, mesh_sizes))
+        if bz.draco_r > 0:
+            agg = tree_draco_aggregate(grads, bz.draco_r)
+        else:
+            agg = tree_aggregate(bz.filter_name, grads, f_eff,
+                                 impl=bz.impl, **filter_hyper)
+
+        # (5) server-side optimizer
+        updates, opt_state = optimizer.update(agg, opt_state, params)
+        params = apply_updates(params, updates)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree.leaves(agg)))
+        honest = ~byz_mask
+        metrics = {
+            "loss": jnp.sum(losses * honest) / jnp.sum(honest),
+            "loss_all": jnp.mean(losses),
+            "grad_norm": gnorm,
+        }
+        return params, opt_state, momentum, metrics
+
+    return train_step

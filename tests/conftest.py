@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src/ layout import without install; tests run on the single host CPU device
+# (the 512-device pin lives ONLY in repro.launch.dryrun / subprocess tests).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

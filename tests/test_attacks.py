@@ -1,0 +1,63 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import ATTACKS, apply_attack, make_byzantine_mask
+
+N, F, D = 10, 3, 16
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def g():
+    return jax.random.normal(KEY, (N, D))
+
+
+@pytest.mark.parametrize("name", sorted(ATTACKS))
+def test_honest_rows_untouched(name, g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack(name, jax.random.PRNGKey(1), g, mask)
+    np.testing.assert_array_equal(np.asarray(ga[F:]), np.asarray(g[F:]))
+
+
+@pytest.mark.parametrize("name", [a for a in sorted(ATTACKS)
+                                  if a not in ("none", "mimic")])
+def test_byzantine_rows_changed(name, g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack(name, jax.random.PRNGKey(1), g, mask)
+    assert float(jnp.max(jnp.abs(ga[:F] - g[:F]))) > 1e-6
+
+
+def test_sign_flip_direction(g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack("sign_flip", KEY, g, mask)
+    mu = jnp.mean(g[F:], axis=0)
+    np.testing.assert_allclose(np.asarray(ga[0]), np.asarray(-mu), rtol=1e-5)
+
+
+def test_alie_stays_within_spread(g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack("alie", KEY, g, mask)
+    mu = jnp.mean(g[F:], axis=0)
+    sd = jnp.std(g[F:], axis=0)
+    dev = jnp.abs(ga[0] - mu) / (sd + 1e-9)
+    assert float(jnp.max(dev)) < 2.0        # z=1.5 default
+
+
+def test_ipm_negative_inner_product(g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack("ipm", KEY, g, mask)
+    mu = jnp.mean(g[F:], axis=0)
+    assert float(ga[0] @ mu) < 0
+
+
+def test_mimic_copies_victim(g):
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack("mimic", KEY, g, mask)
+    np.testing.assert_array_equal(np.asarray(ga[0]), np.asarray(g[N - 1]))
+
+
+def test_mobile_mask():
+    m = make_byzantine_mask(8, 3, fixed=False, key=jax.random.PRNGKey(7))
+    assert int(jnp.sum(m)) == 3

@@ -1,0 +1,71 @@
+"""Gradient coding (Draco / DETOX / reactive redundancy) — survey §3.3.3."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.redundancy import (detox_aggregate, draco_aggregate,
+                                   init_reactive)
+from repro.core.redundancy.coding import majority_vote, tree_draco_aggregate
+from repro.core.redundancy.reactive import (check_and_aggregate,
+                                            plain_aggregate)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def coded_stack(n=12, r=3, d=20, corrupt_per_group=1):
+    k = n // r
+    true = jax.random.normal(KEY, (k, d))
+    g = jnp.repeat(true, r, axis=0)
+    for grp in range(k):
+        for j in range(corrupt_per_group):
+            g = g.at[grp * r + j].set(1e5 * (grp + 1))
+    return g, jnp.mean(true, axis=0)
+
+
+def test_majority_vote_recovers_plurality():
+    rows = jnp.stack([jnp.ones(8), jnp.ones(8), 5 * jnp.ones(8)])
+    np.testing.assert_allclose(np.asarray(majority_vote(rows)), 1.0)
+
+
+def test_draco_exact_recovery_under_max_faults():
+    # r=3 tolerates (r-1)/2 = 1 fault per group
+    g, ref = coded_stack(corrupt_per_group=1)
+    out = draco_aggregate(g, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_draco_breaks_beyond_threshold():
+    g, ref = coded_stack(corrupt_per_group=2)   # 2 > (3-1)/2 — majority lies
+    out = draco_aggregate(g, 3)
+    assert float(jnp.max(jnp.abs(out - ref))) > 1.0
+
+
+def test_tree_draco_matches_dense():
+    g, ref = coded_stack()
+    tree = {"w": g.reshape(12, 4, 5), "b": g[:, :4]}
+    out = tree_draco_aggregate(tree, 3)
+    np.testing.assert_allclose(np.asarray(out["w"]).reshape(-1),
+                               np.asarray(draco_aggregate(g, 3)).reshape(-1),
+                               rtol=1e-5)
+
+
+def test_detox_hierarchical():
+    g, ref = coded_stack(n=12, r=3)
+    out = detox_aggregate(g, r=3, f=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+def test_reactive_detects_and_removes_fixed_byzantine():
+    n, d = 8, 10
+    truth = jnp.ones((d,))
+    state = init_reactive(n)
+    # checking iteration: consecutive pairs computed identical shards
+    g = jnp.tile(truth, (n, 1))
+    g = g.at[3].set(-50.0)              # agent 3 lies
+    agg, state = check_and_aggregate(g, state, lambda i: truth)
+    assert not bool(state.active[3])
+    assert state.detected == 1
+    # subsequent plain iterations exclude it
+    g2 = jnp.tile(truth, (n, 1)).at[3].set(99.0)
+    out = plain_aggregate(g2, state)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth), rtol=1e-6)

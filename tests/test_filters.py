@@ -1,0 +1,161 @@
+"""Gradient-filter behaviour: survey Table 2 semantics + the Blanchard
+impossibility (mean tolerates no Byzantine agent) + attack/defence matrix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import apply_attack, make_byzantine_mask
+from repro.core.filters import FILTERS, compose
+from repro.core.filters.dense import pairwise_sq_dists
+
+N, F, D = 12, 2, 40
+KEY = jax.random.PRNGKey(0)
+
+ROBUST = ["krum", "multi_krum", "m_krum", "coordinate_median",
+          "trimmed_mean", "phocas", "mean_around_median",
+          "geometric_median", "median_of_means", "mda", "cge", "cgc",
+          "bulyan", "rfa"]
+
+
+def honest_cluster(key, n=N, d=D, sigma=0.1):
+    center = jnp.linspace(-1, 1, d)
+    return center + sigma * jax.random.normal(key, (n, d)), center
+
+
+@pytest.mark.parametrize("name", ROBUST + ["mean"])
+def test_shapes_and_finite(name):
+    g, _ = honest_cluster(KEY)
+    out = FILTERS[name](g, F)
+    assert out.shape == (D,)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", ROBUST)
+def test_close_to_center_without_attack(name):
+    g, center = honest_cluster(KEY)
+    out = FILTERS[name](g, F)
+    assert float(jnp.linalg.norm(out - center)) < 0.5
+
+
+@pytest.mark.parametrize("name", ROBUST)
+@pytest.mark.parametrize("attack", ["large_value", "sign_flip", "gaussian"])
+def test_robust_filters_bound_attack(name, attack):
+    """With f of n corrupted by crude attacks, a robust filter stays near the
+    honest center while the attacked mean does not.  Norm-based filters
+    (CGE/CGC) cannot reject same-norm sign-flips — their guarantee is a
+    positively-aligned descent direction (survey §3.3.2), asserted instead."""
+    g, center = honest_cluster(KEY)
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack(attack, jax.random.PRNGKey(1), g, mask)
+    out = FILTERS[name](ga, F)
+    err = float(jnp.linalg.norm(out - center))
+    err_mean = float(jnp.linalg.norm(FILTERS["mean"](ga, F) - center))
+    if name in ("cge", "cgc") and attack == "sign_flip":
+        align = float(out @ center) / float(center @ center)
+        assert align > 0.3, (name, attack, align)
+    else:
+        assert err < 1.0, (name, attack, err)
+    if attack == "large_value":
+        assert err < err_mean / 100
+
+
+def test_blanchard_impossibility():
+    """[6]: no linear aggregation tolerates a single Byzantine agent — one
+    adversary can steer the mean to an arbitrary point."""
+    g, center = honest_cluster(KEY)
+    target = 1e6 * jnp.ones((D,))
+    bad = N * target - jnp.sum(g[1:], axis=0)
+    ga = g.at[0].set(bad)
+    out = FILTERS["mean"](ga, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(target),
+                               rtol=1e-3)
+    # while e.g. krum ignores it entirely
+    robust = FILTERS["krum"](ga, 1)
+    assert float(jnp.linalg.norm(robust - center)) < 1.0
+
+
+def test_krum_outputs_an_input():
+    g, _ = honest_cluster(KEY)
+    out = FILTERS["krum"](g, F)
+    d = jnp.min(jnp.linalg.norm(g - out[None], axis=-1))
+    assert float(d) < 1e-6
+
+
+def test_multi_krum_variants_agree_on_clean_data():
+    g, _ = honest_cluster(KEY, sigma=0.01)
+    a = FILTERS["multi_krum"](g, F, m=3)
+    b = FILTERS["m_krum"](g, F, m=3)
+    assert float(jnp.linalg.norm(a - b)) < 0.2
+
+
+def test_trimmed_mean_bounds():
+    g, _ = honest_cluster(KEY)
+    out = FILTERS["trimmed_mean"](g, F)
+    lo = jnp.min(g, axis=0)
+    hi = jnp.max(g, axis=0)
+    assert bool(jnp.all(out >= lo - 1e-6)) and bool(jnp.all(out <= hi + 1e-6))
+
+
+def test_cge_keeps_small_norms():
+    g, center = honest_cluster(KEY)
+    ga = g.at[0].set(1e4 * jnp.ones((D,)))
+    out = FILTERS["cge"](ga, 1)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_cgc_clips_norms():
+    g, center = honest_cluster(KEY)
+    ga = g.at[0].set(1e4 * jnp.ones((D,)))
+    out = FILTERS["cgc"](ga, 1)
+    norms = jnp.linalg.norm(ga, axis=-1)
+    tau = jnp.sort(norms)[N - 2]
+    assert float(jnp.linalg.norm(out)) <= float(tau) + 1e-3
+
+
+def test_geometric_median_breakdown():
+    """Geometric median tolerates up to 1/2 corrupted points."""
+    g, center = honest_cluster(KEY)
+    ga = g.at[:F].set(1e6)
+    out = FILTERS["geometric_median"](ga, F, iters=64)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_mda_selects_min_diameter_subset():
+    g, center = honest_cluster(KEY, sigma=0.05)
+    ga = g.at[0].set(50.0).at[1].set(-50.0)
+    out = FILTERS["mda"](ga, 2)
+    assert float(jnp.linalg.norm(out - center)) < 0.5
+
+
+def test_bulyan_needs_theta_and_defeats_alie():
+    n, f = 15, 2                       # n >= 4f+3 for guarantees
+    g = jnp.linspace(-1, 1, D) + 0.1 * jax.random.normal(KEY, (n, D))
+    mask = make_byzantine_mask(n, f)
+    ga = apply_attack("alie", jax.random.PRNGKey(2), g, mask)
+    out = FILTERS["bulyan"](ga, f)
+    center = jnp.mean(g[f:], axis=0)
+    assert float(jnp.linalg.norm(out - center)) < 0.6
+
+
+def test_zeno_scores_out_liars():
+    g, center = honest_cluster(KEY)
+    ga = g.at[:F].set(-5.0 * center[None])
+    out = FILTERS["zeno"](ga, F, server_grad=center)
+    assert float(jnp.linalg.norm(out - center)) < 0.5
+
+
+def test_ensemble_combinator():
+    g, center = honest_cluster(KEY)
+    ens = compose("krum", "coordinate_median", "cge")
+    mask = make_byzantine_mask(N, F)
+    ga = apply_attack("sign_flip", KEY, g, mask)
+    out = ens(ga, F)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_pairwise_dists_zero_diag_and_symmetry():
+    g, _ = honest_cluster(KEY)
+    d2 = pairwise_sq_dists(g)
+    assert float(jnp.max(jnp.abs(jnp.diag(d2)))) == 0.0
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2.T), rtol=1e-5)

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on filter invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import FILTERS
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def grads_strategy(min_n=6, max_n=14, min_d=2, max_d=24):
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.integers(min_d, max_d).flatmap(
+            lambda d: st.integers(0, 2 ** 31 - 1).map(
+                lambda seed: (np.random.default_rng(seed)
+                              .normal(size=(n, d)).astype(np.float32)))))
+
+
+COORD = ["coordinate_median", "trimmed_mean", "phocas", "mean_around_median"]
+TRANSLATION_EQUIVARIANT = COORD + ["krum", "geometric_median", "mda",
+                                   "multi_krum", "m_krum", "bulyan", "mean",
+                                   "median_of_means"]
+
+
+@SET
+@given(grads_strategy())
+def test_coordinate_filters_within_bounds(g):
+    n = g.shape[0]
+    f = max((n - 3) // 4, 1)
+    for name in COORD:
+        out = np.asarray(FILTERS[name](jnp.asarray(g), f))
+        assert (out >= g.min(0) - 1e-5).all(), name
+        assert (out <= g.max(0) + 1e-5).all(), name
+
+
+@SET
+@given(grads_strategy(), st.integers(0, 2 ** 31 - 1))
+def test_translation_equivariance(g, seed):
+    n, d = g.shape
+    f = max((n - 3) // 4, 1)
+    c = np.random.default_rng(seed).normal(size=(d,)).astype(np.float32)
+    for name in TRANSLATION_EQUIVARIANT:
+        a = np.asarray(FILTERS[name](jnp.asarray(g + c), f))
+        b = np.asarray(FILTERS[name](jnp.asarray(g), f)) + c
+        scale = max(np.abs(g).max(), np.abs(c).max(), 1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3 * scale,
+                                   err_msg=name)
+
+
+@SET
+@given(grads_strategy(), st.integers(0, 2 ** 31 - 1))
+def test_permutation_invariance(g, seed):
+    n = g.shape[0]
+    f = max((n - 3) // 4, 1)
+    perm = np.random.default_rng(seed).permutation(n)
+    # (mda excluded: near-tied subset diameters make its argmin selection
+    # legitimately permutation-sensitive at float precision)
+    for name in ["coordinate_median", "trimmed_mean", "geometric_median",
+                 "krum", "mean", "cgc"]:
+        a = np.asarray(FILTERS[name](jnp.asarray(g[perm]), f))
+        b = np.asarray(FILTERS[name](jnp.asarray(g), f))
+        scale = max(np.abs(g).max(), 1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4 * scale,
+                                   err_msg=name)
+
+
+@SET
+@given(grads_strategy())
+def test_krum_returns_an_input_row(g):
+    n = g.shape[0]
+    f = max((n - 3) // 4, 1)
+    out = np.asarray(FILTERS["krum"](jnp.asarray(g), f))
+    dists = np.linalg.norm(g - out[None], axis=-1)
+    assert dists.min() < 1e-5
+
+
+@SET
+@given(grads_strategy())
+def test_cge_norm_bounded_by_kept_set(g):
+    n = g.shape[0]
+    f = max((n - 3) // 4, 1)
+    out = np.asarray(FILTERS["cge"](jnp.asarray(g), f))
+    norms = np.sort(np.linalg.norm(g, axis=-1))
+    assert np.linalg.norm(out) <= norms[n - f - 1] + 1e-4
+
+
+@SET
+@given(grads_strategy())
+def test_scale_equivariance_homogeneous_filters(g):
+    n = g.shape[0]
+    f = max((n - 3) // 4, 1)
+    for name in ["mean", "coordinate_median", "trimmed_mean", "krum",
+                 "cge", "cgc", "mda"]:
+        a = np.asarray(FILTERS[name](jnp.asarray(2.5 * g), f))
+        b = 2.5 * np.asarray(FILTERS[name](jnp.asarray(g), f))
+        scale = max(np.abs(g).max(), 1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3 * scale,
+                                   err_msg=name)
+
+
+@SET
+@given(grads_strategy(min_n=8))
+def test_identical_inputs_are_fixed_points(g):
+    """If every agent sends the same vector v, every filter returns v."""
+    n, d = g.shape
+    f = max((n - 3) // 4, 1)
+    v = g[0]
+    tied = np.tile(v, (n, 1))
+    for name in ["mean", "coordinate_median", "trimmed_mean", "krum",
+                 "geometric_median", "cge", "cgc", "phocas",
+                 "mean_around_median", "multi_krum", "mda", "bulyan"]:
+        out = np.asarray(FILTERS[name](jnp.asarray(tied), f))
+        np.testing.assert_allclose(out, v, rtol=1e-4,
+                                   atol=1e-4 * max(np.abs(v).max(), 1.0),
+                                   err_msg=name)

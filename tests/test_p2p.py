@@ -1,0 +1,99 @@
+"""Peer-to-peer architecture (§3.3.5) + graph theory (§2.1) + data-injection
+attack and its detection (§4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.p2p import (complete_graph, data_injection_attack,
+                            detect_injection, erdos_renyi, is_connected,
+                            is_f_local, is_r_s_robust, metropolis_weights,
+                            p2p_dgd_run, ring_graph, source_component,
+                            torus_graph, vertex_connectivity)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_setup(n=8, d=3, spread=0.2):
+    targets = spread * jax.random.normal(KEY, (n, d))
+    grad_fn = lambda i, x: x - targets[i]
+    x0 = jnp.zeros((n, d)) + 2.0
+    return targets, grad_fn, x0
+
+
+# ---------------- graph theory ----------------
+
+def test_metropolis_doubly_stochastic():
+    for adj in (complete_graph(6), ring_graph(8, 2), torus_graph(3, 3)):
+        W = metropolis_weights(adj)
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+        assert (W >= 0).all()
+
+
+def test_connectivity_values():
+    assert vertex_connectivity(complete_graph(6)) == 5
+    assert vertex_connectivity(ring_graph(8, 1)) == 2
+    assert vertex_connectivity(ring_graph(8, 2)) == 4
+
+
+def test_source_component():
+    n = 5
+    adj = np.zeros((n, n), bool)
+    for i in range(n - 1):           # chain 0 -> 1 -> ... -> 4
+        adj[i, i + 1] = True
+    comp = source_component(adj)
+    assert comp == [0]
+    adj[4, 0] = True                  # now a cycle: whole graph is the source
+    assert sorted(source_component(adj)) == list(range(n))
+
+
+def test_f_local():
+    adj = complete_graph(6)
+    assert is_f_local(adj, byz={0, 1}, f=2)
+    assert not is_f_local(adj, byz={0, 1, 2}, f=2)
+
+
+def test_r_s_robustness_complete_vs_ring():
+    assert is_r_s_robust(complete_graph(5), r=2, s=1)
+    assert not is_r_s_robust(ring_graph(6, 1), r=2, s=1)
+
+
+# ---------------- decentralized optimization ----------------
+
+def test_plain_dgd_consensus_no_faults():
+    targets, grad_fn, x0 = quad_setup()
+    traj = p2p_dgd_run(ring_graph(8, 2), grad_fn, x0, 120)
+    final = traj[-1]
+    opt = jnp.mean(targets, axis=0)
+    assert float(jnp.max(jnp.linalg.norm(final - opt, axis=-1))) < 0.3
+
+
+def test_ce_and_lf_tolerate_byzantine_broadcast():
+    targets, grad_fn, x0 = quad_setup()
+    byz = jnp.arange(8) < 2
+    byz_fn = lambda k, t, s: jnp.full_like(s, 50.0)
+    hm = jnp.mean(targets[2:], axis=0)
+    for combine in ("ce", "lf"):
+        traj = p2p_dgd_run(complete_graph(8), grad_fn, x0, 80, f=2,
+                           combine=combine, byz_mask=byz, byz_fn=byz_fn)
+        err = float(jnp.max(jnp.linalg.norm(traj[-1][2:] - hm, axis=-1)))
+        assert err < 0.6, (combine, err)
+    plain = p2p_dgd_run(complete_graph(8), grad_fn, x0, 80, combine="plain",
+                        byz_mask=byz, byz_fn=byz_fn)
+    err_plain = float(jnp.max(jnp.linalg.norm(plain[-1][2:] - hm, axis=-1)))
+    assert err_plain > 1.0
+
+
+def test_data_injection_detection():
+    """Wu et al. [114]: adversary fakes convergence to a target; the local
+    deviation metric flags it."""
+    targets, grad_fn, x0 = quad_setup()
+    byz = jnp.arange(8) < 1
+    target = 10.0 * jnp.ones((3,))
+    byz_fn = data_injection_attack(target)
+    traj = p2p_dgd_run(complete_graph(8), grad_fn, x0, 60, combine="plain",
+                       byz_mask=byz, byz_fn=byz_fn, key=KEY)
+    scores = detect_injection(traj, complete_graph(8))
+    # every honest agent's most-suspicious neighbour is agent 0
+    for i in range(1, 8):
+        assert int(np.argmax(scores[i])) == 0

@@ -1,0 +1,47 @@
+"""Executable solvability theory — 2f-redundancy and (2f, eps)-redundancy."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.redundancy import (check_2f_eps_redundancy,
+                                   check_2f_redundancy, hausdorff_distance,
+                                   quadratic_argmin)
+from repro.core.redundancy.properties import make_redundant_quadratics
+
+
+def test_hausdorff_points_and_sets():
+    X = np.array([[0.0, 0.0]])
+    Y = np.array([[3.0, 4.0]])
+    assert float(hausdorff_distance(X, Y)) == 5.0
+    A = np.array([[0.0], [1.0]])
+    B = np.array([[0.0], [2.0]])
+    assert float(hausdorff_distance(A, B)) == 1.0
+
+
+def test_common_minimizer_gives_exact_2f_redundancy():
+    Hs, xs, common = make_redundant_quadratics(8, 3, eps=0.0)
+    holds, worst = check_2f_redundancy(Hs, xs, f=2, max_subsets=200)
+    assert holds, worst
+    np.testing.assert_allclose(quadratic_argmin(Hs, xs), common, atol=1e-8)
+
+
+def test_perturbed_minimizers_break_exact_redundancy():
+    Hs, xs, _ = make_redundant_quadratics(8, 3, eps=1.0)
+    holds, worst = check_2f_redundancy(Hs, xs, f=2, max_subsets=200)
+    assert not holds
+    assert worst > 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.0, 2.0))
+def test_eps_redundancy_scales_with_perturbation(eps):
+    Hs, xs, _ = make_redundant_quadratics(6, 3, eps=eps, seed=3)
+    eps_hat = check_2f_eps_redundancy(Hs, xs, f=1, max_subsets=60)
+    # Hausdorff gap between subset argmins is O(eps) with modest constant
+    assert eps_hat <= 6.0 * eps + 1e-6
+
+
+def test_monotone_in_f():
+    Hs, xs, _ = make_redundant_quadratics(8, 3, eps=0.5, seed=1)
+    e1 = check_2f_eps_redundancy(Hs, xs, f=1, max_subsets=60)
+    e2 = check_2f_eps_redundancy(Hs, xs, f=2, max_subsets=60)
+    assert e2 >= e1 - 1e-9      # dropping more agents can only widen the gap

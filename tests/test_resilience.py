@@ -1,0 +1,41 @@
+"""Resilience notations (§3.5) as empirical measurements."""
+import numpy as np
+
+from repro.core.resilience import (estimate_alpha_f, estimate_delta_c,
+                                   measure_f_eps)
+from repro.core.redundancy.properties import make_redundant_quadratics
+
+
+def test_alpha_f_positive_for_known_resilient_filters():
+    """Table 2: Krum, coordinate-wise median, geometric median, Bulyan are
+    (alpha, f)-resilient — E<V, g> must stay positive."""
+    for name in ("krum", "coordinate_median", "geometric_median", "bulyan"):
+        alpha, ok = estimate_alpha_f(name, n=10, f=2, trials=24)
+        assert ok, name
+        assert 0.0 <= alpha < 90.0, (name, alpha)
+
+
+def test_mean_is_not_resilient():
+    # scaled sign-flip (scale > (n-f)/f) drives E<mean, g> negative — the
+    # Blanchard impossibility in (alpha, f) terms
+    _, ok = estimate_alpha_f("mean", n=10, f=2, trials=24,
+                             attack="sign_flip", attack_hyper={"scale": 8.0})
+    assert not ok
+
+
+def test_delta_c_ordering():
+    """A robust aggregator's constant c is orders of magnitude below the
+    undefended mean's."""
+    c_med = estimate_delta_c("coordinate_median", n=10, f=2, trials=24)
+    c_mean = estimate_delta_c("mean", n=10, f=2, trials=24,
+                              attacks=("large_value",))
+    assert c_mean > 1e3 * c_med
+
+
+def test_f_eps_measurement_on_quadratics():
+    Hs, xs, common = make_redundant_quadratics(8, 4, eps=0.0)
+    honest = list(range(2, 8))
+    assert measure_f_eps(common, Hs, xs, honest) < 1e-6
+    off = common + 0.5
+    d = measure_f_eps(off, Hs, xs, honest)
+    assert abs(d - 0.5 * np.sqrt(4)) < 1e-6

@@ -1,0 +1,44 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import generate
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("paper-100m-smoke")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 12), 0, cfg.vocab_size)}
+    a = generate(cfg, params, batch, 8)
+    b = generate(cfg, params, batch, 8)
+    assert a.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(jnp.max(a)) < cfg.vocab_size
+
+
+def test_generation_swa_and_ssm():
+    for arch in ("mamba2-130m-smoke", "h2o-danube-3-4b-smoke"):
+        cfg = get_config(arch)
+        key = jax.random.PRNGKey(1)
+        params = init_params(cfg, key)
+        batch = {"tokens": jax.random.randint(key, (1, 10), 0,
+                                              cfg.vocab_size)}
+        out = generate(cfg, params, batch, 5)
+        assert out.shape == (1, 5), arch
+
+
+def test_generation_encdec():
+    cfg = get_config("whisper-small-smoke")
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = {
+        "tokens": jax.random.randint(key, (1, 6), 0, cfg.vocab_size),
+        "audio_embeds": 0.05 * jax.random.normal(
+            key, (1, cfg.encoder_seq, cfg.d_model)).astype(
+                jnp.dtype(cfg.dtype)),
+    }
+    out = generate(cfg, params, batch, 4)
+    assert out.shape == (1, 4)

@@ -1,0 +1,133 @@
+"""End-to-end Byzantine training: reproduces the survey's central empirical
+claims on a small LM (CPU, <2 min total)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.training import ByzantineConfig, train_loop
+
+CFG = ArchConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                 num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                 head_dim=16, dtype="float32")
+DS = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=4)
+OPT = lambda: adamw(constant(3e-3))
+STEPS = 50
+
+
+def run(bz, steps=STEPS, ds=DS, poison=False):
+    _, hist = train_loop(CFG, bz, OPT(), ds, steps=steps, log_every=steps,
+                         poison_labels=poison, log_fn=lambda *_: None)
+    return hist[-1]["loss"]
+
+
+def test_clean_training_converges():
+    loss = run(ByzantineConfig(n_agents=8, f=0, filter_name="mean"))
+    assert loss < 1.0
+
+
+def test_attacked_mean_fails_but_filter_survives():
+    atk = dict(attack="sign_flip", attack_hyper={"scale": 4.0})
+    l_mean = run(ByzantineConfig(n_agents=8, f=2, filter_name="mean", **atk))
+    l_tm = run(ByzantineConfig(n_agents=8, f=2, filter_name="trimmed_mean",
+                               **atk))
+    assert l_tm < 1.0
+    assert l_mean > l_tm + 0.5
+
+
+@pytest.mark.parametrize("filter_name", ["krum", "coordinate_median", "cge"])
+def test_filters_survive_large_value_attack(filter_name):
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name=filter_name,
+                         attack="large_value")
+    assert run(bz) < 1.5, filter_name
+
+
+def test_median_of_means_survives_with_group_majority():
+    """MoM needs k > 2f clean-majority groups (k=6 groups of 2, f=2)."""
+    ds12 = SyntheticLM(vocab_size=64, seq_len=32, n_agents=12,
+                       per_agent_batch=4)
+    bz = ByzantineConfig(n_agents=12, f=2, filter_name="median_of_means",
+                         attack="large_value")
+    _, hist = train_loop(CFG, bz, OPT(), ds12, steps=STEPS,
+                         log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < 1.5
+
+
+def test_geometric_median_bounded_not_exact():
+    """The survey's (f, eps)-resilience, not exact recovery: under a
+    coordinated point-mass attack the geometric median's output is biased by
+    O(diameter of honest gradients) — training is BOUNDED (unlike the mean,
+    which diverges) but not necessarily near-clean.  [45, 68]"""
+    atk = dict(attack="large_value")
+    l_gm = run(ByzantineConfig(n_agents=8, f=2,
+                               filter_name="geometric_median", **atk))
+    l_mean = run(ByzantineConfig(n_agents=8, f=2, filter_name="mean", **atk))
+    # NOTE: AdamW's per-coordinate normalization already bounds the damage
+    # of huge gradients (the mean stalls rather than exploding here), so the
+    # assertion is bounded-and-strictly-better, not explosion
+    assert l_gm < 6.0
+    assert l_gm < l_mean
+
+
+def test_gather_and_fused_train_identically():
+    atk = dict(attack="sign_flip")
+    la = run(ByzantineConfig(n_agents=8, f=2, filter_name="cge",
+                             impl="gather", **atk), steps=20)
+    lb = run(ByzantineConfig(n_agents=8, f=2, filter_name="cge",
+                             impl="fused", **atk), steps=20)
+    assert abs(la - lb) < 1e-3
+
+
+def test_worker_momentum_helps_krum_under_alie():
+    """Survey §3.3.4: momentum reduces honest variance -> distance-based
+    filters recover (Karimireddy et al., El-Mhamdi et al.)."""
+    atk = dict(attack="alie", attack_hyper={"z": 3.0})
+    base = ByzantineConfig(n_agents=8, f=2, filter_name="krum", **atk)
+    l_raw = run(base, steps=60)
+    l_mom = run(ByzantineConfig(n_agents=8, f=2, filter_name="krum",
+                                momentum_alpha=0.2, **atk), steps=60)
+    assert l_mom < l_raw + 0.5      # momentum never hurts materially
+    assert l_mom < 1.5
+
+
+def test_draco_coded_training_is_exact():
+    """Parallel regime + repetition coding: Draco recovers the exact clean
+    gradient under attack (<= (r-1)/2 Byzantine per group)."""
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
+                     per_agent_batch=4, regime="parallel")
+    atk = dict(attack="large_value")
+    l_draco = run(ByzantineConfig(n_agents=8, f=1, draco_r=4, **atk), ds=ds)
+    assert l_draco < 1.0
+
+
+def test_label_poisoning_with_median():
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name="coordinate_median")
+    loss = run(bz, poison=True)
+    assert loss < 1.5
+
+
+def test_perf_variants_still_converge():
+    """§Perf knobs (EXPERIMENTS.md) must not change training semantics:
+    median-of-means grouping, bf16 exchange, per-layer remat."""
+    atk = dict(attack="sign_flip", attack_hyper={"scale": 4.0})
+    # group_size must keep a majority of clean groups: n=8, f=2 adjacent ->
+    # groups of 2 give k=4 with 1 corrupted group (groups of 4 would leave
+    # only k=2, no majority — that's median-of-means' k > 2f condition)
+    for kw in ({"group_size": 2, "filter_name": "coordinate_median"},
+               {"agg_dtype": "bfloat16"},
+               {"remat": True}):
+        bz = ByzantineConfig(n_agents=8, f=2,
+                             **{"filter_name": "trimmed_mean", **kw}, **atk)
+        loss = run(bz)
+        assert loss < 1.5, kw
+
+
+def test_group_size_beyond_majority_fails():
+    """Sanity of the k > 2f condition: k=2 groups with both Byzantine agents
+    in one group CANNOT be defended — median-of-means' own threshold."""
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name="coordinate_median",
+                         group_size=4, attack="sign_flip",
+                         attack_hyper={"scale": 4.0})
+    assert run(bz) > 1.5
