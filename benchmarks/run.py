@@ -5,6 +5,7 @@
   3. coding                 — §3.3.3 gradient coding / reactive redundancy
   4. p2p_dgd                — §3.3.5 decentralized fault tolerance
   5. roofline               — §Roofline from the dry-run artifacts
+  6. async                  — fault-injection simulator / async training
 
 Prints ``name,us_per_call,derived`` CSV.  --full for the long versions.
 """
@@ -22,14 +23,15 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_coding, bench_convergence, bench_filters,
-                            bench_p2p, bench_roofline)
+    from benchmarks import (bench_async, bench_coding, bench_convergence,
+                            bench_filters, bench_p2p, bench_roofline)
     benches = {
         "table2_filters": bench_filters.run,
         "attack_defence_matrix": bench_convergence.run,
         "coding": bench_coding.run,
         "p2p_dgd": bench_p2p.run,
         "roofline": bench_roofline.run,
+        "async": bench_async.run,
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,0 +1,60 @@
+"""Straggler mitigation under asynchronous training: plain quorum drop vs
+gradient coding.
+
+A cluster of 8 agents trains a smoke-scale LM while two agents are heavy
+stragglers (Pareto-tailed slowdowns).  Three mitigation strategies on the
+SAME fault schedule (same seed -> identical latency samples):
+
+  1. barrier     — synchronous full barrier (quorum = n): every step waits
+                   for the slowest agent, so virtual time explodes;
+  2. quorum-drop — bounded-staleness async (quorum = 6): stragglers' work is
+                   often dropped or arrives stale and down-weighted;
+  3. coded       — same quorum, but data is replicated (parallel regime,
+                   Draco r=2): whenever the quorum is missed, the
+                   repetition code recovers the batch gradient from the
+                   agents that DID deliver (survey §3.3.3 meets §4 asynchrony).
+
+Run:  PYTHONPATH=src python examples/async_stragglers.py
+"""
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.simulator import SimConfig, Straggler, async_train_loop
+from repro.training import ByzantineConfig
+
+STEPS = 40
+FAULTS = (Straggler(dist="pareto", scale=1.1, agents=(0, 1)),)
+
+cfg = get_config("paper-100m-smoke").replace(vocab_size=64, dtype="float32")
+ds_iid = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2)
+ds_par = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2,
+                     regime="parallel")
+
+RUNS = {
+    "barrier (sync, quorum=8)": dict(
+        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, filter_name="mean"),
+        sim=SimConfig(faults=FAULTS, quorum=None, seed=0)),
+    "quorum-drop (async, quorum=6)": dict(
+        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, filter_name="mean"),
+        sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
+    "coded (async + Draco r=2)": dict(
+        ds=ds_par, bz=ByzantineConfig(n_agents=8, f=0, draco_r=2),
+        sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
+}
+
+print(f"{'strategy':32s} {'final loss':>10s} {'virtual time':>13s} "
+      f"{'mean staleness':>15s}")
+for name, kw in RUNS.items():
+    _, hist = async_train_loop(cfg, kw["bz"], adamw(constant(3e-3)),
+                               kw["ds"], STEPS, sim=kw["sim"],
+                               log_every=STEPS, log_fn=lambda *_: None)
+    last = hist[-1]
+    stal = float(jnp.mean(jnp.asarray([m["staleness_mean"] for m in hist])))
+    print(f"{name:32s} {last['loss']:10.4f} {last['vclock']:13.1f} "
+          f"{stal:15.2f}")
+
+print("\nsame loss target, but the async strategies finish in a fraction of "
+      "the barrier's virtual time; coding additionally recovers the exact "
+      "batch gradient on quorum misses.")

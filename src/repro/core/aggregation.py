@@ -274,6 +274,72 @@ def tree_bulyan(grads, f, **hyper):
 
 
 # ---------------------------------------------------------------------------
+# masked / staleness-weighted aggregation (async simulator entry point)
+
+
+def tree_where_agents(mask, a, b):
+    """Per-agent select on n-leading pytrees (keeps b's leaf dtypes)."""
+    def leaf(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x.astype(y.dtype), y)
+    return jax.tree.map(leaf, a, b)
+
+
+def tree_masked_aggregate(name, grads, f, mask, weights=None,
+                          impl: str = "fused", **hyper):
+    """Robust aggregation over a *varying subset* of agents with per-agent
+    weights — the bridge between the filter catalogue and the asynchronous
+    simulator (:mod:`repro.simulator`).
+
+    ``mask``    (n,) bool — which rows actually arrived this round.
+    ``weights`` (n,) float — optional multipliers (e.g. staleness discounts
+                gamma^s of the Zeno++/Kardam line); zeroed where ``mask`` is
+                False.
+
+    The filters in :mod:`repro.core.filters.dense` are fixed-n: absent rows
+    are *imputed* with the weighted mean of the arrived rows, so they sit at
+    the current consensus and cannot shift any order statistic outward, and
+    the stack keeps one jit shape across rounds.  Weights fold in exactly
+    where each filter class admits them:
+
+      * mean                — the weighted mean of arrived rows (exact);
+      * weight-decomposable — filter weights on the imputed stack, times the
+        per-agent weights, renormalized (imputed rows carry the average
+        arrived weight so a selection landing on them is neutral);
+      * coordinate-wise / iterative — filter on the imputed stack, scaled by
+        the mean weight of arrived rows (a staleness-adaptive step size).
+
+    With mask all-True and weights all-one this reduces to
+    :func:`tree_aggregate` up to exact-arithmetic no-ops (the synchronous
+    degenerate case)."""
+    n = jax.tree.leaves(grads)[0].shape[0]
+    mask = mask.astype(bool)
+    mf = mask.astype(jnp.float32)
+    w = mf if weights is None else weights.astype(jnp.float32) * mf
+    cnt = jnp.maximum(jnp.sum(mf), 1.0)
+    tot = jnp.maximum(jnp.sum(w), 1e-30)
+    wn = w / tot
+    mean_sel = tree_weighted_sum(grads, wn)
+    if name == "mean":
+        return mean_sel
+    imputed = tree_where_agents(
+        mask, grads,
+        jax.tree.map(lambda m, l: jnp.broadcast_to(
+            m.astype(l.dtype)[None], l.shape), mean_sel, grads))
+    if name in WEIGHTED and impl == "fused":
+        # imputed rows carry the average arrived weight: a filter selecting
+        # one (it equals the weighted consensus) stays a valid update
+        row_w = jnp.where(mask, w, tot / cnt)
+        fw = filter_weights(name, imputed, f, **hyper) * row_w
+        fw = fw / jnp.maximum(jnp.sum(fw), 1e-30)
+        return tree_weighted_sum(imputed, fw)
+    agg = tree_aggregate(name, imputed, f, impl=impl, **hyper)
+    scale = tot / cnt                      # <= 1, == 1 when all fresh
+    return jax.tree.map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), agg)
+
+
+# ---------------------------------------------------------------------------
 # public entry point
 
 

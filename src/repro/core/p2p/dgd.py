@@ -73,6 +73,12 @@ def combine_lf(adj, W, states, f):
         trimmed = total
         cnt = jnp.maximum(deg, 1)[:, None]
     nbr_avg = trimmed / cnt
+    # degraded receivers keep their own estimate: with deg <= 2f the trim
+    # would remove more values than exist (producing zeroed or sign-flipped
+    # averages), and with deg == 0 the neighbourhood is empty — both are
+    # reachable under time-varying (partitioned / crashing) graphs
+    enough = (deg > 2 * f) if f else (deg > 0)
+    nbr_avg = jnp.where(enough[:, None], nbr_avg, states)
     return 0.5 * states + 0.5 * nbr_avg               # keep own estimate
 
 
@@ -96,18 +102,47 @@ def combine_ce(adj, W, states, f):
 COMBINE = {"plain": combine_plain, "lf": combine_lf, "ce": combine_ce}
 
 
+def _faulted_adj(adj, trace, t):
+    """Effective directed adjacency at round t under a FaultTrace: partition
+    severs cross-group links, crashed agents neither send nor receive, and a
+    dropped broadcast removes all of the sender's outgoing edges (adj[a, b]
+    is the edge a -> b)."""
+    h = trace.horizon
+    v = min(t, h - 1)
+    a = adj.copy()
+    if trace.adj is not None:
+        a &= trace.adj[v]
+    alive = trace.alive[v]
+    a &= alive[:, None] & alive[None, :]
+    a[trace.drop[v]] = False
+    return a, alive
+
+
 def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
                 combine: str = "plain", byz_mask=None, byz_fn=None,
-                eta0: float = 0.5, eta_decay: float = 1.0, key=None):
+                eta0: float = 0.5, eta_decay: float = 1.0, key=None,
+                fault_schedule=None, fault_seed: int = 0):
     """Simulate T rounds of p2p DGD.
 
     grad_fn(i, x) -> gradient of Q_i at x (vmapped over agents).
     byz_fn(key, t, states) -> broadcast values of Byzantine agents.
+    fault_schedule -> a compiled :class:`repro.simulator.faults.FaultTrace`
+    or an iterable of fault specs (compiled here with ``fault_seed``): the
+    graph becomes time-varying — partitions cut links, crash/recover faults
+    freeze agents (no broadcast, no update), message drops silence a
+    sender's round.  Metropolis weights are rebuilt per round.
     Returns trajectory (steps+1, n, d)."""
+    from repro.simulator.faults import FaultTrace, compile_schedule
     adj = np.asarray(adj, bool)
+    n, d = x0.shape
+    trace = None
+    if fault_schedule is not None:
+        trace = (fault_schedule if isinstance(fault_schedule, FaultTrace)
+                 else compile_schedule(tuple(fault_schedule), n, steps + 1,
+                                       seed=fault_seed))
+        assert trace.n_agents == n, (trace.n_agents, n)
     W = metropolis_weights(adj)
     comb = COMBINE[combine]
-    n, d = x0.shape
     if byz_mask is None:
         byz_mask = jnp.zeros((n,), bool)
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -116,15 +151,25 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
     traj = [states]
     for t in range(steps):
         key, sub = jax.random.split(key)
+        adj_t, W_t, alive = adj, W, None
+        if trace is not None:
+            adj_t, alive = _faulted_adj(adj, trace, t)
+            # receivers mix over IN-neighbours: message drops make the
+            # faulted graph asymmetric, and metropolis rows weight the
+            # passed matrix's out-edges — hand it the transpose (no-op for
+            # the symmetric un-faulted topologies)
+            W_t = metropolis_weights(adj_t.T)
         sent = states
         if byz_fn is not None:
             bad = byz_fn(sub, t, states)
             sent = jnp.where(byz_mask[:, None], bad, states)
-        mixed = comb(adj, W, sent, f)
+        mixed = comb(adj_t, W_t, sent, f)
         eta = eta0 / (1.0 + eta_decay * t)     # diminishing (appendix A.2)
         grads = jax.vmap(grad_fn, in_axes=(0, 0))(jnp.arange(n), mixed)
-        states = jnp.where(byz_mask[:, None], sent,
-                           mixed - eta * grads)
+        new = jnp.where(byz_mask[:, None], sent, mixed - eta * grads)
+        if alive is not None:                  # crashed agents are frozen
+            new = jnp.where(jnp.asarray(alive)[:, None], new, states)
+        states = new
         traj.append(states)
     return jnp.stack(traj)
 

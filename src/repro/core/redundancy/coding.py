@@ -64,9 +64,15 @@ def detox_aggregate(g, r: int, f: int = 0, buckets: int = 0,
     return D.FILTERS[filter_name](means, min(f, max((b - 1) // 2, 0)))
 
 
-def tree_draco_aggregate(grads, r: int, tol: float = 1e-6):
+def tree_draco_aggregate(grads, r: int, tol: float = 1e-6, mask=None):
     """Draco on pytree gradient stacks: vote weights are global (from the
-    pairwise Gram of each group), applied per leaf — exact and sharded."""
+    pairwise Gram of each group), applied per leaf — exact and sharded.
+
+    ``mask`` (n,) bool restricts the vote to *delivered* gradients (the
+    async simulator's straggler fallback): absent agents neither vote nor
+    win, groups with no delivery are excluded, and the average renormalizes
+    over the surviving groups.  mask=None (or all-True) is the classic
+    synchronous code."""
     from repro.core.aggregation import tree_gram, tree_weighted_sum
     n = jax.tree.leaves(grads)[0].shape[0]
     assert n % r == 0
@@ -76,9 +82,18 @@ def tree_draco_aggregate(grads, r: int, tol: float = 1e-6):
     d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
     scale = jnp.maximum(jnp.max(sq), 1e-30)
     same_group = (jnp.arange(n)[:, None] // r) == (jnp.arange(n)[None, :] // r)
-    votes = jnp.sum((d2 <= tol * scale) & same_group, axis=-1)      # (n,)
-    # winner per group -> one-hot weights / k
+    agree = (d2 <= tol * scale) & same_group
+    if mask is None:
+        votes = jnp.sum(agree, axis=-1)                             # (n,)
+        group_w = jnp.full((k,), 1.0 / k)
+    else:
+        m = mask.astype(bool)
+        votes = jnp.where(m, jnp.sum(agree & m[None, :], axis=-1), -1)
+        group_ok = jnp.any(m.reshape(k, r), axis=-1)                # (k,)
+        group_w = jnp.where(group_ok, 1.0, 0.0) / jnp.maximum(
+            jnp.sum(group_ok), 1)
+    # winner per group -> weighted one-hot over surviving groups
     votes_g = votes.reshape(k, r)
     win = jnp.argmax(votes_g, axis=-1) + jnp.arange(k) * r          # (k,)
-    w = jnp.zeros((n,)).at[win].set(1.0 / k)
+    w = jnp.zeros((n,)).at[win].set(group_w)
     return tree_weighted_sum(grads, w)

@@ -63,9 +63,28 @@ class HloModule:
         self.entry = None
         self._parse(text)
 
+    @staticmethod
+    def _logical_lines(text: str):
+        """Merge wrapped op lines: newer XLA printers break long tuple
+        shapes across physical lines (continuations carry /*index=N*/
+        comments and never contain ' = '), which would hide the op name —
+        most damagingly ``while(...)`` — from the line regex."""
+        out = []
+        for raw in text.splitlines():
+            stripped = raw.strip()
+            if not stripped:
+                continue
+            is_new = (" = " in stripped or stripped == "}"
+                      or stripped.endswith("{") or not out)
+            if is_new:
+                out.append(raw.rstrip())
+            else:
+                out[-1] = out[-1] + " " + stripped
+        return out
+
     def _parse(self, text: str):
         cur = None
-        for raw in text.splitlines():
+        for raw in self._logical_lines(text):
             line = raw.rstrip()
             stripped = line.strip()
             if not stripped:
@@ -109,12 +128,43 @@ class HloModule:
         shapes = _shape_list(op["shape"])
         return shapes
 
+    @staticmethod
+    def _args_segment(rest: str) -> str:
+        """The operand list of an op call: everything up to the closing
+        paren that matches the one consumed by the op-line regex."""
+        depth = 0
+        for idx, ch in enumerate(rest):
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                if depth == 0:
+                    return rest[:idx]
+                depth -= 1
+        return rest
+
+    @staticmethod
+    def _split_operands(args: str):
+        """Split on top-level commas only — inline operand shapes like
+        ``f32[2,64,128]{2,1,0}`` contain commas inside brackets/braces."""
+        parts, cur, depth = [], [], 0
+        for ch in args:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            parts.append("".join(cur))
+        return parts
+
     def _operand_shape(self, comp_name, op, idx):
         """Shape string of the idx-th operand: inline if printed, else look
         up the operand name in this computation's op table."""
-        args = op["rest"].split("), ")[0] if "), " in op["rest"] \
-            else op["rest"].rstrip(")")
-        parts = args.split(",")
+        parts = self._split_operands(self._args_segment(op["rest"]))
         if idx >= len(parts):
             return None
         part = parts[idx]

@@ -1,0 +1,271 @@
+"""Bounded-staleness asynchronous training over the fault-injection
+simulator — the execution layer for the survey's non-Byzantine fault modes
+(crash/recover, stragglers, message loss) and the staleness-aware
+asynchronous setting of the Zeno++/Kardam line of work.
+
+Pipeline per server step t (one parameter version):
+
+  1. the host reads row t of the precompiled :class:`AsyncTrace`
+     (who dispatches, who delivers, how stale) — fixed shapes, so the jitted
+     step compiles once regardless of the fault schedule;
+  2. agents dispatching at version t compute gradients against the current
+     params and write them into the in-flight buffer (their delivery may
+     land many versions later);
+  3. delivered gradients are aggregated with the robust filter catalogue via
+     :func:`repro.core.aggregation.tree_masked_aggregate`, weighted by a
+     staleness discount; if the quorum was missed (stragglers/crashes) the
+     loop can fall back to Draco-style gradient coding
+     (:func:`repro.core.redundancy.coding.tree_draco_aggregate` with the
+     delivery mask);
+  4. the server optimizer applies the update, creating version t+1.
+
+The synchronous loop is the degenerate case: with no faults every trace row
+is "pure" (all n agents deliver zero-staleness gradients computed at the
+current version) and the host dispatches to the *exact* synchronous
+train-step from :mod:`repro.training.step`, so ``train_loop`` ==
+``async_train_loop`` bit-for-bit when latency is uniform and quorum = n.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.core.aggregation import tree_masked_aggregate, tree_where_agents
+from repro.core.attacks import get_attack, make_byzantine_mask
+from repro.core.momentum import init_momentum, worker_momentum
+from repro.core.redundancy.coding import tree_draco_aggregate
+from repro.data import label_flip
+from repro.models import init_params, loss_fn
+from repro.optim import apply_updates
+from repro.simulator.events import AsyncTrace, simulate_arrivals
+from repro.simulator.faults import compile_schedule
+
+# NOTE: repro.training.step is imported lazily inside the factories below —
+# training.loop delegates here, so a module-level import would be circular.
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Cluster-simulation knobs for :func:`async_train_loop`."""
+    faults: tuple = ()                    # fault specs (simulator.faults)
+    quorum: Optional[int] = None          # None -> n_agents (full barrier)
+    max_staleness: Optional[int] = None   # None -> unbounded
+    staleness_weighting: str = "poly"     # none | poly | exp
+    staleness_power: float = 1.0          # poly: (1 + s)^-power
+    staleness_gamma: float = 0.7          # exp: gamma^s
+    base_delay: float = 1.0               # virtual time of one computation
+    seed: int = 0                         # fault-schedule seed
+    coded_fallback_r: int = 0             # >0: draco(r) when quorum missed
+
+
+def staleness_weights(sim: SimConfig, atrace: AsyncTrace) -> np.ndarray:
+    """(steps, n) float32 per-delivery weights: staleness discount on
+    contributors, 0 elsewhere."""
+    s = atrace.staleness.astype(np.float64)
+    if sim.staleness_weighting == "none":
+        w = np.ones_like(s)
+    elif sim.staleness_weighting == "poly":
+        w = (1.0 + s) ** (-sim.staleness_power)
+    elif sim.staleness_weighting == "exp":
+        w = sim.staleness_gamma ** s
+    else:
+        raise KeyError(sim.staleness_weighting)
+    return (w * atrace.contrib).astype(np.float32)
+
+
+def plan_arrivals(sim: SimConfig, n_agents: int, steps: int) -> AsyncTrace:
+    """Compile the fault schedule and run the virtual clock exactly as
+    :func:`async_train_loop` will — shared so benchmarks/analysis report
+    the same trace the loop executes."""
+    ftrace = compile_schedule(sim.faults, n_agents, steps + 1, seed=sim.seed,
+                              base_delay=sim.base_delay)
+    return simulate_arrivals(ftrace, steps, quorum=sim.quorum,
+                             max_staleness=sim.max_staleness)
+
+
+def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
+    """Returns async_step(params, opt_state, momentum, buffer, batch, key,
+    refresh, contrib_w, use_coded) -> (params, opt_state, momentum, buffer,
+    metrics).
+
+    ``refresh``   (n,) bool  — agents computing a fresh gradient this step;
+    ``contrib_w`` (n,) f32   — staleness-discounted delivery weights
+                               (0 = not delivered);
+    ``use_coded`` () bool    — quorum missed: aggregate with the gradient
+                               code over delivered rows instead of the
+                               filter (requires ``fallback_r``)."""
+    from repro.training.step import tree_attack
+    attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
+        if bz.attack != "none" else None
+    byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
+
+    def agent_loss(p, agent_batch):
+        return loss_fn(cfg, p, agent_batch)
+
+    def async_step(params, opt_state, momentum, buffer, batch, key,
+                   refresh, contrib_w, use_coded):
+        # (2) fresh gradients at the current version for dispatching agents
+        losses, grads = jax.vmap(
+            jax.value_and_grad(agent_loss), in_axes=(None, 0))(params, batch)
+        if bz.momentum_alpha > 0.0:
+            new_m, sent_now = worker_momentum(momentum, grads,
+                                              bz.momentum_alpha)
+            momentum = tree_where_agents(refresh, new_m, momentum)
+            grads = sent_now
+        buffer = tree_where_agents(refresh, grads, buffer)
+
+        # (3) Byzantine corruption happens at delivery time, on whatever is
+        # in flight — stale honest gradients stay honest, Byzantine rows are
+        # arbitrary every round (matches the synchronous injection point)
+        sent = buffer
+        if attack_fn is not None:
+            sent = tree_attack(attack_fn, key, sent, byz_mask)
+        filter_hyper = dict(bz.filter_hyper)
+        if bz.agg_dtype:
+            sent = jax.tree.map(
+                lambda l: l.astype(jnp.dtype(bz.agg_dtype)), sent)
+            filter_hyper["native_dtype"] = True
+
+        mask = contrib_w > 0.0
+        if bz.draco_r > 0:
+            # coded regime: the repetition code already handles partial
+            # delivery (vote among delivered group members)
+            agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask)
+        else:
+            agg = tree_masked_aggregate(
+                bz.filter_name, sent, bz.f, mask, weights=contrib_w,
+                impl=bz.impl, **filter_hyper)
+            if fallback_r > 0:
+                coded = tree_draco_aggregate(sent, fallback_r, mask=mask)
+                agg = jax.tree.map(
+                    lambda a, c: jnp.where(use_coded, c.astype(a.dtype), a),
+                    agg, coded)
+
+        # (4) server-side optimizer
+        updates, opt_state = optimizer.update(agg, opt_state, params)
+        params = apply_updates(params, updates)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree.leaves(agg)))
+        honest = ~byz_mask
+        metrics = {
+            "loss": jnp.sum(losses * honest) / jnp.sum(honest),
+            "loss_all": jnp.mean(losses),
+            "grad_norm": gnorm,
+        }
+        return params, opt_state, momentum, buffer, metrics
+
+    return async_step
+
+
+def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
+                     sim: Optional[SimConfig] = None, seed: int = 0,
+                     log_every: int = 10, ckpt_dir: str | None = None,
+                     ckpt_every: int = 0, poison_labels: bool = False,
+                     jit: bool = True, params=None, log_fn=print,
+                     _force_general: bool = False):
+    """Returns (params, history list of metric dicts).
+
+    sim=None (or any schedule whose trace stays synchronous) reproduces the
+    historical synchronous ``train_loop`` bit-for-bit: pure steps dispatch
+    to the exact synchronous train step.  ``_force_general`` routes pure
+    steps through the general async path too (testing only)."""
+    from repro.training.step import make_train_step
+    sim = sim if sim is not None else SimConfig()
+    n = bz.n_agents
+    atrace = plan_arrivals(sim, n, steps)
+    contrib_w = staleness_weights(sim, atrace)
+    if (bz.group_size > 1 or bz.reshard) and not atrace.is_synchronous():
+        raise NotImplementedError(
+            "group_size/reshard perf knobs assume synchronous delivery")
+
+    key = jax.random.PRNGKey(seed)
+    k_init, k_run = jax.random.split(key)
+    if params is None:
+        params = init_params(cfg, k_init)
+    opt_state = optimizer.init(params)
+    momentum = None
+    if bz.momentum_alpha > 0.0:
+        proto = jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+        momentum = init_momentum(proto)
+
+    step_fn = make_train_step(cfg, bz, optimizer)
+    async_fn = make_async_step(cfg, bz, optimizer,
+                               fallback_r=sim.coded_fallback_r)
+    if jit:
+        step_fn = jax.jit(step_fn)
+        async_fn = jax.jit(async_fn)
+    byz_mask = make_byzantine_mask(n, bz.f)
+
+    # a step is "pure" iff it is exactly the synchronous step: everybody
+    # dispatches AND delivers with zero staleness
+    pure = (atrace.contrib.all(1) & atrace.refresh.all(1)
+            & (atrace.staleness.max(1, initial=0) == 0))
+    if _force_general:
+        pure = np.zeros(steps, bool)
+
+    # in-flight gradient buffer (fp32 covers every exchange dtype) and
+    # refreshes deferred across update-less steps: params are unchanged
+    # there, so the gradient is computed at the correct parameter version
+    # (the data batch is a fresh sample from a later step index — iid-
+    # equivalent, though not the literal batch of the dispatch instant)
+    buffer = jax.tree.map(
+        lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+    pending_refresh = np.zeros(n, bool)
+
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        k_run, k_data, k_step = jax.random.split(k_run, 3)
+        batch = dataset.batch(k_data, step)
+        if poison_labels:
+            batch = label_flip(batch, byz_mask, cfg.vocab_size)
+        arrived = int(atrace.contrib[step].sum())
+        if pure[step]:
+            params, opt_state, momentum, metrics = step_fn(
+                params, opt_state, momentum, batch, k_step)
+        elif arrived == 0:
+            # nobody delivered: version unchanged, defer this step's
+            # dispatches to the next step that actually runs
+            pending_refresh |= atrace.refresh[step]
+            metrics = None
+        else:
+            refresh = atrace.refresh[step] | pending_refresh
+            pending_refresh = np.zeros(n, bool)
+            use_coded = bool(not atrace.quorum_met[step]
+                             and sim.coded_fallback_r > 0)
+            params, opt_state, momentum, buffer, metrics = async_fn(
+                params, opt_state, momentum, buffer, batch, k_step,
+                jnp.asarray(refresh), jnp.asarray(contrib_w[step]),
+                jnp.asarray(use_coded))
+        if step % log_every == 0 or step == steps - 1:
+            if metrics is None:
+                m = {"loss": float("nan"), "loss_all": float("nan"),
+                     "grad_norm": 0.0}
+            else:
+                m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            m["arrived"] = arrived
+            m["staleness_mean"] = (
+                float(atrace.staleness[step][atrace.contrib[step]].mean())
+                if arrived else 0.0)
+            m["vclock"] = float(atrace.vclock[step])
+            history.append(m)
+            extra = ("" if pure[step] else
+                     f"  arr {arrived:2d}  stal {m['staleness_mean']:.2f}")
+            log_fn(f"step {step:5d}  loss {m['loss']:.4f}  "
+                   f"gnorm {m['grad_norm']:.3f}{extra}")
+        if ckpt_dir and ckpt_every and step and step % ckpt_every == 0:
+            save(ckpt_dir, step, {"params": params, "opt": opt_state})
+    if ckpt_dir:
+        save(ckpt_dir, steps, {"params": params, "opt": opt_state})
+    return params, history

@@ -1,0 +1,167 @@
+"""Virtual-clock event queue: latency samples -> arrival times & staleness.
+
+Models the asynchronous server of the survey's §4 (and the Zeno++/Kardam
+staleness-aware line of work): agents compute gradients against the latest
+parameter version they saw, deliveries arrive out of order, and the server
+forms parameter version t+1 as soon as a *quorum* of gradients has arrived.
+
+The simulation runs entirely on the host over a compiled
+:class:`~repro.simulator.faults.FaultTrace` and produces an
+:class:`AsyncTrace` of fixed-shape per-step arrays — the jitted async step
+consumes one row per server step, so fault injection never causes
+recompilation.
+
+Protocol simulated (one server, n agents, virtual time in units of one base
+gradient computation):
+
+  * an agent dispatched at parameter version v computes for
+    ``trace.delay[v, agent]`` virtual seconds, then its gradient arrives;
+  * the server collects arrivals; when ``quorum`` of them are in (plus any
+    others that arrived by the same instant), it applies update t, creating
+    version t+1; contributors immediately re-dispatch against version t+1;
+  * an agent that is down at its dispatch version waits until the first
+    version at which it is alive (crash/recover) — or forever (permanent
+    crash), leaving the quorum;
+  * a dropped message is discovered at its would-be arrival instant; the
+    agent retries against the then-current version (a retry is never
+    re-dropped, so the virtual clock always advances);
+  * a gradient older than ``max_staleness`` versions on arrival is discarded
+    (bounded staleness); the agent re-dispatches fresh.
+
+If the quorum cannot be met (too many agents crashed or in flight), the
+step is marked ``quorum_met[t] = False`` and proceeds with whatever arrived
+— the training loop may then fall back to coded aggregation
+(:mod:`repro.core.redundancy.coding`).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.simulator.faults import FaultTrace
+
+
+@dataclass(frozen=True)
+class AsyncTrace:
+    """Per-server-step execution trace (all arrays fixed-shape)."""
+    contrib: np.ndarray       # (steps, n) bool — gradient used in update t
+    staleness: np.ndarray     # (steps, n) int64 — versions behind, contribs
+    refresh: np.ndarray       # (steps, n) bool — agent dispatched at version t
+    vclock: np.ndarray        # (steps,) float64 — virtual completion time
+    quorum_met: np.ndarray    # (steps,) bool
+
+    @property
+    def steps(self) -> int:
+        return self.contrib.shape[0]
+
+    def is_synchronous(self) -> bool:
+        """True iff every step is the degenerate synchronous case: all n
+        agents contribute a zero-staleness gradient computed at the current
+        version."""
+        return (bool(self.contrib.all()) and bool(self.refresh.all())
+                and int(self.staleness.max(initial=0)) == 0)
+
+    def staleness_histogram(self):
+        """{staleness value: count} over contributing deliveries."""
+        vals = self.staleness[self.contrib]
+        uniq, cnt = np.unique(vals, return_counts=True)
+        return {int(u): int(c) for u, c in zip(uniq, cnt)}
+
+    def summary(self) -> dict:
+        arrived = self.contrib.sum(1)
+        stal = self.staleness[self.contrib]
+        return {
+            "steps": int(self.steps),
+            "mean_arrived": float(arrived.mean()) if self.steps else 0.0,
+            "mean_staleness": float(stal.mean()) if stal.size else 0.0,
+            "max_staleness": int(stal.max()) if stal.size else 0,
+            "virtual_time": float(self.vclock[-1]) if self.steps else 0.0,
+            "quorum_misses": int((~self.quorum_met).sum()),
+            "staleness_hist": self.staleness_histogram(),
+        }
+
+
+def simulate_arrivals(trace: FaultTrace, steps: int,
+                      quorum: Optional[int] = None,
+                      max_staleness: Optional[int] = None) -> AsyncTrace:
+    """Run the virtual clock over a FaultTrace.
+
+    quorum=None means n (fully synchronous barrier); quorum=k applies the
+    update as soon as k gradients are in."""
+    n = trace.n_agents
+    h = trace.horizon
+    assert h >= steps, (h, steps)
+    q = n if quorum is None else max(1, min(int(quorum), n))
+
+    contrib = np.zeros((steps, n), bool)
+    staleness = np.zeros((steps, n), np.int64)
+    refresh = np.zeros((steps, n), bool)
+    vclock = np.zeros(steps)
+    quorum_met = np.ones(steps, bool)
+
+    heap = []                 # (arrival_vtime, seq, agent, version, immune)
+    waiting = {}              # version -> [agents waiting for it to exist]
+    seq = 0
+
+    def dispatch(agent: int, vtime: float, version: int,
+                 immune: bool = False):
+        nonlocal seq
+        v = version
+        while v < steps and not trace.alive[min(v, h - 1), agent]:
+            v += 1            # down: wait for the first alive version
+        if v >= steps:
+            return            # never returns within the horizon
+        if v > version:
+            waiting.setdefault(v, []).append((agent, immune))
+            return
+        refresh[v, agent] = True
+        heapq.heappush(
+            heap, (vtime + float(trace.delay[min(v, h - 1), agent]),
+                   seq, agent, v, immune))
+        seq += 1
+
+    for i in range(n):
+        dispatch(i, 0.0, 0)
+
+    now = 0.0
+    for t in range(steps):
+        got = []
+
+        def receive(vt, agent, version, immune) -> bool:
+            """True if the delivery is accepted into update t."""
+            if (not immune) and trace.drop[min(version, h - 1), agent]:
+                dispatch(agent, vt, t, immune=True)     # retry, never re-drop
+                return False
+            if max_staleness is not None and t - version > max_staleness:
+                dispatch(agent, vt, t)                  # too stale: recompute
+                return False
+            got.append((agent, version))
+            return True
+
+        while len(got) < q and heap:
+            vt, _, agent, version, immune = heapq.heappop(heap)
+            now = max(now, vt)
+            receive(vt, agent, version, immune)
+        # everything that arrived by the quorum instant joins the update
+        while heap and heap[0][0] <= now:
+            vt, _, agent, version, immune = heapq.heappop(heap)
+            receive(vt, agent, version, immune)
+
+        if len(got) < q:
+            quorum_met[t] = False
+        for agent, version in got:
+            contrib[t, agent] = True
+            staleness[t, agent] = t - version
+        vclock[t] = now
+        # version t+1 now exists: contributors re-dispatch against it, and
+        # recovered agents that were waiting for it wake up
+        for agent, _ in got:
+            dispatch(agent, now, t + 1)
+        for agent, immune in waiting.pop(t + 1, ()):
+            dispatch(agent, now, t + 1, immune=immune)
+
+    return AsyncTrace(contrib=contrib, staleness=staleness, refresh=refresh,
+                      vclock=vclock, quorum_met=quorum_met)

@@ -1,0 +1,207 @@
+"""Composable, seed-deterministic fault schedules — survey §2 fault taxonomy.
+
+The survey's fault spectrum is wider than Byzantine gradients: crash/recover
+faults, permanent crashes, stragglers (slow agents), message loss, and
+network partitions (§2.2–§2.3, §4).  A :class:`FaultSchedule` is a tuple of
+fault *specs*; compiling it against (n_agents, horizon, seed) yields a
+:class:`FaultTrace` of plain per-version arrays that both the event-driven
+cluster simulator (:mod:`repro.simulator.events`) and the p2p DGD loop
+(:mod:`repro.core.p2p.dgd`) consume:
+
+  ``alive[v, i]``  agent i is up while computing the gradient it dispatches
+                   at parameter version v (crash during computation is
+                   modelled as not dispatching at that version);
+  ``drop[v, i]``   the message dispatched at version v by agent i is lost in
+                   transit (computed, never delivered — the agent retries
+                   once it discovers the loss, retries are never re-dropped);
+  ``delay[v, i]``  compute + network latency, in virtual-time units of one
+                   base gradient computation, for the dispatch at version v;
+  ``adj[v]``       (n, n) bool link mask for decentralized topologies
+                   (``None`` unless a :class:`Partition` spec is present).
+
+Everything is sampled from one ``numpy.random.default_rng(seed)`` in spec
+order, so a schedule is a pure function of (specs, n, horizon, seed) — the
+property the determinism tests pin down.  The arrays are host-side numpy on
+purpose: the training loop indexes one row per step and feeds it to the
+jitted step function as ordinary jnp inputs (fixed shapes, one compile).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def _agent_idx(agents, n):
+    return np.arange(n) if agents is None else np.asarray(agents, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# fault specs
+
+
+@dataclass(frozen=True)
+class Straggler:
+    """Multiplicative slowdown of compute latency (survey §2.3 "slow
+    agents").  Per dispatch, with probability ``prob``, the latency is
+    multiplied by a sample from ``dist``:
+
+      lognormal — exp(sigma * N(0,1))          (heavy-ish tail, median 1)
+      exp       — 1 + Exponential(scale)
+      pareto    — 1 + Pareto(alpha=scale)      (heavy tail)
+      constant  — scale                        (deterministic slow agent)
+    """
+    dist: str = "lognormal"
+    scale: float = 1.0
+    prob: float = 1.0
+    agents: Optional[Tuple[int, ...]] = None
+
+    def apply(self, rng, alive, drop, delay, adj):
+        h, n = delay.shape
+        sel = _agent_idx(self.agents, n)
+        shape = (h, len(sel))
+        if self.dist == "lognormal":
+            factor = np.exp(self.scale * rng.standard_normal(shape))
+        elif self.dist == "exp":
+            factor = 1.0 + rng.exponential(self.scale, shape)
+        elif self.dist == "pareto":
+            factor = 1.0 + rng.pareto(self.scale, shape)
+        elif self.dist == "constant":
+            factor = np.full(shape, self.scale)
+        else:
+            raise KeyError(self.dist)
+        hit = rng.random(shape) < self.prob
+        delay[:, sel] *= np.where(hit, factor, 1.0)
+
+
+@dataclass(frozen=True)
+class CrashRecover:
+    """Crash/recover (fail-stop with repair, survey §2.2): while up, an agent
+    crashes each version with probability ``rate``; downtime is geometric
+    with mean ``mean_down`` versions."""
+    rate: float = 0.05
+    mean_down: float = 3.0
+    agents: Optional[Tuple[int, ...]] = None
+
+    def apply(self, rng, alive, drop, delay, adj):
+        h, n = alive.shape
+        sel = _agent_idx(self.agents, n)
+        p_up = 1.0 / max(self.mean_down, 1.0)       # geometric recovery
+        for i in sel:
+            up = True
+            for v in range(h):
+                if up:
+                    if rng.random() < self.rate:
+                        up = False
+                else:
+                    if rng.random() < p_up:
+                        up = True
+                alive[v, i] &= up
+
+
+@dataclass(frozen=True)
+class PermanentCrash:
+    """Fail-stop without repair from version ``at`` onward."""
+    agents: Tuple[int, ...]
+    at: int = 0
+
+    def apply(self, rng, alive, drop, delay, adj):
+        sel = _agent_idx(self.agents, alive.shape[1])
+        alive[self.at:, sel] = False
+
+
+@dataclass(frozen=True)
+class MessageDrop:
+    """Iid message loss: the gradient dispatched at version v is lost in
+    transit with probability ``p`` (omission fault, survey §2.2)."""
+    p: float = 0.1
+    agents: Optional[Tuple[int, ...]] = None
+
+    def apply(self, rng, alive, drop, delay, adj):
+        h, n = drop.shape
+        sel = _agent_idx(self.agents, n)
+        drop[:, sel] |= rng.random((h, len(sel))) < self.p
+
+
+@dataclass(frozen=True)
+class Partition:
+    """Network partition during versions [start, end): only links within the
+    same group survive.  Agents not named in any group form one implicit
+    residual group."""
+    groups: Tuple[Tuple[int, ...], ...]
+    start: int = 0
+    end: int = 10 ** 9
+
+    def apply(self, rng, alive, drop, delay, adj):
+        assert adj is not None
+        h, n, _ = adj.shape
+        gid = np.full(n, len(self.groups), np.int64)      # residual group
+        for g, members in enumerate(self.groups):
+            gid[np.asarray(members, np.int64)] = g
+        same = gid[:, None] == gid[None, :]
+        lo, hi = max(self.start, 0), min(self.end, h)
+        adj[lo:hi] &= same[None]
+
+
+FAULT_SPECS = (Straggler, CrashRecover, PermanentCrash, MessageDrop,
+               Partition)
+
+
+# ---------------------------------------------------------------------------
+# compiled trace
+
+
+@dataclass(frozen=True)
+class FaultTrace:
+    alive: np.ndarray                 # (horizon, n) bool
+    drop: np.ndarray                  # (horizon, n) bool
+    delay: np.ndarray                 # (horizon, n) float64
+    adj: Optional[np.ndarray] = None  # (horizon, n, n) bool, partitions only
+    seed: int = 0
+
+    @property
+    def horizon(self) -> int:
+        return self.alive.shape[0]
+
+    @property
+    def n_agents(self) -> int:
+        return self.alive.shape[1]
+
+    @property
+    def base_delay(self) -> float:
+        return float(np.min(self.delay)) if self.delay.size else 1.0
+
+    def is_trivial(self) -> bool:
+        """True iff the trace can never desynchronize a quorum-n loop:
+        nobody crashes, nothing drops, and all latencies are equal."""
+        return (bool(self.alive.all()) and not bool(self.drop.any())
+                and bool((self.delay == self.delay.flat[0]).all())
+                and self.adj is None)
+
+
+def compile_schedule(specs, n_agents: int, horizon: int, seed: int = 0,
+                     base_delay: float = 1.0) -> FaultTrace:
+    """Sample a concrete FaultTrace from composable fault specs.
+
+    Deterministic in (specs, n_agents, horizon, seed): one rng, consumed in
+    spec order.  ``horizon`` must cover every parameter version the run can
+    dispatch at (the loops use steps + 1)."""
+    specs = tuple(specs or ())
+    rng = np.random.default_rng(seed)
+    alive = np.ones((horizon, n_agents), bool)
+    drop = np.zeros((horizon, n_agents), bool)
+    delay = np.full((horizon, n_agents), float(base_delay))
+    adj = (np.ones((horizon, n_agents, n_agents), bool)
+           if any(isinstance(s, Partition) for s in specs) else None)
+    for spec in specs:
+        spec.apply(rng, alive, drop, delay, adj)
+    return FaultTrace(alive=alive, drop=drop, delay=delay, adj=adj,
+                      seed=seed)
+
+
+def no_faults(n_agents: int, horizon: int,
+              base_delay: float = 1.0) -> FaultTrace:
+    """The degenerate trace: all agents up, zero-variance latency."""
+    return compile_schedule((), n_agents, horizon, seed=0,
+                            base_delay=base_delay)

@@ -1,4 +1,6 @@
 from repro.training.step import ByzantineConfig, make_train_step
 from repro.training.loop import train_loop
+from repro.simulator.async_loop import SimConfig, async_train_loop
 
-__all__ = ["ByzantineConfig", "make_train_step", "train_loop"]
+__all__ = ["ByzantineConfig", "make_train_step", "train_loop",
+           "SimConfig", "async_train_loop"]

@@ -1,59 +1,25 @@
-"""Host-side training loop: data -> (jit) train_step -> metrics/checkpoints."""
+"""Host-side training loop: data -> (jit) train_step -> metrics/checkpoints.
+
+Since the simulator subsystem landed, the synchronous loop is the degenerate
+case of the asynchronous one (:mod:`repro.simulator.async_loop`): zero
+latency variance and quorum = n make every trace row "pure", and the async
+host loop dispatches pure rows to the exact synchronous train step — so this
+wrapper is bit-for-bit the historical ``train_loop``.  Pass a ``sim=``
+:class:`~repro.simulator.async_loop.SimConfig` to inject crashes,
+stragglers, message loss, or bounded-staleness asynchrony."""
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import save
-from repro.core.attacks import make_byzantine_mask
-from repro.core.momentum import init_momentum
-from repro.data import label_flip
-from repro.models import init_params
-from repro.training.step import make_train_step
+from repro.simulator.async_loop import SimConfig, async_train_loop
 
 
 def train_loop(cfg, bz, optimizer, dataset, steps: int, seed: int = 0,
                log_every: int = 10, ckpt_dir: str | None = None,
                ckpt_every: int = 0, poison_labels: bool = False,
-               jit: bool = True, params=None, log_fn=print):
+               jit: bool = True, params=None, log_fn=print,
+               sim: SimConfig | None = None):
     """Returns (params, history list of metric dicts)."""
-    key = jax.random.PRNGKey(seed)
-    k_init, k_run = jax.random.split(key)
-    if params is None:
-        params = init_params(cfg, k_init)
-    opt_state = optimizer.init(params)
-    momentum = None
-    if bz.momentum_alpha > 0.0:
-        proto = jax.tree.map(
-            lambda p: jnp.zeros((bz.n_agents,) + p.shape, jnp.float32),
-            params)
-        momentum = init_momentum(proto)
-
-    step_fn = make_train_step(cfg, bz, optimizer)
-    if jit:
-        step_fn = jax.jit(step_fn)
-    byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
-
-    history = []
-    t0 = time.time()
-    for step in range(steps):
-        k_run, k_data, k_step = jax.random.split(k_run, 3)
-        batch = dataset.batch(k_data, step)
-        if poison_labels:
-            batch = label_flip(batch, byz_mask, cfg.vocab_size)
-        params, opt_state, momentum, metrics = step_fn(
-            params, opt_state, momentum, batch, k_step)
-        if step % log_every == 0 or step == steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = step
-            m["wall_s"] = time.time() - t0
-            history.append(m)
-            log_fn(f"step {step:5d}  loss {m['loss']:.4f}  "
-                   f"gnorm {m['grad_norm']:.3f}")
-        if ckpt_dir and ckpt_every and step and step % ckpt_every == 0:
-            save(ckpt_dir, step, {"params": params, "opt": opt_state})
-    if ckpt_dir:
-        save(ckpt_dir, steps, {"params": params, "opt": opt_state})
-    return params, history
+    return async_train_loop(cfg, bz, optimizer, dataset, steps, sim=sim,
+                            seed=seed, log_every=log_every,
+                            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                            poison_labels=poison_labels, jit=jit,
+                            params=params, log_fn=log_fn)

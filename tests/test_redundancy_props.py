@@ -1,5 +1,8 @@
 """Executable solvability theory — 2f-redundancy and (2f, eps)-redundancy."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.redundancy import (check_2f_eps_redundancy,

@@ -1,0 +1,234 @@
+"""Fault-injection cluster simulator + staleness-aware async training."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.p2p.dgd import p2p_dgd_run
+from repro.core.p2p.graph import complete_graph, ring_graph
+from repro.core.redundancy.coding import tree_draco_aggregate
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.simulator import (CrashRecover, MessageDrop, Partition,
+                             PermanentCrash, SimConfig, Straggler,
+                             async_train_loop, compile_schedule, no_faults,
+                             simulate_arrivals)
+from repro.training import ByzantineConfig, train_loop
+
+SILENT = {"log_fn": lambda *_: None}
+SPECS = (Straggler(dist="lognormal", scale=0.6),
+         CrashRecover(rate=0.08, mean_down=2.0),
+         MessageDrop(p=0.15),
+         PermanentCrash(agents=(5,), at=10),
+         Partition(groups=((0, 1, 2), (3, 4, 5)), start=4, end=8))
+
+
+# ---------------------------------------------------------------------------
+# fault schedules
+
+
+def test_schedule_deterministic_under_seed():
+    a = compile_schedule(SPECS, 6, 25, seed=7)
+    b = compile_schedule(SPECS, 6, 25, seed=7)
+    for x, y in ((a.alive, b.alive), (a.drop, b.drop), (a.delay, b.delay),
+                 (a.adj, b.adj)):
+        assert np.array_equal(x, y)
+    c = compile_schedule(SPECS, 6, 25, seed=8)
+    assert not (np.array_equal(a.delay, c.delay)
+                and np.array_equal(a.alive, c.alive)
+                and np.array_equal(a.drop, c.drop))
+
+
+def test_schedule_composition_and_shapes():
+    tr = compile_schedule(SPECS, 6, 25, seed=0)
+    assert tr.alive.shape == tr.drop.shape == tr.delay.shape == (25, 6)
+    assert tr.adj.shape == (25, 6, 6)
+    assert (tr.delay > 0.0).all()
+    assert (tr.delay != 1.0).any()            # stragglers moved latencies
+    assert not tr.alive[10:, 5].any()         # permanent crash holds
+    assert not tr.adj[5, 0, 4]                # partition severs cross-group
+    assert tr.adj[5, 0, 1]
+    assert tr.adj[9, 0, 4]                    # heals after `end`
+    assert not tr.is_trivial()
+    assert no_faults(6, 25).is_trivial()
+
+
+# ---------------------------------------------------------------------------
+# event queue / arrival simulation
+
+
+def test_no_faults_trace_is_synchronous():
+    at = simulate_arrivals(no_faults(8, 21), 20)
+    assert at.is_synchronous()
+    assert at.quorum_met.all()
+    assert (at.vclock == np.arange(1, 21)).all()   # one unit per barrier
+
+
+def test_crash_removes_agents_from_quorum():
+    tr = compile_schedule((PermanentCrash(agents=(2,), at=5),), 4, 31)
+    at = simulate_arrivals(tr, 30, quorum=3)
+    assert not at.contrib[10:, 2].any()       # gone from every later quorum
+    assert at.quorum_met.all()                # 3 survivors still meet q=3
+    assert at.contrib[10:, [0, 1, 3]].all()
+
+
+def test_bounded_staleness_is_bounded():
+    tr = compile_schedule(
+        (Straggler(dist="pareto", scale=1.2), MessageDrop(p=0.2)),
+        8, 41, seed=3)
+    at = simulate_arrivals(tr, 40, quorum=5, max_staleness=2)
+    assert at.staleness[at.contrib].max(initial=0) <= 2
+    assert (at.contrib.sum(1) >= 1).all()
+
+
+def test_straggler_induces_staleness_not_starvation():
+    tr = compile_schedule(
+        (Straggler(dist="constant", scale=3.0, agents=(0,)),), 6, 61, seed=0)
+    at = simulate_arrivals(tr, 60, quorum=5)
+    stal0 = at.staleness[at.contrib[:, 0], 0]
+    assert at.contrib[:, 0].sum() < 60        # slow agent misses quorums
+    assert at.contrib[:, 0].sum() > 5         # ...but keeps participating
+    assert stal0.max() >= 1                   # and is stale when it lands
+
+
+# ---------------------------------------------------------------------------
+# async training loop
+
+CFG = get_config("paper-100m-smoke").replace(vocab_size=64, dtype="float32")
+DS = SyntheticLM(vocab_size=64, seq_len=16, n_agents=8, per_agent_batch=2)
+OPT = lambda: adamw(constant(3e-3))
+
+
+def losses(hist):
+    return [m["loss"] for m in hist]
+
+
+def test_async_zero_latency_full_quorum_is_bitexact_sync():
+    """ISSUE acceptance: latency=0, quorum=n reproduces the synchronous
+    train_loop bit-for-bit on the paper_100m config family."""
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name="trimmed_mean",
+                         attack="sign_flip")
+    _, hs = train_loop(CFG, bz, OPT(), DS, steps=8, log_every=2, **SILENT)
+    _, ha = async_train_loop(CFG, bz, OPT(), DS, steps=8,
+                             sim=SimConfig(), log_every=2, **SILENT)
+    assert losses(hs) == losses(ha)           # exact float equality
+    assert all(m["staleness_mean"] == 0.0 and m["arrived"] == 8 for m in ha)
+
+
+def test_general_async_path_reduces_to_sync():
+    """The general (buffered, masked-aggregation) path itself collapses to
+    the synchronous step on a pure trace."""
+    for name in ("trimmed_mean", "krum", "mean"):
+        bz = ByzantineConfig(n_agents=8, f=2, filter_name=name,
+                             attack="sign_flip")
+        _, hs = train_loop(CFG, bz, OPT(), DS, steps=6, log_every=2, **SILENT)
+        _, hg = async_train_loop(CFG, bz, OPT(), DS, steps=6,
+                                 sim=SimConfig(), log_every=2,
+                                 _force_general=True, **SILENT)
+        np.testing.assert_allclose(losses(hs), losses(hg), rtol=2e-4,
+                                   err_msg=name)
+
+
+def test_async_under_stragglers_still_converges():
+    bz = ByzantineConfig(n_agents=8, f=2, filter_name="trimmed_mean",
+                         attack="sign_flip")
+    sim = SimConfig(faults=(Straggler(dist="lognormal", scale=0.8),),
+                    quorum=6, max_staleness=3, seed=2)
+    _, h = async_train_loop(CFG, bz, OPT(), DS, steps=50, log_every=50,
+                            sim=sim, **SILENT)
+    assert h[-1]["loss"] < 1.2
+    assert any(m["staleness_mean"] > 0 or m["arrived"] < 8 for m in h)
+
+
+def test_crash_recover_chaos_run_is_finite():
+    bz = ByzantineConfig(n_agents=8, f=0, filter_name="coordinate_median")
+    sim = SimConfig(faults=(CrashRecover(rate=0.15, mean_down=2.0),
+                            MessageDrop(p=0.1),
+                            Straggler(dist="exp", scale=0.5)),
+                    quorum=4, max_staleness=4, seed=5)
+    _, h = async_train_loop(CFG, bz, OPT(), DS, steps=30, log_every=10,
+                            sim=sim, **SILENT)
+    assert np.isfinite(h[-1]["loss"])
+    assert h[-1]["loss"] < 3.0
+
+
+def test_coded_fallback_on_quorum_miss():
+    ds = SyntheticLM(vocab_size=64, seq_len=16, n_agents=8,
+                     per_agent_batch=2, regime="parallel")
+    bz = ByzantineConfig(n_agents=8, f=0, filter_name="mean")
+    sim = SimConfig(faults=(PermanentCrash(agents=(0, 1, 2), at=3),),
+                    quorum=7, coded_fallback_r=2,
+                    staleness_weighting="none")
+    _, h = async_train_loop(CFG, bz, OPT(), ds, steps=30, log_every=10,
+                            sim=sim, **SILENT)
+    assert h[-1]["arrived"] == 5              # 3 agents gone for good
+    assert h[-1]["loss"] < 2.0                # code still recovers signal
+
+
+# ---------------------------------------------------------------------------
+# masked gradient coding
+
+
+def test_masked_draco_averages_surviving_groups():
+    g = {"w": jnp.stack([jnp.full((3,), float(i // 2)) for i in range(8)])}
+    full = tree_draco_aggregate(g, 2)
+    np.testing.assert_allclose(full["w"], (0 + 1 + 2 + 3) / 4)
+    mask = jnp.asarray([True, True, False, False, True, True, True, True])
+    part = tree_draco_aggregate(g, 2, mask=mask)
+    np.testing.assert_allclose(part["w"], (0 + 2 + 3) / 3, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# p2p DGD over time-varying (partitioned / crashing) graphs
+
+
+def test_p2p_fault_schedule_partition_and_freeze():
+    n = 8
+    adj = complete_graph(n)
+    sched = (Partition(groups=((0, 1, 2, 3), (4, 5, 6, 7)), start=3, end=10),
+             PermanentCrash(agents=(7,), at=12))
+    grad_fn = lambda i, x: x                  # all minimize ||x||^2
+    x0 = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+    traj = p2p_dgd_run(adj, grad_fn, x0, steps=20, f=1, combine="lf",
+                       fault_schedule=sched)
+    assert bool(jnp.isfinite(traj).all())
+    frozen = np.asarray(traj[13:, 7])
+    assert (frozen == frozen[0]).all()        # crashed agent frozen
+    live = np.asarray(traj[-1, :7])
+    assert np.linalg.norm(live) < 0.5 * np.linalg.norm(
+        np.asarray(x0[:7]))                   # still descending toward 0
+
+
+def test_p2p_message_drop_silences_sender_not_receiver():
+    """A dropped broadcast must vanish at the RECEIVERS (in-edge semantics);
+    the dropping sender still hears its neighbours."""
+    adj = complete_graph(3)
+    sched = (MessageDrop(p=1.0, agents=(0,)),)
+    grad_fn = lambda i, x: jnp.zeros_like(x)
+    x0 = jnp.asarray([[100.0], [1.0], [2.0]])
+    traj = p2p_dgd_run(adj, grad_fn, x0, steps=1, combine="plain",
+                       fault_schedule=sched)
+    after = np.asarray(traj[1])
+    assert after[1, 0] <= 2.0 + 1e-6          # never saw agent 0's 100.0
+    assert after[2, 0] <= 2.0 + 1e-6
+    assert after[0, 0] < 100.0                # agent 0 still hears 1 and 2
+
+
+def test_lf_degraded_degree_keeps_own_estimate():
+    """With deg <= 2f the LF trim would eat more values than exist — the
+    receiver must fall back to its own estimate, not a zeroed/negated one."""
+    adj = ring_graph(4, 1)                    # deg 2 everywhere, f=1
+    grad_fn = lambda i, x: jnp.zeros_like(x)
+    x0 = jnp.asarray([[4.0], [-3.0], [7.0], [11.0]])
+    traj = p2p_dgd_run(adj, grad_fn, x0, steps=1, f=1, combine="lf")
+    np.testing.assert_array_equal(np.asarray(traj[1]), np.asarray(x0))
+
+
+def test_p2p_without_schedule_unchanged():
+    n = 6
+    adj = complete_graph(n)
+    grad_fn = lambda i, x: x
+    x0 = jnp.ones((n, 2))
+    a = p2p_dgd_run(adj, grad_fn, x0, steps=10, combine="ce")
+    b = p2p_dgd_run(adj, grad_fn, x0, steps=10, combine="ce",
+                    fault_schedule=None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
