@@ -17,6 +17,7 @@ import json
 import time
 
 from repro.configs import get_config
+from repro.core.aggregators import make_spec
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.simulator import (CrashRecover, MessageDrop, SimConfig, Straggler,
@@ -35,13 +36,19 @@ PROFILES = {
         quorum=4, max_staleness=4, seed=0),
 }
 
+# the delay-adaptive Zeno++-style score filter on the straggler profile —
+# a stateful aggregator flowing through the same spec API + state threading
+ZENO_PP_PROFILE = ("stragglers+zeno_pp", PROFILES["stragglers"],
+                   make_spec("zeno_pp", f=2, xi=0.5, ema=0.2, n=8))
 
-def bench_profile(name: str, sim: SimConfig, steps: int):
+
+def bench_profile(name: str, sim: SimConfig, steps: int, aggregator=None):
     cfg = get_config("paper-100m-smoke").replace(vocab_size=64,
                                                  dtype="float32")
     ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
                      per_agent_batch=2)
-    bz = ByzantineConfig(n_agents=8, f=2, filter_name="trimmed_mean",
+    spec = aggregator or make_spec("trimmed_mean", f=2, n=8)
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
                          attack="sign_flip")
     # warm-up run compiles both step functions so the timed run is steady
     async_train_loop(cfg, bz, adamw(constant(3e-3)), ds, steps=2, sim=sim,
@@ -71,8 +78,9 @@ def run(quick: bool = True):
     """run.py harness entry point: CSV rows."""
     steps = 20 if quick else 100
     rows = []
-    for name, sim in PROFILES.items():
-        r = bench_profile(name, sim, steps)
+    runs = [(n, s, None) for n, s in PROFILES.items()] + [ZENO_PP_PROFILE]
+    for name, sim, agg in runs:
+        r = bench_profile(name, sim, steps, aggregator=agg)
         rows.append({
             "bench": "async",
             "name": name,
@@ -86,8 +94,9 @@ def run(quick: bool = True):
 
 def main(out: str = "BENCH_async.json", steps: int = 40):
     steps = max(1, steps)
-    results = {name: bench_profile(name, sim, steps)
-               for name, sim in PROFILES.items()}
+    runs = [(n, s, None) for n, s in PROFILES.items()] + [ZENO_PP_PROFILE]
+    results = {name: bench_profile(name, sim, steps, aggregator=agg)
+               for name, sim, agg in runs}
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     for name, r in results.items():

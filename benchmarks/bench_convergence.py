@@ -6,6 +6,7 @@ from __future__ import annotations
 import time
 
 from repro.configs.base import ArchConfig
+from repro.core.aggregators import make_spec
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.training import ByzantineConfig, train_loop
@@ -32,7 +33,8 @@ def run(quick: bool = True):
     rows = []
     for attack in attacks:
         for name in filters:
-            bz = ByzantineConfig(n_agents=8, f=2, filter_name=name,
+            bz = ByzantineConfig(n_agents=8, f=2,
+                                 aggregator=make_spec(name, f=2, n=8),
                                  attack=attack,
                                  attack_hyper=hypers.get(attack, {}))
             t0 = time.perf_counter()

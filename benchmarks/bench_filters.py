@@ -1,9 +1,10 @@
 """Benchmark 1 — survey Table 2: the gradient-filter catalogue.
 
-Per filter: wall-clock per aggregation call (jitted, CPU) across (n, d),
-the asymptotic complexity class from Table 2, and the empirical
-(alpha, f)-resilience flag (§3.5).  Mirrors the survey's summary table with
-measured numbers."""
+Per registered aggregator: wall-clock per ``spec.aggregate`` call (jitted,
+CPU, fused impl — the path training runs) across (n, d), the asymptotic
+complexity class from Table 2, and the empirical (alpha, f)-resilience flag
+(§3.5).  Mirrors the survey's summary table with measured numbers; every
+rule is reached through the unified :class:`AggregatorSpec` API."""
 from __future__ import annotations
 
 import time
@@ -11,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.filters import FILTERS
+from repro.core.aggregators import list_aggregators, make_spec
 from repro.core.resilience import estimate_alpha_f
 
 COMPLEXITY = {
@@ -23,11 +24,12 @@ COMPLEXITY = {
     "mda": "O(C(n,f) + n^2 d)", "cge": "O(n(log n + d))",
     "cgc": "O((n+f)d + n log n)", "bulyan": "O((n-2f)C + nd)",
     "mean": "O(n d)", "zeno": "O(n d)", "rfa": "O(n d iters)",
+    "zeno_pp": "O(n d)",
 }
 
 
-def time_filter(fn, g, f, iters=20, **hyper):
-    jitted = jax.jit(lambda x: fn(x, f, **hyper))
+def time_spec(spec, g, state=None, iters=20):
+    jitted = jax.jit(lambda x: spec.aggregate(x, state=state))
     jitted(g).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
@@ -40,17 +42,20 @@ def run(quick: bool = True):
     n, f = 16, 3
     ds = [4096] if quick else [4096, 65536]
     key = jax.random.PRNGKey(0)
+    names = list_aggregators("table2") + ["zeno_pp"]
     for d in ds:
         g = jax.random.normal(key, (n, d))
-        for name in sorted(FILTERS):
-            hyper = {}
-            if name == "zeno":
-                hyper["server_grad"] = jnp.mean(g, axis=0)
-            us = time_filter(FILTERS[name], g, f, **hyper)
-            if name == "zeno":
-                resilient = True
+        for name in names:
+            spec = make_spec(name, f=f, n=n)
+            state = None
+            if spec.stateful:
+                # externally-maintained validation gradient (state protocol)
+                state = {"server_grad": jnp.mean(g, axis=0)}
+            us = time_spec(spec, g, state=state)
+            if spec.stateful:
+                resilient = True          # validation-gradient rules
             else:
-                _, resilient = estimate_alpha_f(name, n, f,
+                _, resilient = estimate_alpha_f(spec, n, f,
                                                 trials=8 if quick else 32)
             rows.append({
                 "bench": "table2_filters", "name": f"{name}_n{n}_d{d}",

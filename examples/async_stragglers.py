@@ -12,13 +12,18 @@ SAME fault schedule (same seed -> identical latency samples):
   3. coded       — same quorum, but data is replicated (parallel regime,
                    Draco r=2): whenever the quorum is missed, the
                    repetition code recovers the batch gradient from the
-                   agents that DID deliver (survey §3.3.3 meets §4 asynchrony).
+                   agents that DID deliver (survey §3.3.3 meets §4 asynchrony);
+  4. zeno_pp     — same quorum, but the delay-adaptive Zeno++-style score
+                   filter (a STATEFUL AggregatorSpec: the server's
+                   descent-direction EMA is threaded through the jitted
+                   step) additionally screens what the quorum delivers.
 
 Run:  PYTHONPATH=src python examples/async_stragglers.py
 """
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.aggregators import make_spec
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.simulator import SimConfig, Straggler, async_train_loop
@@ -26,6 +31,7 @@ from repro.training import ByzantineConfig
 
 STEPS = 40
 FAULTS = (Straggler(dist="pareto", scale=1.1, agents=(0, 1)),)
+MEAN = make_spec("mean", n=8)
 
 cfg = get_config("paper-100m-smoke").replace(vocab_size=64, dtype="float32")
 ds_iid = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2)
@@ -34,13 +40,18 @@ ds_par = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2,
 
 RUNS = {
     "barrier (sync, quorum=8)": dict(
-        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, filter_name="mean"),
+        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, aggregator=MEAN),
         sim=SimConfig(faults=FAULTS, quorum=None, seed=0)),
     "quorum-drop (async, quorum=6)": dict(
-        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, filter_name="mean"),
+        ds=ds_iid, bz=ByzantineConfig(n_agents=8, f=0, aggregator=MEAN),
         sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
     "coded (async + Draco r=2)": dict(
         ds=ds_par, bz=ByzantineConfig(n_agents=8, f=0, draco_r=2),
+        sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
+    "zeno_pp (async, delay-adaptive)": dict(
+        ds=ds_iid, bz=ByzantineConfig(
+            n_agents=8, f=0,
+            aggregator=make_spec("zeno_pp", xi=0.5, ema=0.2, n=8)),
         sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
 }
 

@@ -34,6 +34,7 @@ def main():
     import jax
 
     from repro.configs import get_config, num_params
+    from repro.core.aggregators import make_spec
     from repro.data import SyntheticLM
     from repro.optim import adamw, cosine_warmup
     from repro.serving import generate
@@ -45,7 +46,8 @@ def main():
                      n_agents=args.n_agents,
                      per_agent_batch=args.per_agent_batch, regime="noniid")
     bz = ByzantineConfig(
-        n_agents=args.n_agents, f=args.f, filter_name=args.filter,
+        n_agents=args.n_agents, f=args.f,
+        aggregator=make_spec(args.filter, f=args.f, n=args.n_agents),
         attack=args.attack, momentum_alpha=args.momentum_alpha, remat=True)
     opt = adamw(cosine_warmup(3e-4, max(args.steps // 20, 5), args.steps))
     params, hist = train_loop(cfg, bz, opt, ds, steps=args.steps,

@@ -13,6 +13,7 @@ D_i.  Two honest lessons from the literature, demonstrated live:
 Run:  PYTHONPATH=src python examples/federated_noniid.py
 """
 from repro.configs import get_config
+from repro.core.aggregators import make_spec
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.training import ByzantineConfig, train_loop
@@ -24,7 +25,8 @@ STEPS = 120
 def run(filter_name, attack="none", poison=False, regime="noniid"):
     ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
                      per_agent_batch=2, regime=regime)
-    bz = ByzantineConfig(n_agents=8, f=2, filter_name=filter_name,
+    bz = ByzantineConfig(n_agents=8, f=2,
+                         aggregator=make_spec(filter_name, f=2, n=8),
                          attack=attack)
     _, hist = train_loop(CFG, bz, adamw(constant(3e-3)), ds, steps=STEPS,
                          poison_labels=poison, log_fn=lambda *_: None)

@@ -10,14 +10,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.aggregators import clipped, make_spec
 from repro.core.attacks import apply_attack, make_byzantine_mask
-from repro.core.filters import FILTERS
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.serving import generate
 from repro.training import ByzantineConfig, train_loop
 
-# --- 1. filters on a raw gradient stack --------------------------------
+# --- 1. aggregator specs on a raw gradient stack -----------------------
 n, f, d = 12, 3, 64
 key = jax.random.PRNGKey(0)
 center = jnp.linspace(-1.0, 1.0, d)
@@ -26,16 +26,23 @@ mask = make_byzantine_mask(n, f)
 attacked = apply_attack("sign_flip", key, grads, mask)
 
 print(f"{n} agents, {f} Byzantine (sign-flip attack)\n")
-print(f"{'filter':20s} {'dist to honest center':>22s}")
+print(f"{'aggregator':24s} {'dist to honest center':>22s}")
 for name in ["mean", "krum", "coordinate_median", "trimmed_mean",
              "geometric_median", "cge", "bulyan", "mda"]:
-    out = FILTERS[name](attacked, f)
-    print(f"{name:20s} {float(jnp.linalg.norm(out - center)):22.4f}")
+    spec = make_spec(name, f=f, n=n)        # typed, validated at build time
+    out = spec.aggregate(attacked)
+    print(f"{spec.describe():24s} {float(jnp.linalg.norm(out - center)):22.4f}")
+
+# specs compose: clip outlier rows to norm 10, THEN trimmed-mean the rest
+composed = clipped(make_spec("trimmed_mean", f=f, n=n), tau=10.0)
+out = composed.aggregate(attacked)
+print(f"{composed.describe():24s} {float(jnp.linalg.norm(out - center)):22.4f}")
 
 # --- 2. Byzantine-robust training end to end ---------------------------
 cfg = get_config("paper-100m-smoke").replace(vocab_size=64)
 ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8, per_agent_batch=2)
-bz = ByzantineConfig(n_agents=8, f=2, filter_name="trimmed_mean",
+bz = ByzantineConfig(n_agents=8, f=2,
+                     aggregator=make_spec("trimmed_mean", f=2, n=8),
                      attack="sign_flip")
 print("\ntraining a smoke-scale LM under attack (trimmed-mean defence):")
 params, hist = train_loop(cfg, bz, adamw(constant(3e-3)), ds, steps=30,

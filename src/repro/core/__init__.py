@@ -1,19 +1,27 @@
 """Core: the survey's technique space as composable JAX modules.
 
-- filters:     gradient filters / robust aggregation rules (Table 2)
-- attacks:     Byzantine behaviours (§3.1, §4.1)
-- aggregation: pytree + sharded aggregation (gather vs fused impls)
-- momentum:    worker momentum variance reduction (§3.3.4)
-- redundancy:  gradient coding, Draco/DETOX/reactive, 2f-redundancy theory
-- p2p:         decentralized (peer-to-peer) fault-tolerant DGD (§3.3.5)
-- resilience:  (f,eps) / (alpha,f) / (delta_max,c) measurement (§3.5)
+- aggregators:  the unified AggregatorSpec API — typed, stateful,
+                composable robust aggregation (registry + caps + engine)
+- filters:      dense reference implementations (Table 2) — the oracle
+- attacks:      Byzantine behaviours (§3.1, §4.1)
+- aggregation:  DEPRECATED string-dispatch shims over aggregators
+- momentum:     worker momentum variance reduction (§3.3.4)
+- redundancy:   gradient coding, Draco/DETOX/reactive, 2f-redundancy theory
+- p2p:          decentralized (peer-to-peer) fault-tolerant DGD (§3.3.5)
+- resilience:   (f,eps) / (alpha,f) / (delta_max,c) measurement (§3.5)
 """
 from repro.core.aggregation import tree_aggregate
+from repro.core.aggregators import (AggregatorCaps, AggregatorSpec,
+                                    bucketed, clipped, list_aggregators,
+                                    make_spec, register_aggregator,
+                                    staleness_discounted)
 from repro.core.attacks import apply_attack, get_attack, make_byzantine_mask
 from repro.core.filters import FILTERS, get_filter
 from repro.core.momentum import init_momentum, worker_momentum
 
 __all__ = [
+    "AggregatorCaps", "AggregatorSpec", "make_spec", "register_aggregator",
+    "list_aggregators", "clipped", "bucketed", "staleness_discounted",
     "tree_aggregate", "apply_attack", "get_attack", "make_byzantine_mask",
     "FILTERS", "get_filter", "init_momentum", "worker_momentum",
 ]

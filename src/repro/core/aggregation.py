@@ -1,378 +1,76 @@
-"""Robust aggregation over *pytree* gradients — the bridge between the dense
-filter catalogue (survey Table 2) and real model training.
+"""DEPRECATED string-dispatch aggregation API — thin shims over
+:mod:`repro.core.aggregators`.
 
-Two implementations, both exact w.r.t. :mod:`repro.core.filters.dense`:
+The engine, the per-rule implementations and the tree helpers now live in
+:mod:`repro.core.aggregators` behind the typed :class:`AggregatorSpec` API:
 
-``impl="gather"`` — paper-faithful: ravel every agent's gradient pytree into
-one (n, P) stack and run the dense filter.  This is what the surveyed systems
-do (the server holds n full update vectors); under SPMD it forces an
-all-gather of the full gradient stack along the agent axis.
+    from repro.core.aggregators import make_spec
+    spec = make_spec("trimmed_mean", f=3, impl="fused", beta=0.25)
+    agg  = spec.aggregate(grads)                       # == tree_aggregate
+    agg  = spec.aggregate(grads, mask=m, weights=w)    # == tree_masked_...
+    w    = spec.weights(grads)                         # == filter_weights
 
-``impl="fused"`` — beyond-paper decomposition: every non-coordinate-wise
-filter in the survey factors into  (global scalar statistics) -> (per-agent
-weights w in R^n) -> (weighted sum per leaf).  The statistics (sq-norms,
-Gram matrix) are tree-sums of per-leaf contractions, so under SPMD only n or
-n^2 *scalars* cross the machine instead of n full gradients; coordinate-wise
-filters apply leaf-wise (they are exactly shardable).  See EXPERIMENTS.md
-§Perf for the measured collective-byte impact.
-"""
+The functions below keep the historical signatures working bit-for-bit
+(tests/test_aggregator_spec.py asserts the parity) but emit
+:class:`AggregatorDeprecationWarning` — repo-internal code must pass specs.
+Stateful rules: the legacy calls accept ``server_grad=...`` in ``**hyper``
+and translate it to the explicit ``state=`` protocol.
+
+The capability constants are derived views over the registry's
+:class:`~repro.core.aggregators.AggregatorCaps` — they are no longer edited
+when a rule is added."""
 from __future__ import annotations
 
-import functools
-import itertools
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.aggregators import (                       # noqa: F401
+    AggregatorDeprecationWarning, REGISTRY, get_aggregator_def, make_spec,
+    tree_bulyan, tree_dot, tree_geometric_median, tree_gram,
+    tree_median_of_means, tree_sqnorms, tree_stack_ravel,
+    tree_unravel_like, tree_weighted_sum, tree_where_agents)
 
-from repro.core.filters import dense as D
-
-COORDWISE = {"coordinate_median", "trimmed_mean", "phocas",
-             "mean_around_median"}
-WEIGHTED = {"mean", "krum", "multi_krum", "m_krum", "cge", "cgc", "mda",
-            "zeno"}
-ITERATIVE = {"geometric_median", "rfa", "median_of_means"}
-
-
-# ---------------------------------------------------------------------------
-# tree helpers (agent axis = leading axis of every leaf)
+# legacy capability sets — now derived, kept only for external importers
+COORDWISE = {n for n, d in REGISTRY.items() if d.caps.coordwise}
+WEIGHTED = {n for n, d in REGISTRY.items()
+            if d.caps.weight_decomposable and "table2" in d.tags}
+ITERATIVE = {n for n, d in REGISTRY.items()
+             if d.caps.iterative and "meta" not in d.tags}
 
 
-def tree_stack_ravel(grads):
-    """(pytree with leading n) -> (n, P) dense stack."""
-    leaves = jax.tree.leaves(grads)
-    n = leaves[0].shape[0]
-    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+def _shim_spec(fn_name, name, f, impl, hyper):
+    warnings.warn(
+        f"{fn_name}(name, ...) is deprecated: build an AggregatorSpec with "
+        f"repro.core.aggregators.make_spec({name!r}, f={f}, ...) and call "
+        f"spec.aggregate(...)", AggregatorDeprecationWarning, stacklevel=3)
+    hyper = dict(hyper)
+    state = None
+    if "server_grad" in hyper:
+        state = {"server_grad": hyper.pop("server_grad")}
+    # the legacy gather path stripped native_dtype for EVERY rule; keep
+    # that tolerance here (the spec API proper rejects it at build time)
+    d = get_aggregator_def(name)
+    if "native_dtype" in hyper and "native_dtype" not in (d.impl_keys
+                                                          | d.hyper_keys):
+        hyper.pop("native_dtype")
+    return make_spec(name, f=f, impl=impl, **hyper), state
 
 
-def tree_unravel_like(vec, proto):
-    """(P,) -> pytree shaped like one agent's grads (proto has leading n)."""
-    leaves, treedef = jax.tree.flatten(proto)
-    out, off = [], 0
-    for l in leaves:
-        size = int(np.prod(l.shape[1:], dtype=np.int64))
-        out.append(vec[off:off + size].reshape(l.shape[1:]).astype(l.dtype))
-        off += size
-    return jax.tree.unflatten(treedef, out)
-
-
-def tree_sqnorms(grads):
-    """Per-agent squared norms, accumulated leaf-wise: (n,) fp32.
-
-    NO reshapes: flattening (n, d1, d2, ...) -> (n, -1) merges sharded and
-    unsharded dims, which forces the SPMD partitioner to regroup (gather)
-    the whole stack.  Axis-tuple reductions keep the contraction local +
-    one tiny psum."""
-    def leaf(l):
-        axes = tuple(range(1, l.ndim))
-        return jnp.sum(jnp.square(l.astype(jnp.float32)), axis=axes)
-    return functools.reduce(jnp.add, [leaf(l) for l in jax.tree.leaves(grads)])
-
-
-def tree_gram(grads):
-    """Pairwise inner products, accumulated leaf-wise: (n, n) fp32
-    (multi-dim tensordot — sharding-preserving, no reshape)."""
-    def leaf(l):
-        axes = tuple(range(1, l.ndim))
-        return jnp.tensordot(l.astype(jnp.float32), l.astype(jnp.float32),
-                             axes=(axes, axes))
-    return functools.reduce(jnp.add, [leaf(l) for l in jax.tree.leaves(grads)])
-
-
-def tree_dot(grads, vec_tree):
-    """<g_i, v> per agent: (n,) fp32 (sharding-preserving)."""
-    def leaf(l, v):
-        axes = tuple(range(1, l.ndim))
-        return jnp.tensordot(l.astype(jnp.float32), v.astype(jnp.float32),
-                             axes=(axes, tuple(range(v.ndim))))
-    return functools.reduce(
-        jnp.add, jax.tree.leaves(jax.tree.map(leaf, grads, vec_tree)))
-
-
-def tree_weighted_sum(grads, w):
-    """sum_i w_i * g_i per leaf."""
-    def leaf(l):
-        wl = w.astype(jnp.float32).reshape((-1,) + (1,) * (l.ndim - 1))
-        return jnp.sum(l.astype(jnp.float32) * wl, axis=0).astype(l.dtype)
-    return jax.tree.map(leaf, grads)
-
-
-def _gram_to_d2(gram):
-    sq = jnp.diag(gram)
-    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
-
-
-# ---------------------------------------------------------------------------
-# per-agent weight computation (fused path)
-
-
-def filter_weights(name, grads, f, **hyper):
-    """Return w: (n,) such that filter(g) == sum_i w_i g_i (exactly)."""
-    n = jax.tree.leaves(grads)[0].shape[0]
-    if name == "mean":
-        return jnp.full((n,), 1.0 / n)
-    if name in ("cge", "cgc"):
-        norms = jnp.sqrt(tree_sqnorms(grads))
-        if name == "cge":
-            _, idx = jax.lax.top_k(-norms, n - f)
-            w = jnp.zeros((n,)).at[idx].set(1.0)
-            return w / (n - f) if hyper.get("normalize", True) else w
-        tau = jnp.sort(norms)[n - f - 1]
-        w = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
-        return w / n if hyper.get("normalize", True) else w
-    if name == "zeno":
-        v = hyper["server_grad"]
-        rho = hyper.get("rho", 1e-3)
-        lr = hyper.get("lr", 1.0)
-        score = lr * tree_dot(grads, v) - rho * tree_sqnorms(grads)
-        _, idx = jax.lax.top_k(score, n - f)
-        return jnp.zeros((n,)).at[idx].set(1.0 / (n - f))
-    # distance-based: need the Gram matrix (n^2 scalars)
-    d2 = _gram_to_d2(tree_gram(grads))
-    if name == "krum":
-        s = D.krum_scores(d2, f)
-        return jax.nn.one_hot(jnp.argmin(s), n)
-    if name == "multi_krum":
-        m = hyper.get("m", 2)
-        s = D.krum_scores(d2, f)
-        _, idx = jax.lax.top_k(-s, m)
-        return jnp.zeros((n,)).at[idx].set(1.0 / m)
-    if name == "m_krum":
-        m = hyper.get("m", 2)
-
-        def body(carry, _):
-            mask, w = carry
-            s = D.krum_scores(d2, f, mask=mask)
-            i = jnp.argmin(s)
-            return (mask.at[i].set(False), w.at[i].set(1.0 / m)), None
-        (_, w), _ = jax.lax.scan(
-            body, (jnp.ones((n,), bool), jnp.zeros((n,))), None, length=m)
-        return w
-    if name == "mda":
-        combos = np.asarray(list(itertools.combinations(range(n), n - f)))
-        sub = d2[combos[:, :, None], combos[:, None, :]]
-        best = jnp.asarray(combos)[jnp.argmin(jnp.max(sub, axis=(1, 2)))]
-        return jnp.zeros((n,)).at[best].set(1.0 / (n - f))
-    raise KeyError(name)
-
-
-# ---------------------------------------------------------------------------
-# leaf-wise coordinate filters (fused path — exactly shardable)
-#
-# Implemented natively on the N-d leaves (agent axis 0).  NO reshape to
-# (n, -1): flattening merges sharded/unsharded dims and forces the SPMD
-# partitioner to re-gather the whole gradient stack.  The sort itself still
-# needs the agent axis local (one all-gather along the agent mesh axes) —
-# that is the survey's inherent aggregation cost; everything else stays
-# sharded.
-
-
-def _mean_closest_nd(l, center, k):
-    """Per-coordinate mean of the k values closest to ``center``."""
-    dist = jnp.abs(l.astype(jnp.float32) - center[None].astype(jnp.float32))
-    idx = jnp.argsort(dist, axis=0)[:k]
-    vals = jnp.take_along_axis(l.astype(jnp.float32), idx, axis=0)
-    return jnp.mean(vals, axis=0)
-
-
-def _leafwise(name, grads, f, **hyper):
-    def leaf(l):
-        n = l.shape[0]
-        x = l if hyper.get("native_dtype") else l.astype(jnp.float32)
-        if name == "coordinate_median":
-            out = jnp.median(x, axis=0)
-        elif name == "trimmed_mean":
-            import numpy as _np
-            beta = hyper.get("beta")
-            b = int(_np.ceil((beta if beta is not None else f / n) * n))
-            b = min(b, (n - 1) // 2)
-            s = jnp.sort(x, axis=0)
-            kept = s[b:n - b] if b else s
-            # native_dtype: keep the mean in the exchange dtype too, else the
-            # partitioner hoists the fp32 convert BEFORE the agent gather and
-            # the halved-bytes exchange never materializes
-            out = jnp.mean(
-                kept if hyper.get("native_dtype")
-                else kept.astype(jnp.float32), axis=0)
-        elif name == "phocas":
-            s = jnp.sort(x, axis=0)
-            b = min(f, (n - 1) // 2)
-            tm = jnp.mean((s[b:n - b] if b else s).astype(jnp.float32),
-                          axis=0)
-            out = _mean_closest_nd(x, tm, n - f)
-        elif name == "mean_around_median":
-            med = jnp.median(x.astype(jnp.float32), axis=0)
-            out = _mean_closest_nd(x, med, n - f)
-        else:
-            raise KeyError(name)
-        return out.astype(l.dtype)
-    return jax.tree.map(leaf, grads)
-
-
-# ---------------------------------------------------------------------------
-# iterative filters on trees
-
-
-def tree_geometric_median(grads, iters: int = 32, eps: float = 1e-8):
-    y = jax.tree.map(lambda l: jnp.mean(l.astype(jnp.float32), axis=0), grads)
-
-    def body(y, _):
-        diff_sq = tree_sqnorms(
-            jax.tree.map(lambda l, c: l.astype(jnp.float32) - c[None], grads,
-                         y))
-        w = 1.0 / jnp.maximum(jnp.sqrt(diff_sq), eps)
-        w = w / jnp.sum(w)
-        y = jax.tree.map(
-            lambda l: jnp.sum(
-                l.astype(jnp.float32)
-                * w.reshape((-1,) + (1,) * (l.ndim - 1)), axis=0),
-            grads)
-        return y, None
-    y, _ = jax.lax.scan(body, y, None, length=iters)
-    return jax.tree.map(lambda c, l: c.astype(l.dtype), y, grads)
-
-
-def tree_median_of_means(grads, f, num_groups=None, **gm_kw):
-    n = jax.tree.leaves(grads)[0].shape[0]
-    k = num_groups if num_groups else (min(n, 2 * f + 1) if f else n)
-    while n % k:
-        k += 1
-    means = jax.tree.map(
-        lambda l: jnp.mean(
-            l.astype(jnp.float32).reshape((k, n // k) + l.shape[1:]), axis=1),
-        grads)
-    return tree_geometric_median(means, **gm_kw)
-
-
-def tree_bulyan(grads, f, **hyper):
-    """Bulyan on trees: krum-based selection from the Gram matrix, then
-    leaf-wise coordinate stage with a global selection mask."""
-    n = jax.tree.leaves(grads)[0].shape[0]
-    theta = n - 2 * f
-    d2 = _gram_to_d2(tree_gram(grads))
-
-    def body(carry, _):
-        mask, sel = carry
-        s = D.krum_scores(d2, f, mask=mask)
-        i = jnp.argmin(s)
-        return (mask.at[i].set(False), sel.at[i].set(True)), None
-    (_, sel), _ = jax.lax.scan(
-        body, (jnp.ones((n,), bool), jnp.zeros((n,), bool)), None,
-        length=theta)
-
-    beta = max(theta - 2 * f, 1)
-
-    def leaf(l):
-        flat = l.astype(jnp.float32).reshape(n, -1)
-        med = D._masked_median(flat, sel)
-        big = jnp.asarray(jnp.inf, flat.dtype)
-        dist = jnp.where(sel[:, None], jnp.abs(flat - med[None]), big)
-        _, idx = jax.lax.top_k(-dist.T, beta)
-        vals = jnp.take_along_axis(flat.T, idx, axis=1)
-        return jnp.mean(vals, axis=1).reshape(l.shape[1:]).astype(l.dtype)
-    return jax.tree.map(leaf, grads)
-
-
-# ---------------------------------------------------------------------------
-# masked / staleness-weighted aggregation (async simulator entry point)
-
-
-def tree_where_agents(mask, a, b):
-    """Per-agent select on n-leading pytrees (keeps b's leaf dtypes)."""
-    def leaf(x, y):
-        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
-        return jnp.where(m, x.astype(y.dtype), y)
-    return jax.tree.map(leaf, a, b)
+def tree_aggregate(name, grads, f, impl: str = "fused", **hyper):
+    """DEPRECATED — ``make_spec(name, f=f, impl=impl, **hyper)
+    .aggregate(grads)``."""
+    spec, state = _shim_spec("tree_aggregate", name, f, impl, hyper)
+    return spec.aggregate(grads, state=state)
 
 
 def tree_masked_aggregate(name, grads, f, mask, weights=None,
                           impl: str = "fused", **hyper):
-    """Robust aggregation over a *varying subset* of agents with per-agent
-    weights — the bridge between the filter catalogue and the asynchronous
-    simulator (:mod:`repro.simulator`).
-
-    ``mask``    (n,) bool — which rows actually arrived this round.
-    ``weights`` (n,) float — optional multipliers (e.g. staleness discounts
-                gamma^s of the Zeno++/Kardam line); zeroed where ``mask`` is
-                False.
-
-    The filters in :mod:`repro.core.filters.dense` are fixed-n: absent rows
-    are *imputed* with the weighted mean of the arrived rows, so they sit at
-    the current consensus and cannot shift any order statistic outward, and
-    the stack keeps one jit shape across rounds.  Weights fold in exactly
-    where each filter class admits them:
-
-      * mean                — the weighted mean of arrived rows (exact);
-      * weight-decomposable — filter weights on the imputed stack, times the
-        per-agent weights, renormalized (imputed rows carry the average
-        arrived weight so a selection landing on them is neutral);
-      * coordinate-wise / iterative — filter on the imputed stack, scaled by
-        the mean weight of arrived rows (a staleness-adaptive step size).
-
-    With mask all-True and weights all-one this reduces to
-    :func:`tree_aggregate` up to exact-arithmetic no-ops (the synchronous
-    degenerate case)."""
-    n = jax.tree.leaves(grads)[0].shape[0]
-    mask = mask.astype(bool)
-    mf = mask.astype(jnp.float32)
-    w = mf if weights is None else weights.astype(jnp.float32) * mf
-    cnt = jnp.maximum(jnp.sum(mf), 1.0)
-    tot = jnp.maximum(jnp.sum(w), 1e-30)
-    wn = w / tot
-    mean_sel = tree_weighted_sum(grads, wn)
-    if name == "mean":
-        return mean_sel
-    imputed = tree_where_agents(
-        mask, grads,
-        jax.tree.map(lambda m, l: jnp.broadcast_to(
-            m.astype(l.dtype)[None], l.shape), mean_sel, grads))
-    if name in WEIGHTED and impl == "fused":
-        # imputed rows carry the average arrived weight: a filter selecting
-        # one (it equals the weighted consensus) stays a valid update
-        row_w = jnp.where(mask, w, tot / cnt)
-        fw = filter_weights(name, imputed, f, **hyper) * row_w
-        fw = fw / jnp.maximum(jnp.sum(fw), 1e-30)
-        return tree_weighted_sum(imputed, fw)
-    agg = tree_aggregate(name, imputed, f, impl=impl, **hyper)
-    scale = tot / cnt                      # <= 1, == 1 when all fresh
-    return jax.tree.map(
-        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), agg)
+    """DEPRECATED — ``make_spec(...).aggregate(grads, mask=mask,
+    weights=weights)``."""
+    spec, state = _shim_spec("tree_masked_aggregate", name, f, impl, hyper)
+    return spec.aggregate(grads, mask=mask, weights=weights, state=state)
 
 
-# ---------------------------------------------------------------------------
-# public entry point
-
-
-def tree_aggregate(name, grads, f, impl: str = "fused", **hyper):
-    """Aggregate per-agent gradient pytrees (leading axis = agent).
-
-    impl="gather": ravel to (n, P), dense filter, unravel (paper-faithful).
-    impl="fused":  stats->weights / leaf-wise decomposition (same output).
-    """
-    if impl == "gather":
-        hyper = {k: v for k, v in hyper.items() if k != "native_dtype"}
-        stack = tree_stack_ravel(
-            jax.tree.map(lambda l: l.astype(jnp.float32), grads))
-        if name == "zeno":
-            hyper = dict(hyper)
-            hyper["server_grad"] = tree_stack_ravel(
-                jax.tree.map(lambda l: l.astype(jnp.float32)[None],
-                             hyper["server_grad"]))[0]
-        out = D.get_filter(name, **hyper)(stack, f)
-        return tree_unravel_like(out, grads)
-
-    if name in COORDWISE:
-        return _leafwise(name, grads, f, **hyper)
-    if name in WEIGHTED:
-        w = filter_weights(name, grads, f, **hyper)
-        return tree_weighted_sum(grads, w)
-    if name in ("geometric_median", "rfa"):
-        kw = {"iters": hyper.get("iters", 32),
-              "eps": hyper.get("eps", hyper.get("nu", 1e-8))}
-        return tree_geometric_median(grads, **kw)
-    if name == "median_of_means":
-        return tree_median_of_means(grads, f,
-                                    num_groups=hyper.get("num_groups"))
-    if name == "bulyan":
-        return tree_bulyan(grads, f)
-    raise KeyError(name)
+def filter_weights(name, grads, f, **hyper):
+    """DEPRECATED — ``make_spec(...).weights(grads)``."""
+    spec, state = _shim_spec("filter_weights", name, f, "fused", hyper)
+    return spec.weights(grads, state=state)

@@ -1,0 +1,1132 @@
+"""Unified robust-aggregation API: typed, stateful, composable.
+
+The survey's core object — the robust aggregation rule — used to be
+dispatched through four stringly-typed surfaces (``FILTERS[name]``,
+``tree_aggregate(name, ...)``, ``filter_weights(name, ...)``,
+``tree_masked_aggregate(name, ...)``) with capability sets duplicated in
+ad-hoc constants and stateful rules (Zeno's ``server_grad``) smuggled
+through ``**hyper``.  This module replaces all of that with one object:
+
+:class:`AggregatorSpec`
+    A frozen dataclass naming a registered rule plus its static
+    configuration (``f``, hyper-parameters, ``impl``).  Hyper-parameters
+    are validated against the rule's declared keys at *build* time, so a
+    typo raises immediately instead of deep inside jit; impl-only keys
+    (``native_dtype``) are split off once into ``impl_hyper``.
+
+``spec.aggregate(grads, mask=None, weights=None, state=None)``
+    One entry point subsuming the legacy ``tree_aggregate`` (mask/weights
+    None), ``tree_masked_aggregate`` (mask given) and ``filter_weights``
+    (via :meth:`AggregatorSpec.weights`).  ``impl="gather"`` is the
+    paper-faithful dense path, ``impl="fused"`` the sharding-aware
+    stats->weights / leaf-wise decomposition — bit-for-bit identical to
+    the historical functions (tests/test_aggregator_spec.py).
+
+Capability flags (:class:`AggregatorCaps`)
+    coordwise / weight-decomposable / iterative / masked-capable /
+    sharding-aware / stateful — engine dispatch is driven purely by these
+    flags and the per-rule callables, so registering a new rule is ONE
+    :func:`register_aggregator` call: no dispatch chains, no constants.
+
+State protocol
+    Stateful rules (Zeno's server gradient, the delay-adaptive
+    ``zeno_pp``) declare ``init_state`` / ``update_state`` hooks; callers
+    thread the returned pytree explicitly instead of hiding arrays in
+    ``**hyper``:
+
+        state = spec.init_state(proto)
+        agg   = spec.aggregate(grads, mask=m, weights=w, state=state)
+        state = spec.update_state(state, agg)
+
+Composition wrappers (specs themselves)
+    :func:`clipped` (pre-aggregation norm clipping), :func:`bucketed`
+    (median-of-means style pre-bucketing) and :func:`staleness_discounted`
+    (Kardam/Zeno++-line delay discounting) wrap an inner spec and are
+    ordinary registry entries, so they nest:  ``clipped(bucketed(spec))``.
+
+Static work (MDA subset enumeration, trim counts) is precomputed once per
+(n, f) via caches at spec-build time (``make_spec(..., n=...)``) or on
+first trace, instead of on every call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import dense as D
+
+
+class AggregatorDeprecationWarning(DeprecationWarning):
+    """Raised (as a warning) by the legacy string-dispatch shims in
+    :mod:`repro.core.aggregation` — internal code must use specs."""
+
+
+# ---------------------------------------------------------------------------
+# tree helpers (agent axis = leading axis of every leaf)
+
+
+def tree_stack_ravel(grads):
+    """(pytree with leading n) -> (n, P) dense stack."""
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+
+
+def tree_unravel_like(vec, proto):
+    """(P,) -> pytree shaped like one agent's grads (proto has leading n)."""
+    leaves, treedef = jax.tree.flatten(proto)
+    out, off = [], 0
+    for l in leaves:
+        size = int(np.prod(l.shape[1:], dtype=np.int64))
+        out.append(vec[off:off + size].reshape(l.shape[1:]).astype(l.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_sqnorms(grads):
+    """Per-agent squared norms, accumulated leaf-wise: (n,) fp32.
+
+    NO reshapes: flattening (n, d1, d2, ...) -> (n, -1) merges sharded and
+    unsharded dims, which forces the SPMD partitioner to regroup (gather)
+    the whole stack.  Axis-tuple reductions keep the contraction local +
+    one tiny psum."""
+    def leaf(l):
+        axes = tuple(range(1, l.ndim))
+        return jnp.sum(jnp.square(l.astype(jnp.float32)), axis=axes)
+    return functools.reduce(jnp.add, [leaf(l) for l in jax.tree.leaves(grads)])
+
+
+def tree_gram(grads):
+    """Pairwise inner products, accumulated leaf-wise: (n, n) fp32
+    (multi-dim tensordot — sharding-preserving, no reshape)."""
+    def leaf(l):
+        axes = tuple(range(1, l.ndim))
+        return jnp.tensordot(l.astype(jnp.float32), l.astype(jnp.float32),
+                             axes=(axes, axes))
+    return functools.reduce(jnp.add, [leaf(l) for l in jax.tree.leaves(grads)])
+
+
+def tree_dot(grads, vec_tree):
+    """<g_i, v> per agent: (n,) fp32 (sharding-preserving)."""
+    def leaf(l, v):
+        axes = tuple(range(1, l.ndim))
+        return jnp.tensordot(l.astype(jnp.float32), v.astype(jnp.float32),
+                             axes=(axes, tuple(range(v.ndim))))
+    return functools.reduce(
+        jnp.add, jax.tree.leaves(jax.tree.map(leaf, grads, vec_tree)))
+
+
+def tree_weighted_sum(grads, w):
+    """sum_i w_i * g_i per leaf."""
+    def leaf(l):
+        wl = w.astype(jnp.float32).reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.sum(l.astype(jnp.float32) * wl, axis=0).astype(l.dtype)
+    return jax.tree.map(leaf, grads)
+
+
+def tree_where_agents(mask, a, b):
+    """Per-agent select on n-leading pytrees (keeps b's leaf dtypes)."""
+    def leaf(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x.astype(y.dtype), y)
+    return jax.tree.map(leaf, a, b)
+
+
+def _gram_to_d2(gram):
+    sq = jnp.diag(gram)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+
+
+def _n_agents(grads) -> int:
+    return jax.tree.leaves(grads)[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# static plans — combinatorial / count work shared across traces
+
+
+@functools.lru_cache(maxsize=None)
+def mda_combos(n: int, f: int) -> np.ndarray:
+    """All (n-f)-subsets for minimum-diameter averaging, enumerated ONCE
+    per (n, f) (the legacy path re-enumerated per trace)."""
+    combos = np.asarray(list(itertools.combinations(range(n), n - f)))
+    if len(combos) > 200_000:
+        raise ValueError(f"MDA infeasible for n={n}, f={f}")
+    return combos
+
+
+@functools.lru_cache(maxsize=None)
+def trim_count(n: int, f: int, beta: float | None) -> int:
+    """Per-side trim count of the coordinate-wise trimmed mean."""
+    b = int(np.ceil((beta if beta is not None else f / n) * n)) if n else 0
+    return min(b, (n - 1) // 2)
+
+
+# ---------------------------------------------------------------------------
+# capability flags + registry
+
+
+@dataclass(frozen=True)
+class AggregatorCaps:
+    """What an aggregation rule can do — drives engine dispatch."""
+    coordwise: bool = False           # leaf-wise per-coordinate rule
+    weight_decomposable: bool = False  # filter(g) == sum_i w_i g_i exactly
+    iterative: bool = False           # fixed-point / multi-round tree rule
+    masked_capable: bool = True       # supports mask/weights aggregation
+    sharding_aware: bool = False      # fused impl avoids full-stack gather
+    stateful: bool = False            # carries init_state/update_state
+    staleness_aware: bool = False     # `weights` = raw staleness ROUNDS,
+    #                                   not discount multipliers
+
+
+@dataclass(frozen=True)
+class AggregatorDef:
+    """Registry record: capabilities + the callables the engine dispatches
+    to.  All callables take the spec first, so hyper/state plumbing is
+    uniform and new rules never touch the engine."""
+    name: str
+    caps: AggregatorCaps
+    hyper_keys: frozenset          # allowed hyper-parameter names
+    impl_keys: frozenset           # impl-only keys (split into impl_hyper)
+    state_keys: frozenset          # keys that must arrive via state=, not hyper
+    gather_keys: frozenset         # hyper forwarded to the dense gather fn
+    dense_fn: Optional[Callable] = None    # (stack, f, **hyper) -> (P,)
+    weights_fn: Optional[Callable] = None  # (spec, grads, state) -> (n,)
+    tree_fn: Optional[Callable] = None     # (spec, grads, state) -> tree
+    custom_fn: Optional[Callable] = None   # (spec, grads, mask, w, state)
+    masked_fn: Optional[Callable] = None   # masked-path override
+    gather_state_fn: Optional[Callable] = None  # (spec, state) -> extra hyper
+    init_state_fn: Optional[Callable] = None    # (spec, proto) -> state
+    update_state_fn: Optional[Callable] = None  # (spec, state, agg) -> state
+    is_wrapper: bool = False       # requires inner spec
+    tags: tuple = ()               # e.g. ("table2",)
+
+
+REGISTRY: dict[str, AggregatorDef] = {}
+
+
+def register_aggregator(name: str, *, caps: AggregatorCaps,
+                        hyper: tuple = (), impl_keys: tuple = (),
+                        state_keys: tuple = (), gather: tuple = (),
+                        dense_fn=None, weights_fn=None, tree_fn=None,
+                        masked_fn=None, gather_state_fn=None,
+                        init_state=None, update_state=None,
+                        is_wrapper: bool = False, tags: tuple = ()):
+    """Register an aggregation rule.  Returns a DECORATOR — apply it to
+    the rule's custom aggregate function
+
+        @register_aggregator("my_rule", caps=AggregatorCaps(...))
+        def my_rule(spec, grads, mask, weights, state): ...
+
+    or, when the rule is fully described by the keyword callables
+    (dense_fn/weights_fn/tree_fn), apply it to None:
+
+        register_aggregator("my_rule", caps=..., weights_fn=...)(None)
+
+    This is the single extension point: no capability constants, no
+    dispatch chains, no edits anywhere else."""
+    def _add(custom_fn):
+        if name in REGISTRY:
+            raise ValueError(f"aggregator {name!r} already registered")
+        REGISTRY[name] = AggregatorDef(
+            name=name, caps=caps, hyper_keys=frozenset(hyper),
+            impl_keys=frozenset(impl_keys), state_keys=frozenset(state_keys),
+            gather_keys=frozenset(gather), dense_fn=dense_fn,
+            weights_fn=weights_fn, tree_fn=tree_fn, custom_fn=custom_fn,
+            masked_fn=masked_fn, gather_state_fn=gather_state_fn,
+            init_state_fn=init_state, update_state_fn=update_state,
+            is_wrapper=is_wrapper, tags=tags)
+        return custom_fn
+
+    return _add
+
+
+def _register_plain(name, **kw):
+    register_aggregator(name, **kw)(None)
+
+
+def get_aggregator_def(name: str) -> AggregatorDef:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown aggregator {name!r}; registered: "
+            f"{sorted(REGISTRY)}") from None
+
+
+def list_aggregators(tag: str | None = None) -> list[str]:
+    return sorted(n for n, d in REGISTRY.items()
+                  if tag is None or tag in d.tags)
+
+
+# ---------------------------------------------------------------------------
+# the spec
+
+
+@dataclass(frozen=True)
+class AggregatorSpec:
+    """Typed handle to a registered aggregation rule.
+
+    Build with :func:`make_spec` (validates hyper keys, splits impl-only
+    keys, precomputes static plans when ``n`` is known).  Frozen and
+    array-free, so specs pass freely through jit closures and configs.
+    """
+    name: str
+    f: int = 0
+    hyper: tuple = ()                 # sorted ((key, value), ...) — static
+    impl: str = "fused"               # fused | gather
+    impl_hyper: tuple = ()            # impl-only keys, e.g. native_dtype
+    inner: Optional["AggregatorSpec"] = None   # wrapper composition
+    n: Optional[int] = None           # static agent count (plan precompute)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def caps(self) -> AggregatorCaps:
+        return get_aggregator_def(self.name).caps
+
+    @property
+    def stateful(self) -> bool:
+        d = get_aggregator_def(self.name)
+        return d.caps.stateful or (self.inner is not None
+                                   and self.inner.stateful)
+
+    @property
+    def staleness_aware(self) -> bool:
+        """True if this spec (or any nested inner) interprets ``weights``
+        as raw staleness round counts rather than discount multipliers."""
+        d = get_aggregator_def(self.name)
+        return d.caps.staleness_aware or (self.inner is not None
+                                          and self.inner.staleness_aware)
+
+    @property
+    def hyper_dict(self) -> dict:
+        return dict(self.hyper)
+
+    @property
+    def impl_hyper_dict(self) -> dict:
+        return dict(self.impl_hyper)
+
+    def hp(self, key: str, default=None):
+        for k, v in self.hyper:
+            if k == key:
+                return v
+        return default
+
+    def describe(self) -> str:
+        h = ", ".join(f"{k}={v}" for k, v in self.hyper)
+        inner = f" -> {self.inner.describe()}" if self.inner else ""
+        return f"{self.name}(f={self.f}{', ' + h if h else ''})" + inner
+
+    # -- evolution --------------------------------------------------------
+    def with_f(self, f: int) -> "AggregatorSpec":
+        return dataclasses.replace(self, f=f)
+
+    def with_f_capped(self, f_max: int) -> "AggregatorSpec":
+        """Cap f on this spec AND every nested inner spec — the rule that
+        actually executes inside composition wrappers must respect the
+        reduced budget (e.g. after pre-aggregation grouping shrinks n)."""
+        inner = self.inner.with_f_capped(f_max) if self.inner else None
+        return dataclasses.replace(self, f=min(self.f, f_max), inner=inner)
+
+    def with_impl(self, impl: str) -> "AggregatorSpec":
+        if impl not in ("fused", "gather"):
+            raise ValueError(f"impl must be fused|gather, got {impl!r}")
+        return dataclasses.replace(self, impl=impl)
+
+    def with_impl_hyper(self, **kw) -> "AggregatorSpec":
+        d = get_aggregator_def(self.name)
+        merged = dict(self.impl_hyper)
+        for k, v in kw.items():
+            if k not in d.impl_keys:
+                raise ValueError(
+                    f"{self.name}: {k!r} is not an impl key "
+                    f"(allowed: {sorted(d.impl_keys)})")
+            merged[k] = v
+        return dataclasses.replace(self,
+                                   impl_hyper=tuple(sorted(merged.items())))
+
+    def with_impl_hyper_if_supported(self, **kw) -> "AggregatorSpec":
+        """Set impl-only keys on this spec AND every nested inner spec,
+        wherever the rule declares them — a no-op elsewhere.  This is how
+        loop-level knobs (``agg_dtype`` -> ``native_dtype``) reach the rule
+        that actually executes inside composition wrappers."""
+        d = get_aggregator_def(self.name)
+        inner = (self.inner.with_impl_hyper_if_supported(**kw)
+                 if self.inner else None)
+        spec = dataclasses.replace(self, inner=inner)
+        supported = {k: v for k, v in kw.items() if k in d.impl_keys}
+        return spec.with_impl_hyper(**supported) if supported else spec
+
+    # -- state protocol ---------------------------------------------------
+    def init_state(self, proto):
+        """Initial aggregator state for a single-agent gradient prototype
+        (pytree without the agent axis).  {} for stateless rules."""
+        d = get_aggregator_def(self.name)
+        state = d.init_state_fn(self, proto) if d.init_state_fn else {}
+        if self.inner is not None and self.inner.stateful:
+            state = dict(state)
+            state["inner"] = self.inner.init_state(proto)
+        return state
+
+    def update_state(self, state, agg):
+        """Post-step state transition given the aggregate just produced."""
+        d = get_aggregator_def(self.name)
+        inner_state = None
+        if self.inner is not None and self.inner.stateful:
+            inner_state = self.inner.update_state(state["inner"], agg)
+        new = (d.update_state_fn(self, state, agg)
+               if d.update_state_fn else dict(state))
+        if inner_state is not None:
+            new = dict(new)
+            new["inner"] = inner_state
+        return new
+
+    # -- the one entry point ----------------------------------------------
+    def aggregate(self, grads, mask=None, weights=None, state=None):
+        """Aggregate per-agent gradients (leading axis = agent).
+
+        ``mask``    (n,) bool — rows that actually arrived (None = all);
+        ``weights`` (n,) float — per-agent multipliers (staleness
+                    discounts); zeroed where ``mask`` is False;
+        ``state``   pytree from :meth:`init_state` for stateful rules.
+
+        mask=None and weights=None is the synchronous case (legacy
+        ``tree_aggregate``); otherwise the masked/weighted semantics of
+        the legacy ``tree_masked_aggregate`` apply, bit-for-bit."""
+        d = get_aggregator_def(self.name)
+        if self.stateful and state is None:
+            raise ValueError(
+                f"{self.describe()} is stateful: pass "
+                "state=spec.init_state(proto) (called on THIS spec — for "
+                "composed specs it nests the inner state correctly)")
+        if d.custom_fn is not None:
+            return d.custom_fn(self, grads, mask, weights, state)
+        if mask is None and weights is None:
+            return _sync_aggregate(self, d, grads, state)
+        if not d.caps.masked_capable:
+            raise ValueError(f"{self.name} does not support masked "
+                             f"aggregation")
+        if mask is None:
+            mask = jnp.ones((_n_agents(grads),), bool)
+        if d.masked_fn is not None:
+            return d.masked_fn(self, grads, mask, weights, state)
+        return _masked_aggregate(self, d, grads, mask, weights, state)
+
+    def weights(self, grads, state=None):
+        """Per-agent weights w with filter(g) == sum_i w_i g_i (exact) —
+        only for weight-decomposable rules (legacy ``filter_weights``)."""
+        d = get_aggregator_def(self.name)
+        if d.weights_fn is None:
+            raise ValueError(f"{self.name} is not weight-decomposable")
+        if d.caps.stateful and state is None:
+            raise ValueError(
+                f"{self.name} is stateful: pass state=spec.init_state(...)")
+        return d.weights_fn(self, grads, state)
+
+
+def make_spec(name: str, f: int = 0, impl: str = "fused",
+              inner: AggregatorSpec | None = None, n: int | None = None,
+              **hyper) -> AggregatorSpec:
+    """Build a validated :class:`AggregatorSpec`.
+
+    Unknown hyper keys raise HERE (not deep inside jit); impl-only keys
+    (``native_dtype``) are split off once into ``impl_hyper``; state-like
+    keys (``server_grad``) must be threaded via ``state=`` instead.  When
+    ``n`` is given, static plans (MDA subset tables, trim counts) are
+    precomputed at build time."""
+    d = get_aggregator_def(name)
+    if impl not in ("fused", "gather"):
+        raise ValueError(f"impl must be fused|gather, got {impl!r}")
+    if f < 0:
+        raise ValueError(f"f must be >= 0, got {f}")
+    if d.is_wrapper and inner is None:
+        raise ValueError(f"{name} is a composition wrapper: pass inner=")
+    if not d.is_wrapper and inner is not None:
+        raise ValueError(f"{name} takes no inner spec")
+    plain, impl_only = {}, {}
+    for k, v in hyper.items():
+        if k in d.state_keys:
+            raise ValueError(
+                f"{name}: {k!r} is aggregator STATE, not a hyper-parameter "
+                f"— pass it via state= (see AggregatorSpec.init_state)")
+        if k in d.impl_keys:
+            impl_only[k] = v
+        elif k in d.hyper_keys:
+            plain[k] = v
+        else:
+            raise ValueError(
+                f"{name}: unknown hyper-parameter {k!r} "
+                f"(allowed: {sorted(d.hyper_keys | d.impl_keys)})")
+    spec = AggregatorSpec(name=name, f=f,
+                          hyper=tuple(sorted(plain.items())), impl=impl,
+                          impl_hyper=tuple(sorted(impl_only.items())),
+                          inner=inner, n=n)
+    if n is not None:
+        _warm_plan(spec, n)
+    return spec
+
+
+def _warm_plan(spec: AggregatorSpec, n: int):
+    """Precompute per-(n, f) static work at spec-build time."""
+    if spec.name == "mda":
+        mda_combos(n, spec.f)
+    if spec.name == "trimmed_mean":
+        trim_count(n, spec.f, spec.hp("beta"))
+    if spec.inner is not None:
+        _warm_plan(spec.inner, n)
+
+
+# ---------------------------------------------------------------------------
+# engine: synchronous path (legacy tree_aggregate, bit-for-bit)
+
+
+def _sync_aggregate(spec, d, grads, state):
+    if spec.impl == "gather":
+        stack = tree_stack_ravel(
+            jax.tree.map(lambda l: l.astype(jnp.float32), grads))
+        hyper = {k: v for k, v in spec.hyper if k in d.gather_keys}
+        if d.gather_state_fn is not None:
+            hyper.update(d.gather_state_fn(spec, state))
+        return tree_unravel_like(d.dense_fn(stack, spec.f, **hyper), grads)
+    if d.caps.coordwise:
+        return d.tree_fn(spec, grads, state)
+    if d.caps.weight_decomposable:
+        return tree_weighted_sum(grads, d.weights_fn(spec, grads, state))
+    if d.caps.iterative:
+        return d.tree_fn(spec, grads, state)
+    raise ValueError(f"{spec.name}: no fused path registered")
+
+
+# ---------------------------------------------------------------------------
+# engine: masked / staleness-weighted path (legacy tree_masked_aggregate)
+
+
+def _masked_prelude(grads, mask, weights):
+    mask = mask.astype(bool)
+    mf = mask.astype(jnp.float32)
+    w = mf if weights is None else weights.astype(jnp.float32) * mf
+    cnt = jnp.maximum(jnp.sum(mf), 1.0)
+    tot = jnp.maximum(jnp.sum(w), 1e-30)
+    return mask, w, cnt, tot
+
+
+def _masked_aggregate(spec, d, grads, mask, weights, state):
+    """Robust aggregation over a *varying subset* of agents with per-agent
+    weights.  The rules are fixed-n: absent rows are *imputed* with the
+    weighted mean of the arrived rows, so they sit at the current consensus
+    and cannot shift any order statistic outward, and the stack keeps one
+    jit shape across rounds.  Weights fold in exactly where each rule class
+    admits them:
+
+      * weight-decomposable — rule weights on the imputed stack, times the
+        per-agent weights, renormalized (imputed rows carry the average
+        arrived weight so a selection landing on them is neutral);
+      * coordinate-wise / iterative — rule on the imputed stack, scaled by
+        the mean weight of arrived rows (a staleness-adaptive step size).
+
+    With mask all-True and weights all-one this reduces to the synchronous
+    path up to exact-arithmetic no-ops."""
+    mask, w, cnt, tot = _masked_prelude(grads, mask, weights)
+    wn = w / tot
+    mean_sel = tree_weighted_sum(grads, wn)
+    imputed = tree_where_agents(
+        mask, grads,
+        jax.tree.map(lambda m, l: jnp.broadcast_to(
+            m.astype(l.dtype)[None], l.shape), mean_sel, grads))
+    if d.caps.weight_decomposable and spec.impl == "fused":
+        # imputed rows carry the average arrived weight: a rule selecting
+        # one (it equals the weighted consensus) stays a valid update
+        row_w = jnp.where(mask, w, tot / cnt)
+        fw = d.weights_fn(spec, imputed, state) * row_w
+        fw = fw / jnp.maximum(jnp.sum(fw), 1e-30)
+        return tree_weighted_sum(imputed, fw)
+    agg = _sync_aggregate(spec, d, imputed, state)
+    scale = tot / cnt                      # <= 1, == 1 when all fresh
+    return jax.tree.map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), agg)
+
+
+# ---------------------------------------------------------------------------
+# fused per-rule implementations (ported verbatim from the legacy module)
+
+
+def _w_mean(spec, grads, state):
+    n = _n_agents(grads)
+    return jnp.full((n,), 1.0 / n)
+
+
+def _mean_masked(spec, grads, mask, weights, state):
+    """Exact weighted mean of the arrived rows (no imputation needed)."""
+    _, w, _, tot = _masked_prelude(grads, mask, weights)
+    return tree_weighted_sum(grads, w / tot)
+
+
+def _w_cge(spec, grads, state):
+    n, f = _n_agents(grads), spec.f
+    norms = jnp.sqrt(tree_sqnorms(grads))
+    _, idx = jax.lax.top_k(-norms, n - f)
+    w = jnp.zeros((n,)).at[idx].set(1.0)
+    return w / (n - f) if spec.hp("normalize", True) else w
+
+
+def _w_cgc(spec, grads, state):
+    n, f = _n_agents(grads), spec.f
+    norms = jnp.sqrt(tree_sqnorms(grads))
+    tau = jnp.sort(norms)[n - f - 1]
+    w = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+    return w / n if spec.hp("normalize", True) else w
+
+
+def _w_zeno(spec, grads, state):
+    n, f = _n_agents(grads), spec.f
+    v = state["server_grad"]
+    rho = spec.hp("rho", 1e-3)
+    lr = spec.hp("lr", 1.0)
+    score = lr * tree_dot(grads, v) - rho * tree_sqnorms(grads)
+    _, idx = jax.lax.top_k(score, n - f)
+    return jnp.zeros((n,)).at[idx].set(1.0 / (n - f))
+
+
+def _zeno_gather_state(spec, state):
+    return {"server_grad": tree_stack_ravel(
+        jax.tree.map(lambda l: l.astype(jnp.float32)[None],
+                     state["server_grad"]))[0],
+        **{k: v for k, v in spec.hyper if k in ("rho", "lr")}}
+
+
+def _server_grad_zeros(proto):
+    return {"server_grad": jax.tree.map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), proto)}
+
+
+def _server_grad_ema(state, agg, ema):
+    if not ema:
+        return dict(state)             # externally-maintained v
+    v = jax.tree.map(
+        lambda s, a: (1.0 - ema) * s + ema * a.astype(jnp.float32),
+        state["server_grad"], agg)
+    return {**state, "server_grad": v}
+
+
+def _zeno_init_state(spec, proto):
+    if not spec.hp("ema", 0.0):
+        # classic Zeno has no self-maintained state: with ema=0 the zeros
+        # this returns would FREEZE and the defense silently degrades to
+        # norm filtering.  Either set ema>0 (EMA of own aggregates) or
+        # build the state dict yourself with a real validation gradient:
+        # state = {"server_grad": v}.
+        raise ValueError(
+            "zeno with ema=0 needs an externally maintained validation "
+            "gradient: pass state={'server_grad': v} yourself, or set "
+            "ema>0 to self-maintain it from past aggregates")
+    return _server_grad_zeros(proto)
+
+
+def _zeno_update_state(spec, state, agg):
+    return _server_grad_ema(state, agg, spec.hp("ema", 0.0))
+
+
+def _w_krum(spec, grads, state):
+    n = _n_agents(grads)
+    d2 = _gram_to_d2(tree_gram(grads))
+    s = D.krum_scores(d2, spec.f)
+    return jax.nn.one_hot(jnp.argmin(s), n)
+
+
+def _w_multi_krum(spec, grads, state):
+    n = _n_agents(grads)
+    m = spec.hp("m", 2)
+    d2 = _gram_to_d2(tree_gram(grads))
+    s = D.krum_scores(d2, spec.f)
+    _, idx = jax.lax.top_k(-s, m)
+    return jnp.zeros((n,)).at[idx].set(1.0 / m)
+
+
+def _w_m_krum(spec, grads, state):
+    n, f = _n_agents(grads), spec.f
+    m = spec.hp("m", 2)
+    d2 = _gram_to_d2(tree_gram(grads))
+
+    def body(carry, _):
+        mask, w = carry
+        s = D.krum_scores(d2, f, mask=mask)
+        i = jnp.argmin(s)
+        return (mask.at[i].set(False), w.at[i].set(1.0 / m)), None
+    (_, w), _ = jax.lax.scan(
+        body, (jnp.ones((n,), bool), jnp.zeros((n,))), None, length=m)
+    return w
+
+
+def _w_mda(spec, grads, state):
+    n, f = _n_agents(grads), spec.f
+    combos = mda_combos(n, f)
+    d2 = _gram_to_d2(tree_gram(grads))
+    sub = d2[combos[:, :, None], combos[:, None, :]]
+    best = jnp.asarray(combos)[jnp.argmin(jnp.max(sub, axis=(1, 2)))]
+    return jnp.zeros((n,)).at[best].set(1.0 / (n - f))
+
+
+# -- leaf-wise coordinate rules (fused path — exactly shardable) ------------
+#
+# Implemented natively on the N-d leaves (agent axis 0).  NO reshape to
+# (n, -1): flattening merges sharded/unsharded dims and forces the SPMD
+# partitioner to re-gather the whole gradient stack.  The sort itself still
+# needs the agent axis local (one all-gather along the agent mesh axes) —
+# that is the survey's inherent aggregation cost; everything else stays
+# sharded.
+
+
+def _mean_closest_nd(l, center, k):
+    """Per-coordinate mean of the k values closest to ``center``."""
+    dist = jnp.abs(l.astype(jnp.float32) - center[None].astype(jnp.float32))
+    idx = jnp.argsort(dist, axis=0)[:k]
+    vals = jnp.take_along_axis(l.astype(jnp.float32), idx, axis=0)
+    return jnp.mean(vals, axis=0)
+
+
+def _leafwise(spec, grads, state):
+    name = spec.name
+    native = spec.impl_hyper_dict.get("native_dtype")
+
+    def leaf(l):
+        n = l.shape[0]
+        f = spec.f
+        x = l if native else l.astype(jnp.float32)
+        if name == "coordinate_median":
+            out = jnp.median(x, axis=0)
+        elif name == "trimmed_mean":
+            b = trim_count(n, f, spec.hp("beta"))
+            s = jnp.sort(x, axis=0)
+            kept = s[b:n - b] if b else s
+            # native_dtype: keep the mean in the exchange dtype too, else the
+            # partitioner hoists the fp32 convert BEFORE the agent gather and
+            # the halved-bytes exchange never materializes
+            out = jnp.mean(kept if native else kept.astype(jnp.float32),
+                           axis=0)
+        elif name == "phocas":
+            s = jnp.sort(x, axis=0)
+            b = min(f, (n - 1) // 2)
+            tm = jnp.mean((s[b:n - b] if b else s).astype(jnp.float32),
+                          axis=0)
+            out = _mean_closest_nd(x, tm, n - f)
+        elif name == "mean_around_median":
+            med = jnp.median(x.astype(jnp.float32), axis=0)
+            out = _mean_closest_nd(x, med, n - f)
+        else:
+            raise KeyError(name)
+        return out.astype(l.dtype)
+    return jax.tree.map(leaf, grads)
+
+
+# -- iterative rules on trees ----------------------------------------------
+
+
+def tree_geometric_median(grads, iters: int = 32, eps: float = 1e-8):
+    y = jax.tree.map(lambda l: jnp.mean(l.astype(jnp.float32), axis=0), grads)
+
+    def body(y, _):
+        diff_sq = tree_sqnorms(
+            jax.tree.map(lambda l, c: l.astype(jnp.float32) - c[None], grads,
+                         y))
+        w = 1.0 / jnp.maximum(jnp.sqrt(diff_sq), eps)
+        w = w / jnp.sum(w)
+        y = jax.tree.map(
+            lambda l: jnp.sum(
+                l.astype(jnp.float32)
+                * w.reshape((-1,) + (1,) * (l.ndim - 1)), axis=0),
+            grads)
+        return y, None
+    y, _ = jax.lax.scan(body, y, None, length=iters)
+    return jax.tree.map(lambda c, l: c.astype(l.dtype), y, grads)
+
+
+def _t_geometric_median(spec, grads, state):
+    return tree_geometric_median(
+        grads, iters=spec.hp("iters", 32),
+        eps=spec.hp("eps", spec.hp("nu", 1e-8)))
+
+
+def tree_median_of_means(grads, f, num_groups=None, **gm_kw):
+    n = _n_agents(grads)
+    k = num_groups if num_groups else (min(n, 2 * f + 1) if f else n)
+    while n % k:
+        k += 1
+    means = jax.tree.map(
+        lambda l: jnp.mean(
+            l.astype(jnp.float32).reshape((k, n // k) + l.shape[1:]), axis=1),
+        grads)
+    return tree_geometric_median(means, **gm_kw)
+
+
+def _t_median_of_means(spec, grads, state):
+    return tree_median_of_means(grads, spec.f,
+                                num_groups=spec.hp("num_groups"))
+
+
+def tree_bulyan(grads, f):
+    """Bulyan on trees: krum-based selection from the Gram matrix, then
+    leaf-wise coordinate stage with a global selection mask."""
+    n = _n_agents(grads)
+    theta = n - 2 * f
+    d2 = _gram_to_d2(tree_gram(grads))
+
+    def body(carry, _):
+        mask, sel = carry
+        s = D.krum_scores(d2, f, mask=mask)
+        i = jnp.argmin(s)
+        return (mask.at[i].set(False), sel.at[i].set(True)), None
+    (_, sel), _ = jax.lax.scan(
+        body, (jnp.ones((n,), bool), jnp.zeros((n,), bool)), None,
+        length=theta)
+
+    beta = max(theta - 2 * f, 1)
+
+    def leaf(l):
+        flat = l.astype(jnp.float32).reshape(n, -1)
+        med = D._masked_median(flat, sel)
+        big = jnp.asarray(jnp.inf, flat.dtype)
+        dist = jnp.where(sel[:, None], jnp.abs(flat - med[None]), big)
+        _, idx = jax.lax.top_k(-dist.T, beta)
+        vals = jnp.take_along_axis(flat.T, idx, axis=1)
+        return jnp.mean(vals, axis=1).reshape(l.shape[1:]).astype(l.dtype)
+    return jax.tree.map(leaf, grads)
+
+
+def _t_bulyan(spec, grads, state):
+    return tree_bulyan(grads, spec.f)
+
+
+# ---------------------------------------------------------------------------
+# built-in registrations — survey Table 2 + Zeno (the registry IS the
+# capability table; the legacy COORDWISE/WEIGHTED/ITERATIVE constants are
+# derived views over these caps)
+
+_T2 = ("table2",)
+
+_register_plain(
+    "mean",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    dense_fn=D.mean, weights_fn=_w_mean, masked_fn=_mean_masked, tags=_T2)
+_register_plain(
+    "krum",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    dense_fn=D.krum, weights_fn=_w_krum, tags=_T2)
+_register_plain(
+    "multi_krum",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    hyper=("m",), gather=("m",),
+    dense_fn=D.multi_krum, weights_fn=_w_multi_krum, tags=_T2)
+_register_plain(
+    "m_krum",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    hyper=("m",), gather=("m",),
+    dense_fn=D.m_krum, weights_fn=_w_m_krum, tags=_T2)
+_register_plain(
+    "mda",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    dense_fn=D.mda, weights_fn=_w_mda, tags=_T2)
+_register_plain(
+    "cge",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    hyper=("normalize",), gather=("normalize",),
+    dense_fn=D.cge, weights_fn=_w_cge, tags=_T2)
+_register_plain(
+    "cgc",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    hyper=("normalize",), gather=("normalize",),
+    dense_fn=D.cgc, weights_fn=_w_cgc, tags=_T2)
+_register_plain(
+    "zeno",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        stateful=True),
+    hyper=("rho", "lr", "ema"), state_keys=("server_grad",),
+    dense_fn=D.zeno, weights_fn=_w_zeno, gather_state_fn=_zeno_gather_state,
+    init_state=_zeno_init_state, update_state=_zeno_update_state, tags=_T2)
+_register_plain(
+    "coordinate_median",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    impl_keys=("native_dtype",),
+    dense_fn=D.coordinate_median, tree_fn=_leafwise, tags=_T2)
+_register_plain(
+    "trimmed_mean",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    hyper=("beta",), gather=("beta",), impl_keys=("native_dtype",),
+    dense_fn=D.trimmed_mean, tree_fn=_leafwise, tags=_T2)
+_register_plain(
+    "phocas",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    impl_keys=("native_dtype",),
+    dense_fn=D.phocas, tree_fn=_leafwise, tags=_T2)
+_register_plain(
+    "mean_around_median",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    impl_keys=("native_dtype",),
+    dense_fn=D.mean_around_median, tree_fn=_leafwise, tags=_T2)
+_register_plain(
+    "geometric_median",
+    caps=AggregatorCaps(iterative=True, sharding_aware=True),
+    # "nu" kept as a legacy eps alias (the historical fused path accepted
+    # it); the gather path forwards only the dense fn's real kwargs
+    hyper=("iters", "eps", "nu"), gather=("iters", "eps"),
+    dense_fn=D.geometric_median, tree_fn=_t_geometric_median, tags=_T2)
+_register_plain(
+    "rfa",
+    caps=AggregatorCaps(iterative=True, sharding_aware=True),
+    hyper=("iters", "nu", "eps"), gather=("iters", "nu"),
+    dense_fn=D.rfa, tree_fn=_t_geometric_median, tags=_T2)
+_register_plain(
+    "median_of_means",
+    caps=AggregatorCaps(iterative=True, sharding_aware=True),
+    hyper=("num_groups",), gather=("num_groups",),
+    dense_fn=D.median_of_means, tree_fn=_t_median_of_means, tags=_T2)
+_register_plain(
+    "bulyan",
+    caps=AggregatorCaps(iterative=True, sharding_aware=True),
+    hyper=("base",), gather=("base",),
+    # "meta" keeps bulyan out of the derived legacy ITERATIVE constant
+    # (historically it was name-dispatched, not a member of that set)
+    dense_fn=D.bulyan, tree_fn=_t_bulyan, tags=_T2 + ("meta",))
+
+
+# ---------------------------------------------------------------------------
+# delay-adaptive score filter (Zeno++ line) — registered SOLELY through the
+# new API: one decorator, no capability constants, no dispatch chains.
+
+
+def _zeno_pp_init_state(spec, proto):
+    return _server_grad_zeros(proto)
+
+
+def _zeno_pp_update_state(spec, state, agg):
+    return _server_grad_ema(state, agg, spec.hp("ema", 0.2))
+
+
+def _zeno_pp_weights(spec, grads, mask, weights, state):
+    """The (n,) aggregation weights of the delay-adaptive score filter —
+    shared by the custom aggregate path and ``spec.weights``."""
+    n = _n_agents(grads)
+    eps = spec.hp("eps", 1e-12)
+    xi = spec.hp("xi", 0.5)
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    mask, base_w, _, base_tot = _masked_prelude(grads, mask, weights)
+    v = state["server_grad"]
+    v_sq = jnp.maximum(tree_sqnorms(jax.tree.map(lambda l: l[None], v))[0],
+                       0.0)
+    g_norm = jnp.sqrt(jnp.maximum(tree_sqnorms(grads), eps))
+    cos_v = tree_dot(grads, v) / (g_norm * jnp.sqrt(jnp.maximum(v_sq, eps)))
+    # primary reference: the coordinate-wise median over ONLY the
+    # delivered rows (order statistics with +/-inf padding — NO mean
+    # imputation: the delivered mean is attacker-controlled, and imputing
+    # with it would hand the adversary extra rows and flip the median) —
+    # robust at EVERY step, including step 0 when v is still ~0.  The EMA
+    # must never be the sole gatekeeper: it lags the true descent
+    # direction (rejecting honest rows near convergence) and anything
+    # that reaches the aggregate feeds back into it (self-poisoning).
+    cnt_i = jnp.sum(mask).astype(jnp.int32)
+    lo_i = jnp.maximum(cnt_i - 1, 0) // 2
+    hi_i = cnt_i // 2
+
+    def leaf_masked_median(l):
+        m = mask.reshape((-1,) + (1,) * (l.ndim - 1))
+        s = jnp.sort(jnp.where(m, l.astype(jnp.float32), jnp.inf), axis=0)
+        return 0.5 * (jnp.take(s, lo_i, axis=0) + jnp.take(s, hi_i, axis=0))
+
+    ref = jax.tree.map(leaf_masked_median, grads)
+    ref_sq = tree_sqnorms(jax.tree.map(lambda l: l[None], ref))[0]
+    cos_ref = tree_dot(grads, ref) / (
+        g_norm * jnp.sqrt(jnp.maximum(ref_sq, eps)))
+    disc = jnp.where(mask, base_w / jnp.maximum(jnp.max(base_w), eps), 0.0)
+    thresh = xi * (1.0 - jnp.clip(disc, 0.0, 1.0))
+    # norm-sanity gate (Zeno's rho||g||^2 penalty, made scale-free): near
+    # convergence gradients are noise-dominated and alignment alone stops
+    # discriminating — but a scaled attack still stands out by norm, so
+    # rows farther than c_norm x the delivered rows' median norm are
+    # rejected regardless of their cosine
+    c_norm = spec.hp("c_norm", 2.5)
+    s_norm = jnp.sort(jnp.where(mask, g_norm, jnp.inf))
+    med_norm = 0.5 * (s_norm[lo_i] + s_norm[hi_i])
+    sane = g_norm <= c_norm * med_norm
+    # accept: delay-adaptive alignment with the instantaneous robust
+    # reference, OR strong alignment (>= xi, the strictest threshold) with
+    # the historically-honest EMA — the rescue path for stale rows whose
+    # instantaneous alignment has rotated away
+    rescue = (v_sq >= eps) & (cos_v >= xi)
+    w = jnp.where(((cos_ref >= thresh) | rescue) & sane & mask,
+                  base_w, 0.0)
+    tot = jnp.sum(w)
+    # fallback: discounted mean of the norm-sane delivered rows
+    w_sane = jnp.where(sane & mask, base_w, 0.0)
+    t_sane = jnp.sum(w_sane)
+    fallback = jnp.where(t_sane > eps, w_sane / jnp.maximum(t_sane, eps),
+                         base_w / base_tot)
+    return jnp.where(tot > eps, w / jnp.maximum(tot, eps), fallback)
+
+
+@register_aggregator(
+    "zeno_pp",
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        masked_capable=True, stateful=True),
+    hyper=("xi", "ema", "eps", "c_norm"), state_keys=("server_grad",),
+    weights_fn=lambda spec, grads, state: _zeno_pp_weights(
+        spec, grads, None, None, state),
+    init_state=_zeno_pp_init_state, update_state=_zeno_pp_update_state)
+def zeno_pp(spec, grads, mask, weights, state):
+    """Delay-adaptive Zeno++-style score filter.
+
+    The PRIMARY acceptance test scores every delivered gradient against
+    the coordinate-wise median of the delivered rows (a reference that is
+    robust at every step, including step 0):
+
+        accept_i  iff  cos(g_i, median) >= xi * (1 - w_i)
+
+    where w_i in (0, 1] is the caller's staleness discount (1 = fresh):
+    fresh gradients only need to be non-adversarial (threshold ~0), while
+    very stale ones must align strongly with the current consensus
+    direction — the Zeno++/Kardam insight that staleness and Byzantine
+    corruption are the same hazard and the acceptance test must tighten
+    with delay.
+
+    The server additionally keeps a descent-direction estimate v (an EMA
+    of its own past aggregates — the asynchronous analogue of Zeno's
+    validation gradient) as a RESCUE path only: a row rejected by the
+    instantaneous median test is still accepted if it aligns strongly
+    (cos >= xi, the strictest threshold) with v.  The EMA is never the
+    sole gatekeeper — it lags the true descent direction, and anything
+    reaching the aggregate feeds back into it (self-poisoning).
+
+    A norm-sanity gate (rows with ||g_i|| > c_norm x the delivered median
+    norm are rejected regardless of cosine — Zeno's rho||g||^2 penalty
+    made scale-free) covers the near-convergence regime where alignment
+    stops discriminating.  Accepted gradients are averaged with their
+    discounts; if nothing passes, the rule falls back to the discounted
+    mean of the norm-sane rows (a pure-staleness step, never a frozen
+    server)."""
+    wn = _zeno_pp_weights(spec, grads, mask, weights, state)
+    return tree_weighted_sum(grads, wn)
+
+
+# ---------------------------------------------------------------------------
+# composition wrappers — specs that transform, then delegate to spec.inner
+
+
+def _clip_fn(spec, grads, mask, weights, state):
+    """Pre-aggregation norm clipping (static-radius centered clipping):
+    every row is scaled to ||g_i|| <= tau before the inner rule runs."""
+    tau = spec.hp("tau", 1.0)
+    norms = jnp.sqrt(jnp.maximum(tree_sqnorms(grads), 1e-30))
+    scale = jnp.minimum(1.0, tau / norms)
+    clipped_g = jax.tree.map(
+        lambda l: (l.astype(jnp.float32)
+                   * scale.reshape((-1,) + (1,) * (l.ndim - 1))
+                   ).astype(l.dtype), grads)
+    return spec.inner.aggregate(clipped_g, mask=mask, weights=weights,
+                                state=_inner_state(spec, state))
+
+
+def _bucket_fn(spec, grads, mask, weights, state):
+    """Pre-aggregation bucketing (median-of-means stage 1): group-mean the
+    rows in consecutive buckets of ``group_size`` before the inner rule —
+    synchronous delivery only (bucket membership is static)."""
+    if mask is not None or weights is not None:
+        raise ValueError("bucketed: masked aggregation not supported "
+                         "(bucket membership is static)")
+    gs = spec.hp("group_size", 2)
+    n = _n_agents(grads)
+    if n % gs:
+        raise ValueError(f"bucketed: n={n} not divisible by "
+                         f"group_size={gs}")
+    k = n // gs
+
+    def leaf(l):
+        return jnp.mean(
+            l.astype(jnp.float32).reshape((k, gs) + l.shape[1:]),
+            axis=1).astype(l.dtype)
+    means = jax.tree.map(leaf, grads)
+    f_eff = min(spec.inner.f, max((k - 1) // 2, 0))
+    return spec.inner.with_f(f_eff).aggregate(
+        means, state=_inner_state(spec, state))
+
+
+def staleness_discount_table(s, weighting: str = "poly",
+                             power: float = 1.0, gamma: float = 0.7):
+    """Staleness rounds -> discount multipliers (Kardam/Zeno++ line):
+    ``none`` -> 1, ``poly`` -> (1+s)^-power, ``exp`` -> gamma^s.  Plain
+    operators, so it works on NumPy float64 (host-side trace planning)
+    and jnp float32 (in-trace) alike — THE one copy of the table."""
+    if weighting == "none":
+        return s * 0.0 + 1.0
+    if weighting == "poly":
+        return (1.0 + s) ** (-power)
+    if weighting == "exp":
+        return gamma ** s
+    raise KeyError(weighting)
+
+
+def _staleness_fn(spec, grads, mask, weights, state):
+    """Staleness discounting as a spec: ``weights`` here are raw staleness
+    ROUND COUNTS s_i >= 0 (not multipliers); the wrapper converts them to
+    the Kardam/Zeno++-line discounts and delegates."""
+    s = (jnp.zeros((_n_agents(grads),), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    w = staleness_discount_table(s, spec.hp("weighting", "poly"),
+                                 spec.hp("power", 1.0),
+                                 spec.hp("gamma", 0.7))
+    return spec.inner.aggregate(grads, mask=mask, weights=w,
+                                state=_inner_state(spec, state))
+
+
+def _inner_state(spec, state):
+    if spec.inner is not None and spec.inner.stateful:
+        return (state or {}).get("inner")
+    return None
+
+
+register_aggregator(
+    "clipped",
+    caps=AggregatorCaps(masked_capable=True, sharding_aware=True),
+    hyper=("tau",), is_wrapper=True)(_clip_fn)
+register_aggregator(
+    "bucketed",
+    caps=AggregatorCaps(masked_capable=False, sharding_aware=True),
+    hyper=("group_size",), is_wrapper=True)(_bucket_fn)
+register_aggregator(
+    "staleness_discounted",
+    caps=AggregatorCaps(masked_capable=True, sharding_aware=True,
+                        staleness_aware=True),
+    hyper=("weighting", "power", "gamma"), is_wrapper=True)(_staleness_fn)
+
+
+def clipped(inner: AggregatorSpec, tau: float = 1.0) -> AggregatorSpec:
+    return make_spec("clipped", f=inner.f, inner=inner, tau=tau)
+
+
+def bucketed(inner: AggregatorSpec, group_size: int = 2) -> AggregatorSpec:
+    return make_spec("bucketed", f=inner.f, inner=inner,
+                     group_size=group_size)
+
+
+def staleness_discounted(inner: AggregatorSpec, weighting: str = "poly",
+                         power: float = 1.0,
+                         gamma: float = 0.7) -> AggregatorSpec:
+    return make_spec("staleness_discounted", f=inner.f, inner=inner,
+                     weighting=weighting, power=power, gamma=gamma)
+
+
+__all__ = [
+    "AggregatorCaps", "AggregatorDef", "AggregatorSpec",
+    "AggregatorDeprecationWarning", "REGISTRY", "register_aggregator",
+    "get_aggregator_def", "list_aggregators", "make_spec",
+    "clipped", "bucketed", "staleness_discounted",
+    "tree_stack_ravel", "tree_unravel_like", "tree_sqnorms", "tree_gram",
+    "tree_dot", "tree_weighted_sum", "tree_where_agents",
+    "tree_geometric_median", "tree_median_of_means", "tree_bulyan",
+    "mda_combos", "trim_count",
+]

@@ -17,6 +17,12 @@ Combine rules implemented:
                neighbour estimates FARTHEST (euclidean) from own, average the
                rest; designed for fully-connected networks with
                2f-redundancy.
+  * any stateless :class:`~repro.core.aggregators.AggregatorSpec` — every
+    receiver robustly aggregates its in-neighbourhood (self included) with
+    the spec's rule via the masked engine (non-neighbours are masked out),
+    then mixes the result with its own estimate.  This lifts the stateless
+    Table-2 catalogue into the p2p architecture through the one aggregator
+    API (stateful rules have no server to hold their state here).
 
 The data-injection attack of Wu et al. [114] and its detect/localize metric
 are provided for the adversarial-models section (§4.1)."""
@@ -102,6 +108,32 @@ def combine_ce(adj, W, states, f):
 COMBINE = {"plain": combine_plain, "lf": combine_lf, "ce": combine_ce}
 
 
+def make_combine_spec(spec):
+    """Wrap a STATELESS :class:`~repro.core.aggregators.AggregatorSpec` as
+    a p2p combine rule: receiver i aggregates the broadcast estimates over
+    the mask {j : j -> i} ∪ {i} with ``spec`` (absent rows are imputed by
+    the masked engine), then keeps half its own estimate — the conservative
+    mixing the lf/ce dynamics use.  ``spec.f`` is the per-neighbourhood
+    Byzantine budget (the run-level ``f`` argument is ignored).
+
+    Stateful rules (zeno, zeno_pp) are rejected: there is no server in the
+    decentralized architecture to hold their validation state, and per-
+    receiver state threading is not implemented."""
+    if spec.stateful:
+        raise ValueError(
+            f"{spec.name} is stateful and cannot be a p2p combine rule "
+            "(no server-side state in the decentralized architecture); "
+            "use a stateless spec")
+
+    def comb(adj, W, states, f):
+        n = states.shape[0]
+        inc = jnp.asarray(np.asarray(adj, bool).T)        # inc[i, j]: j -> i
+        masks = inc | jnp.eye(n, dtype=bool)              # self included
+        agg = jax.vmap(lambda m: spec.aggregate(states, mask=m))(masks)
+        return 0.5 * states + 0.5 * agg.astype(states.dtype)
+    return comb
+
+
 def _faulted_adj(adj, trace, t):
     """Effective directed adjacency at round t under a FaultTrace: partition
     severs cross-group links, crashed agents neither send nor receive, and a
@@ -126,6 +158,8 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
 
     grad_fn(i, x) -> gradient of Q_i at x (vmapped over agents).
     byz_fn(key, t, states) -> broadcast values of Byzantine agents.
+    combine -> "plain" | "lf" | "ce" or a stateless AggregatorSpec (a
+    registered robust rule applied per in-neighbourhood; spec.f governs).
     fault_schedule -> a compiled :class:`repro.simulator.faults.FaultTrace`
     or an iterable of fault specs (compiled here with ``fault_seed``): the
     graph becomes time-varying — partitions cut links, crash/recover faults
@@ -142,7 +176,10 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
                                        seed=fault_seed))
         assert trace.n_agents == n, (trace.n_agents, n)
     W = metropolis_weights(adj)
-    comb = COMBINE[combine]
+    if isinstance(combine, str):
+        comb = COMBINE[combine]
+    else:                                  # an AggregatorSpec
+        comb = make_combine_spec(combine)
     if byz_mask is None:
         byz_mask = jnp.zeros((n,), bool)
     key = key if key is not None else jax.random.PRNGKey(0)

@@ -73,7 +73,7 @@ def tree_draco_aggregate(grads, r: int, tol: float = 1e-6, mask=None):
     win, groups with no delivery are excluded, and the average renormalizes
     over the surviving groups.  mask=None (or all-True) is the classic
     synchronous code."""
-    from repro.core.aggregation import tree_gram, tree_weighted_sum
+    from repro.core.aggregators import tree_gram, tree_weighted_sum
     n = jax.tree.leaves(grads)[0].shape[0]
     assert n % r == 0
     k = n // r

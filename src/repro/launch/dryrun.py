@@ -62,11 +62,14 @@ def main():
     bz = None
     if (args.filter or args.impl or args.group_size or args.agg_dtype
             or args.reshard or args.remat):
+        from repro.core.aggregators import make_spec
         bz = lambda multi: ByzantineConfig(
             n_agents=32 if multi else 16,
             f=7 if multi else 3,
-            filter_name=args.filter or "trimmed_mean",
-            impl=args.impl or "fused",
+            aggregator=make_spec(args.filter or "trimmed_mean",
+                                 f=7 if multi else 3,
+                                 impl=args.impl or "fused",
+                                 n=32 if multi else 16),
             group_size=args.group_size or 1,
             agg_dtype=args.agg_dtype,
             reshard=args.reshard,

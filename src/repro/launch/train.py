@@ -41,6 +41,7 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.core.aggregators import make_spec
     from repro.data import SyntheticLM
     from repro.optim import adamw, constant, diminishing, sgd
     from repro.training import ByzantineConfig, train_loop
@@ -58,9 +59,13 @@ def main():
     ah = {}
     if args.attack_scale is not None:
         ah = {"scale": args.attack_scale}
+    # the spec is built ONCE here (hyper validated, static plans warmed)
+    # and passed through every layer — no string re-dispatch downstream
+    spec = make_spec(args.filter, f=args.f, impl=args.impl,
+                     n=args.n_agents)
     bz = ByzantineConfig(
-        n_agents=args.n_agents, f=args.f, filter_name=args.filter,
-        impl=args.impl, attack=args.attack, attack_hyper=ah,
+        n_agents=args.n_agents, f=args.f, aggregator=spec,
+        attack=args.attack, attack_hyper=ah,
         momentum_alpha=args.momentum_alpha, draco_r=args.draco_r)
 
     params, history = train_loop(

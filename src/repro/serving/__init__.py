@@ -1,4 +1,5 @@
-from repro.serving.engine import (generate, make_decode_step,
-                                  make_prefill_step)
+from repro.serving.engine import (generate, generate_replicated,
+                                  make_decode_step, make_prefill_step)
 
-__all__ = ["make_prefill_step", "make_decode_step", "generate"]
+__all__ = ["make_prefill_step", "make_decode_step", "generate",
+           "generate_replicated"]

@@ -3,10 +3,16 @@
 ``decode_32k`` / ``long_500k`` dry-run shapes lower ``decode_step`` — ONE new
 token against a seq_len-sized KV (ring) / SSM-state cache.  Ring caches bound
 the 500k-context cache to the attention window for SWA archs; SSM state is
-O(1) — see DESIGN.md for the per-arch applicability."""
-from __future__ import annotations
+O(1) — see DESIGN.md for the per-arch applicability.
 
-import functools
+:func:`generate_replicated` extends the survey's fault model to SERVING: r
+model replicas decode in lock-step and every step's logits are robustly
+aggregated with an :class:`~repro.core.aggregators.AggregatorSpec`, so up
+to ``spec.f`` corrupted replicas (bit-flipped weights, poisoned checkpoint,
+hostile host) cannot steer the sampled token — the serving-side analogue of
+robust gradient aggregation, and the hook the fault-injection schedules
+chaos-test."""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -53,5 +59,52 @@ def generate(cfg, params, prompt_batch, max_new_tokens: int,
         key, sub = jax.random.split(key)
         token, logits, cache = dec(params, token, cache,
                                    sub if sample != "greedy" else None)
+        out.append(token)
+    return jnp.concatenate(out, axis=1)
+
+
+def generate_replicated(cfg, params_stack, prompt_batch,
+                        max_new_tokens: int, aggregator,
+                        seq_capacity: int | None = None, jit: bool = True):
+    """Byzantine-fault-tolerant greedy decoding over r model replicas.
+
+    ``params_stack``: params pytree with a leading replica axis (r, ...) —
+    e.g. ``jax.tree.map(lambda *ls: jnp.stack(ls), *replica_params)``.
+    ``aggregator``: an :class:`~repro.core.aggregators.AggregatorSpec`; the
+    per-step (r, B, V) logit stack is aggregated over the replica axis, so
+    any ``spec.f`` corrupted replicas are filtered before argmax, and every
+    replica's cache advances with the agreed token.
+
+    Returns (B, max_new_tokens) int32, identical to :func:`generate` on the
+    clean params when <= f replicas are corrupted and the rule tolerates f.
+    """
+    B, T = prompt_batch["tokens"].shape
+    cap = seq_capacity or (T + max_new_tokens)
+
+    def rep_prefill(p):
+        cache = init_cache(cfg, p, B, cap, prompt_batch)
+        return prefill(cfg, p, prompt_batch, cache)
+
+    def rep_decode(p, token, cache):
+        return decode_step(cfg, p, token, cache)
+
+    vpre = jax.vmap(rep_prefill)
+    vdec = jax.vmap(rep_decode, in_axes=(0, None, 0))
+
+    def agree(logits_stack):                       # (r, B, V) -> (B,) token
+        agg = aggregator.aggregate(logits_stack.astype(jnp.float32))
+        return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+
+    if jit:
+        vpre = jax.jit(vpre)
+        vdec = jax.jit(vdec)
+        agree = jax.jit(agree)
+
+    logits, caches = vpre(params_stack)
+    token = agree(logits)[:, None]
+    out = [token]
+    for _ in range(max_new_tokens - 1):
+        logits, caches = vdec(params_stack, token, caches)
+        token = agree(logits)[:, None]
         out.append(token)
     return jnp.concatenate(out, axis=1)

@@ -12,9 +12,12 @@ Pipeline per server step t (one parameter version):
      params and write them into the in-flight buffer (their delivery may
      land many versions later);
   3. delivered gradients are aggregated with the robust filter catalogue via
-     :func:`repro.core.aggregation.tree_masked_aggregate`, weighted by a
-     staleness discount; if the quorum was missed (stragglers/crashes) the
-     loop can fall back to Draco-style gradient coding
+     the config's :class:`~repro.core.aggregators.AggregatorSpec`
+     (``spec.aggregate(sent, mask=..., weights=...)``), weighted by a
+     staleness discount; stateful rules (Zeno, the delay-adaptive
+     ``zeno_pp``) have their state threaded explicitly through the jitted
+     step; if the quorum was missed (stragglers/crashes) the loop can fall
+     back to Draco-style gradient coding
      (:func:`repro.core.redundancy.coding.tree_draco_aggregate` with the
      delivery mask);
   4. the server optimizer applies the update, creating version t+1.
@@ -36,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save
-from repro.core.aggregation import tree_masked_aggregate, tree_where_agents
+from repro.core.aggregators import tree_where_agents
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
 from repro.core.redundancy.coding import tree_draco_aggregate
@@ -66,16 +69,12 @@ class SimConfig:
 
 def staleness_weights(sim: SimConfig, atrace: AsyncTrace) -> np.ndarray:
     """(steps, n) float32 per-delivery weights: staleness discount on
-    contributors, 0 elsewhere."""
+    contributors, 0 elsewhere (the discount table itself lives in
+    :func:`repro.core.aggregators.staleness_discount_table`)."""
+    from repro.core.aggregators import staleness_discount_table
     s = atrace.staleness.astype(np.float64)
-    if sim.staleness_weighting == "none":
-        w = np.ones_like(s)
-    elif sim.staleness_weighting == "poly":
-        w = (1.0 + s) ** (-sim.staleness_power)
-    elif sim.staleness_weighting == "exp":
-        w = sim.staleness_gamma ** s
-    else:
-        raise KeyError(sim.staleness_weighting)
+    w = staleness_discount_table(s, sim.staleness_weighting,
+                                 sim.staleness_power, sim.staleness_gamma)
     return (w * atrace.contrib).astype(np.float32)
 
 
@@ -90,13 +89,15 @@ def plan_arrivals(sim: SimConfig, n_agents: int, steps: int) -> AsyncTrace:
 
 
 def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
-    """Returns async_step(params, opt_state, momentum, buffer, batch, key,
-    refresh, contrib_w, use_coded) -> (params, opt_state, momentum, buffer,
-    metrics).
+    """Returns async_step(params, opt_state, momentum, buffer, agg_state,
+    batch, key, refresh, contrib_w, use_coded) -> (params, opt_state,
+    momentum, buffer, agg_state, metrics).
 
     ``refresh``   (n,) bool  — agents computing a fresh gradient this step;
     ``contrib_w`` (n,) f32   — staleness-discounted delivery weights
                                (0 = not delivered);
+    ``agg_state`` pytree     — aggregator state (``spec.init_state``; {}
+                               for stateless rules), threaded explicitly;
     ``use_coded`` () bool    — quorum missed: aggregate with the gradient
                                code over delivered rows instead of the
                                filter (requires ``fallback_r``)."""
@@ -104,12 +105,25 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
         if bz.attack != "none" else None
     byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
+    spec = bz.resolve_spec()
+    if spec.staleness_aware:                 # recurses through wrappers
+        # this loop already converts staleness to discount multipliers
+        # (SimConfig.staleness_weighting) — a staleness_aware spec would
+        # re-interpret those multipliers as round counts and INVERT the
+        # discounting, so reject loudly instead of silently mis-weighting
+        raise ValueError(
+            f"{spec.name} consumes raw staleness counts, but the async "
+            "loop passes discount multipliers — configure "
+            "SimConfig.staleness_weighting and use the inner spec instead")
+    if bz.agg_dtype:
+        spec = spec.with_impl_hyper_if_supported(native_dtype=True)
+    stateful = spec.stateful
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
 
-    def async_step(params, opt_state, momentum, buffer, batch, key,
-                   refresh, contrib_w, use_coded):
+    def async_step(params, opt_state, momentum, buffer, agg_state, batch,
+                   key, refresh, contrib_w, use_coded):
         # (2) fresh gradients at the current version for dispatching agents
         losses, grads = jax.vmap(
             jax.value_and_grad(agent_loss), in_axes=(None, 0))(params, batch)
@@ -126,11 +140,9 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
         sent = buffer
         if attack_fn is not None:
             sent = tree_attack(attack_fn, key, sent, byz_mask)
-        filter_hyper = dict(bz.filter_hyper)
         if bz.agg_dtype:
             sent = jax.tree.map(
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), sent)
-            filter_hyper["native_dtype"] = True
 
         mask = contrib_w > 0.0
         if bz.draco_r > 0:
@@ -138,14 +150,15 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
             # delivery (vote among delivered group members)
             agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask)
         else:
-            agg = tree_masked_aggregate(
-                bz.filter_name, sent, bz.f, mask, weights=contrib_w,
-                impl=bz.impl, **filter_hyper)
+            agg = spec.aggregate(sent, mask=mask, weights=contrib_w,
+                                 state=agg_state if stateful else None)
             if fallback_r > 0:
                 coded = tree_draco_aggregate(sent, fallback_r, mask=mask)
                 agg = jax.tree.map(
                     lambda a, c: jnp.where(use_coded, c.astype(a.dtype), a),
                     agg, coded)
+        if stateful:
+            agg_state = spec.update_state(agg_state, agg)
 
         # (4) server-side optimizer
         updates, opt_state = optimizer.update(agg, opt_state, params)
@@ -160,7 +173,7 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
             "loss_all": jnp.mean(losses),
             "grad_norm": gnorm,
         }
-        return params, opt_state, momentum, buffer, metrics
+        return params, opt_state, momentum, buffer, agg_state, metrics
 
     return async_step
 
@@ -180,11 +193,17 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     from repro.training.step import make_train_step
     sim = sim if sim is not None else SimConfig()
     n = bz.n_agents
+    spec = bz.resolve_spec()
+    stateful = spec.stateful
     atrace = plan_arrivals(sim, n, steps)
     contrib_w = staleness_weights(sim, atrace)
-    if (bz.group_size > 1 or bz.reshard) and not atrace.is_synchronous():
+    if (bz.group_size > 1 or bz.reshard) and (stateful
+                                              or not atrace.is_synchronous()):
+        # the general async step implements neither knob — stateful specs
+        # always run it, so don't silently drop grouping/resharding
         raise NotImplementedError(
-            "group_size/reshard perf knobs assume synchronous delivery")
+            "group_size/reshard perf knobs assume the synchronous step "
+            "(synchronous delivery and a stateless aggregator)")
 
     key = jax.random.PRNGKey(seed)
     k_init, k_run = jax.random.split(key)
@@ -197,19 +216,25 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
         momentum = init_momentum(proto)
 
-    step_fn = make_train_step(cfg, bz, optimizer)
+    # stateful aggregators must observe (and update) their state every
+    # step, so they always run the general path; the synchronous train
+    # step stays the stateless fast path
+    step_fn = None if stateful else make_train_step(cfg, bz, optimizer)
     async_fn = make_async_step(cfg, bz, optimizer,
                                fallback_r=sim.coded_fallback_r)
     if jit:
-        step_fn = jax.jit(step_fn)
+        step_fn = jax.jit(step_fn) if step_fn is not None else None
         async_fn = jax.jit(async_fn)
     byz_mask = make_byzantine_mask(n, bz.f)
+    agg_state = (spec.init_state(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        if stateful else {})
 
     # a step is "pure" iff it is exactly the synchronous step: everybody
     # dispatches AND delivers with zero staleness
     pure = (atrace.contrib.all(1) & atrace.refresh.all(1)
             & (atrace.staleness.max(1, initial=0) == 0))
-    if _force_general:
+    if _force_general or stateful:
         pure = np.zeros(steps, bool)
 
     # in-flight gradient buffer (fp32 covers every exchange dtype) and
@@ -242,9 +267,10 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             pending_refresh = np.zeros(n, bool)
             use_coded = bool(not atrace.quorum_met[step]
                              and sim.coded_fallback_r > 0)
-            params, opt_state, momentum, buffer, metrics = async_fn(
-                params, opt_state, momentum, buffer, batch, k_step,
-                jnp.asarray(refresh), jnp.asarray(contrib_w[step]),
+            (params, opt_state, momentum, buffer, agg_state,
+             metrics) = async_fn(
+                params, opt_state, momentum, buffer, agg_state, batch,
+                k_step, jnp.asarray(refresh), jnp.asarray(contrib_w[step]),
                 jnp.asarray(use_coded))
         if step % log_every == 0 or step == steps - 1:
             if metrics is None:

@@ -6,7 +6,13 @@ latency variance and quorum = n make every trace row "pure", and the async
 host loop dispatches pure rows to the exact synchronous train step — so this
 wrapper is bit-for-bit the historical ``train_loop``.  Pass a ``sim=``
 :class:`~repro.simulator.async_loop.SimConfig` to inject crashes,
-stragglers, message loss, or bounded-staleness asynchrony."""
+stragglers, message loss, or bounded-staleness asynchrony.
+
+Robust aggregation flows through the config's
+:class:`~repro.core.aggregators.AggregatorSpec` (``bz.aggregator``, or the
+legacy ``filter_name``/``filter_hyper``/``impl`` triple resolved via
+``bz.resolve_spec()``); stateful specs (zeno, zeno_pp) are routed through
+the async loop's general path, which threads their state."""
 from __future__ import annotations
 
 from repro.simulator.async_loop import SimConfig, async_train_loop

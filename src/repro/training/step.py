@@ -27,7 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import tree_aggregate
+from repro.core.aggregators import AggregatorSpec, make_spec
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import worker_momentum
 from repro.core.redundancy.coding import tree_draco_aggregate
@@ -39,6 +39,9 @@ from repro.optim import apply_updates
 class ByzantineConfig:
     n_agents: int = 16
     f: int = 3
+    # robust aggregation: EITHER a first-class spec (preferred) ...
+    aggregator: Optional[AggregatorSpec] = None
+    # ... or the legacy string triple, resolved to a spec by resolve_spec()
     filter_name: str = "trimmed_mean"
     filter_hyper: dict = field(default_factory=dict)
     impl: str = "fused"                 # fused | gather
@@ -60,6 +63,30 @@ class ByzantineConfig:
     # coordinate-wise filter (beyond-paper collective schedule):
     reshard: bool = False
 
+    def resolve_spec(self) -> AggregatorSpec:
+        """The aggregator actually used by the training loops: the explicit
+        ``aggregator`` spec if set, else the legacy string triple compiled
+        to a spec (hyper validated here, at config time).
+
+        An explicit spec must agree with the config's threat model — a
+        spec built for a different f (or n) would make the defense
+        silently weaker than the configured attack."""
+        if self.aggregator is not None:
+            spec = self.aggregator
+            if spec.f != self.f:
+                raise ValueError(
+                    f"aggregator {spec.describe()} was built for "
+                    f"f={spec.f} but the config declares f={self.f} — "
+                    "build the spec with the same Byzantine budget")
+            if spec.n is not None and spec.n != self.n_agents:
+                raise ValueError(
+                    f"aggregator {spec.describe()} was built for "
+                    f"n={spec.n} but the config declares "
+                    f"n_agents={self.n_agents}")
+            return spec
+        return make_spec(self.filter_name, f=self.f, impl=self.impl,
+                         n=self.n_agents, **self.filter_hyper)
+
 
 def tree_attack(attack_fn, key, grads, byz_mask):
     """Apply a gradient attack leaf-wise (all implemented attacks are
@@ -78,7 +105,12 @@ def tree_attack(attack_fn, key, grads, byz_mask):
 def _group_mean(grads, group_size: int):
     """Median-of-means stage 1 [19]: mean of the *sent* gradients within
     consecutive groups (aligned with mesh data-axis subgroups, so XLA lowers
-    it to subgroup reductions instead of a full agent-stack gather)."""
+    it to subgroup reductions instead of a full agent-stack gather).
+
+    Intentionally NOT the `bucketed` composition wrapper: here the group
+    mean must run BEFORE the reshard sharding constraint so the measured
+    collective schedule applies to the grouped (k, ...) stack; standalone
+    users should prefer ``aggregators.bucketed(spec, group_size)``."""
     def leaf(l):
         n = l.shape[0]
         k = n // group_size
@@ -113,6 +145,19 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
         if bz.attack != "none" else None
     byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
+    spec = bz.resolve_spec()
+    if spec.stateful:
+        raise NotImplementedError(
+            f"{spec.name} is stateful — run it through the async loop "
+            "(repro.simulator.async_loop threads aggregator state)")
+    if bz.agg_dtype:
+        # sort/exchange in agg_dtype wherever the rule supports it —
+        # reaches through composition wrappers to the executing rule
+        # (weighted rules accumulate their statistics in fp32 regardless)
+        spec = spec.with_impl_hyper_if_supported(native_dtype=True)
+    if bz.group_size > 1:
+        k = bz.n_agents // bz.group_size
+        spec = spec.with_f_capped(max((k - 1) // 2, 0))
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
@@ -140,25 +185,19 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
         if attack_fn is not None:
             grads = tree_attack(attack_fn, key, grads, byz_mask)
 
-        # (4) robust aggregation (+ §Perf variants)
-        filter_hyper = dict(bz.filter_hyper)
+        # (4) robust aggregation via the AggregatorSpec (+ §Perf variants)
         if bz.agg_dtype:
             grads = jax.tree.map(
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), grads)
-            filter_hyper["native_dtype"] = True   # sort/exchange in agg_dtype
-        f_eff = bz.f
         if bz.group_size > 1:
             grads = _group_mean(grads, bz.group_size)
-            k = bz.n_agents // bz.group_size
-            f_eff = min(bz.f, max((k - 1) // 2, 0))
         if bz.reshard and mesh_sizes:
             grads = jax.lax.with_sharding_constraint(
                 grads, _reshard_specs(grads, mesh_sizes))
         if bz.draco_r > 0:
             agg = tree_draco_aggregate(grads, bz.draco_r)
         else:
-            agg = tree_aggregate(bz.filter_name, grads, f_eff,
-                                 impl=bz.impl, **filter_hyper)
+            agg = spec.aggregate(grads)
 
         # (5) server-side optimizer
         updates, opt_state = optimizer.update(agg, opt_state, params)

@@ -1,9 +1,14 @@
-"""gather (paper-faithful) vs fused (stats->weights) aggregation equality."""
+"""gather (paper-faithful) vs fused (stats->weights) aggregation equality,
+exercised through the LEGACY string API on purpose (shim coverage — the
+spec-API equivalent lives in test_aggregator_spec.py)."""
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core.aggregation import tree_aggregate
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.core.aggregators.AggregatorDeprecationWarning")
 
 NAMES = ["mean", "krum", "multi_krum", "m_krum", "cge", "cgc", "mda",
          "coordinate_median", "trimmed_mean", "phocas", "mean_around_median",

@@ -1,0 +1,410 @@
+"""The unified AggregatorSpec API (repro.core.aggregators).
+
+1. Equivalence suite: ``spec.aggregate`` is BIT-FOR-BIT identical to the
+   legacy string API (``tree_aggregate`` / ``tree_masked_aggregate`` /
+   ``filter_weights``) for every Table-2 rule, in both impls, with and
+   without mask/weights.
+2. Build-time hygiene: unknown hyper keys raise at spec construction,
+   impl-only keys are split once, state must arrive via ``state=``.
+3. State protocol + the delay-adaptive ``zeno_pp`` rule (registered solely
+   through ``register_aggregator`` — no constants, no dispatch chains).
+4. Composition wrappers (clipped / bucketed / staleness_discounted).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as legacy
+from repro.core.aggregators import (AggregatorDeprecationWarning, REGISTRY,
+                                    bucketed, clipped, get_aggregator_def,
+                                    list_aggregators, make_spec,
+                                    staleness_discounted)
+
+NAMES = ["mean", "krum", "multi_krum", "m_krum", "cge", "cgc", "mda",
+         "coordinate_median", "trimmed_mean", "phocas", "mean_around_median",
+         "geometric_median", "rfa", "median_of_means", "bulyan", "zeno"]
+
+# the parity tests exercise the deprecated API on purpose
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.core.aggregators.AggregatorDeprecationWarning")
+
+N = 12
+
+
+@pytest.fixture(scope="module")
+def grads():
+    key = jax.random.PRNGKey(0)
+    return {
+        "a": jax.random.normal(key, (N, 5, 7)),
+        "b": {"c": jax.random.normal(jax.random.PRNGKey(1), (N, 11))},
+    }
+
+
+@pytest.fixture(scope="module")
+def server_grad(grads):
+    return jax.tree.map(lambda l: l[0] * 0.1, grads)
+
+
+def assert_trees_bitwise_equal(a, b, ctx=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype, ctx
+        assert np.array_equal(np.asarray(x), np.asarray(y)), ctx
+
+
+# ---------------------------------------------------------------------------
+# 1. equivalence: spec API == legacy string API, bit for bit
+
+
+@pytest.mark.parametrize("impl", ["gather", "fused"])
+@pytest.mark.parametrize("name", NAMES)
+def test_spec_equals_legacy_sync(name, impl, grads, server_grad):
+    f = 2
+    hyper = {"server_grad": server_grad} if name == "zeno" else {}
+    state = {"server_grad": server_grad} if name == "zeno" else None
+    ref = legacy.tree_aggregate(name, grads, f, impl=impl, **hyper)
+    out = make_spec(name, f=f, impl=impl, n=N).aggregate(grads, state=state)
+    assert_trees_bitwise_equal(ref, out, (name, impl))
+
+
+@pytest.mark.parametrize("impl", ["gather", "fused"])
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("with_weights", [False, True])
+def test_spec_equals_legacy_masked(name, impl, with_weights, grads,
+                                   server_grad):
+    f = 2
+    mask = jnp.asarray([True] * 9 + [False] * 3)
+    weights = jnp.linspace(1.0, 0.4, N) if with_weights else None
+    hyper = {"server_grad": server_grad} if name == "zeno" else {}
+    state = {"server_grad": server_grad} if name == "zeno" else None
+    ref = legacy.tree_masked_aggregate(name, grads, f, mask,
+                                       weights=weights, impl=impl, **hyper)
+    out = make_spec(name, f=f, impl=impl, n=N).aggregate(
+        grads, mask=mask, weights=weights, state=state)
+    assert_trees_bitwise_equal(ref, out, (name, impl, with_weights))
+
+
+@pytest.mark.parametrize("name", ["mean", "krum", "cge", "mda", "zeno"])
+def test_spec_weights_equal_legacy(name, grads, server_grad):
+    hyper = {"server_grad": server_grad} if name == "zeno" else {}
+    state = {"server_grad": server_grad} if name == "zeno" else None
+    ref = legacy.filter_weights(name, grads, 2, **hyper)
+    out = make_spec(name, f=2).weights(grads, state=state)
+    assert np.array_equal(np.asarray(ref), np.asarray(out)), name
+
+
+def test_legacy_api_warns(grads):
+    with pytest.warns(AggregatorDeprecationWarning):
+        legacy.tree_aggregate("mean", grads, 0)
+    with pytest.warns(AggregatorDeprecationWarning):
+        legacy.filter_weights("mean", grads, 0)
+
+
+def test_spec_under_jit(grads):
+    spec = make_spec("trimmed_mean", f=2, n=N)
+    out = jax.jit(lambda g: spec.aggregate(g))(grads)
+    assert jax.tree.structure(out) == jax.tree.structure(
+        jax.tree.map(lambda l: l[0], grads))
+
+
+# ---------------------------------------------------------------------------
+# 2. build-time hyper hygiene
+
+
+def test_unknown_hyper_raises_at_build():
+    with pytest.raises(ValueError, match="unknown hyper-parameter"):
+        make_spec("krum", f=2, bogus=1)
+    with pytest.raises(ValueError, match="unknown hyper-parameter"):
+        make_spec("trimmed_mean", f=2, betta=0.2)   # typo caught early
+
+
+def test_unknown_aggregator_raises():
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        make_spec("krummm", f=2)
+
+
+def test_impl_keys_split_once():
+    spec = make_spec("trimmed_mean", f=2, beta=0.25, native_dtype=True)
+    assert spec.hyper == (("beta", 0.25),)
+    assert spec.impl_hyper == (("native_dtype", True),)
+    # the gather path never sees impl-only keys (no re-filtering needed)
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 6))
+    a = spec.with_impl("gather").aggregate(g)
+    b = make_spec("trimmed_mean", f=2, beta=0.25,
+                  impl="gather").aggregate(g)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_state_key_as_hyper_raises():
+    with pytest.raises(ValueError, match="STATE"):
+        make_spec("zeno", f=2, server_grad=jnp.zeros((4,)))
+
+
+def test_stateful_without_state_raises(grads):
+    with pytest.raises(ValueError, match="stateful"):
+        make_spec("zeno", f=2).aggregate(grads)
+
+
+def test_spec_is_hashable_and_frozen():
+    spec = make_spec("krum", f=2)
+    hash(spec)                                   # static jit closure key
+    with pytest.raises(Exception):
+        spec.f = 3
+
+
+def test_capability_flags_cover_catalogue():
+    for name in NAMES:
+        caps = get_aggregator_def(name).caps
+        assert caps.masked_capable, name
+        assert (caps.coordwise or caps.weight_decomposable
+                or caps.iterative), name
+    assert set(list_aggregators("table2")) == set(NAMES)
+    # derived legacy views stay consistent with the registry
+    assert legacy.COORDWISE == {n for n in NAMES
+                               if get_aggregator_def(n).caps.coordwise}
+
+
+# ---------------------------------------------------------------------------
+# 3. state protocol + zeno_pp (the ROADMAP delay-adaptive follow-up)
+
+
+def test_zeno_state_protocol(grads, server_grad):
+    spec = make_spec("zeno", f=2, ema=0.5)
+    proto = jax.tree.map(lambda l: l[0], grads)
+    state = spec.init_state(proto)
+    state["server_grad"] = server_grad
+    agg = spec.aggregate(grads, state=state)
+    new = spec.update_state(state, agg)
+    # ema=0.5 moves the server gradient toward the aggregate
+    for v0, v1, a in zip(jax.tree.leaves(state["server_grad"]),
+                         jax.tree.leaves(new["server_grad"]),
+                         jax.tree.leaves(agg)):
+        np.testing.assert_allclose(np.asarray(v1),
+                                   0.5 * np.asarray(v0)
+                                   + 0.5 * np.asarray(a, np.float32),
+                                   rtol=1e-6)
+
+
+def test_zeno_pp_registered_solely_via_registry():
+    assert "zeno_pp" in REGISTRY
+    # NOT in the dense catalogue nor in any legacy capability constant:
+    from repro.core.filters import FILTERS
+    assert "zeno_pp" not in FILTERS
+    assert "zeno_pp" not in (legacy.COORDWISE | legacy.WEIGHTED
+                             | legacy.ITERATIVE)
+    caps = get_aggregator_def("zeno_pp").caps
+    assert caps.stateful and caps.masked_capable
+
+
+def test_zeno_pp_rejects_misaligned_rows():
+    key = jax.random.PRNGKey(3)
+    d = 32
+    center = jnp.linspace(-1.0, 1.0, d)
+    g = center[None] + 0.05 * jax.random.normal(key, (10, d))
+    g = g.at[:2].set(-8.0 * center[None])          # 2 adversarial rows
+    spec = make_spec("zeno_pp", f=2, xi=0.5)
+    state = {"server_grad": center}                # aligned server estimate
+    out = spec.aggregate(g, state=state)
+    honest_mean = jnp.mean(g[2:], axis=0)
+    assert float(jnp.linalg.norm(out - honest_mean)) < 0.1
+    # stale rows face a stricter test: same rows, heavy staleness discount
+    w = jnp.ones((10,)).at[2].set(1e-3)
+    out_w = spec.aggregate(g, weights=w, state=state)
+    assert bool(jnp.all(jnp.isfinite(out_w)))
+
+
+def test_zeno_pp_bootstrap_is_robust():
+    """An attack active from step 0 (server EMA still zero) must not reach
+    the aggregate: the bootstrap scores against the coordinate-wise median
+    of the delivered rows, so the adversary cannot seed the EMA with its
+    own direction (self-poisoning)."""
+    key = jax.random.PRNGKey(4)
+    d = 32
+    center = jnp.linspace(-1.0, 1.0, d)
+    g = center[None] + 0.05 * jax.random.normal(key, (10, d))
+    g = g.at[:2].set(-4.0 * center[None])          # sign-flip from step 0
+    spec = make_spec("zeno_pp", f=2, xi=0.5)
+    state = spec.init_state(jnp.zeros((d,)))       # v = 0: bootstrap round
+    out = spec.aggregate(g, state=state)
+    honest_mean = jnp.mean(g[2:], axis=0)
+    assert float(jnp.linalg.norm(out - honest_mean)) < 0.1
+    # the EMA that follows is therefore honest-aligned, not attack-aligned
+    new = spec.update_state(state, out)
+    v = new["server_grad"]
+    assert float(v @ center) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# 4. composition wrappers are specs
+
+
+def test_clipped_bounds_large_rows():
+    d = 16
+    center = jnp.ones((d,)) * 0.1
+    g = center[None] + 0.01 * jax.random.normal(jax.random.PRNGKey(5),
+                                                (8, d))
+    g = g.at[0].set(1e6)                           # one huge row
+    spec = clipped(make_spec("mean"), tau=1.0)
+    out = spec.aggregate(g)
+    assert float(jnp.linalg.norm(out - center)) < 0.5
+
+
+def test_bucketed_equals_manual_group_mean(grads):
+    inner = make_spec("coordinate_median", f=2)
+    spec = bucketed(inner, group_size=2)
+    out = spec.aggregate(grads)
+    manual = jax.tree.map(
+        lambda l: jnp.mean(l.astype(jnp.float32).reshape(
+            (N // 2, 2) + l.shape[1:]), axis=1).astype(l.dtype), grads)
+    ref = inner.with_f(min(2, (N // 2 - 1) // 2)).aggregate(manual)
+    assert_trees_bitwise_equal(out, ref)
+
+
+def test_bucketed_rejects_masked(grads):
+    spec = bucketed(make_spec("mean"), group_size=2)
+    with pytest.raises(ValueError, match="masked"):
+        spec.aggregate(grads, mask=jnp.ones((N,), bool))
+
+
+def test_staleness_discounted_matches_manual_weights(grads):
+    inner = make_spec("trimmed_mean", f=2)
+    spec = staleness_discounted(inner, weighting="exp", gamma=0.5)
+    stal = jnp.asarray([0., 0., 1., 2., 3., 0., 1., 0., 2., 0., 4., 0.])
+    mask = jnp.asarray([True] * 10 + [False] * 2)
+    out = spec.aggregate(grads, mask=mask, weights=stal)
+    ref = inner.aggregate(grads, mask=mask, weights=0.5 ** stal)
+    assert_trees_bitwise_equal(out, ref)
+
+
+def test_wrappers_nest(grads):
+    spec = clipped(bucketed(make_spec("trimmed_mean", f=2), group_size=2),
+                   tau=10.0)
+    out = spec.aggregate(grads)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(out))
+    assert "clipped" in spec.describe() and "bucketed" in spec.describe()
+
+
+def test_zeno_without_validation_source_raises_loudly():
+    """init_state for classic Zeno (ema=0) must not hand back a frozen
+    all-zero server gradient — the defense would silently degrade."""
+    with pytest.raises(ValueError, match="validation"):
+        make_spec("zeno", f=2).init_state(jnp.zeros((4,)))
+    # ema > 0: self-maintained EMA state is fine
+    st = make_spec("zeno", f=2, ema=0.3).init_state(jnp.zeros((4,)))
+    assert "server_grad" in st
+
+
+def test_wrapper_over_stateful_inner_threads_nested_state(grads):
+    spec = clipped(make_spec("zeno", f=2, ema=0.5), tau=50.0)
+    assert spec.stateful
+    with pytest.raises(ValueError, match="stateful"):
+        spec.aggregate(grads)                        # guard on the OUTER spec
+    proto = jax.tree.map(lambda l: l[0], grads)
+    state = spec.init_state(proto)                   # nests the inner state
+    agg = spec.aggregate(grads, state=state)
+    new = spec.update_state(state, agg)
+    moved = sum(float(jnp.sum(jnp.abs(l))) for l in
+                jax.tree.leaves(new["inner"]["server_grad"]))
+    assert moved > 0.0
+
+
+def test_impl_hyper_reaches_through_wrappers():
+    spec = clipped(make_spec("trimmed_mean", f=2), tau=5.0)
+    deep = spec.with_impl_hyper_if_supported(native_dtype=True)
+    assert deep.inner.impl_hyper == (("native_dtype", True),)
+    assert deep.impl_hyper == ()                     # wrapper declares none
+
+
+def test_legacy_shim_tolerates_native_dtype_everywhere(grads):
+    """The legacy gather path stripped native_dtype for every rule — the
+    shim must keep that tolerance (only the spec API proper is strict)."""
+    out = legacy.tree_aggregate("krum", grads, 2, impl="gather",
+                                native_dtype=True)
+    ref = legacy.tree_aggregate("krum", grads, 2, impl="gather")
+    assert_trees_bitwise_equal(out, ref)
+
+
+def test_async_loop_rejects_staleness_aware_spec():
+    from repro.simulator.async_loop import make_async_step
+    from repro.training.step import ByzantineConfig
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=staleness_discounted(
+        make_spec("trimmed_mean", f=2)))
+    with pytest.raises(ValueError, match="staleness"):
+        make_async_step(None, bz, None)
+    # ...including when the staleness wrapper is NESTED inside another
+    nested = clipped(staleness_discounted(make_spec("mean", f=2)), tau=5.0)
+    assert nested.staleness_aware
+    bz2 = ByzantineConfig(n_agents=8, f=2, aggregator=nested)
+    with pytest.raises(ValueError, match="raw staleness"):
+        make_async_step(None, bz2, None)
+
+
+def test_config_rejects_mismatched_spec():
+    """The defense must agree with the declared threat model: an explicit
+    aggregator built for a different f (or n) raises at config time."""
+    from repro.training.step import ByzantineConfig
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=make_spec("krum"))
+    with pytest.raises(ValueError, match="f=0"):
+        bz.resolve_spec()
+    bz = ByzantineConfig(n_agents=8, f=2,
+                         aggregator=make_spec("krum", f=2, n=16))
+    with pytest.raises(ValueError, match="n=16"):
+        bz.resolve_spec()
+
+
+def test_resilience_estimator_rejects_mismatched_spec():
+    from repro.core.resilience import estimate_alpha_f
+    with pytest.raises(ValueError, match="f=0"):
+        estimate_alpha_f(make_spec("krum"), n=10, f=2, trials=2)
+    with pytest.raises(ValueError, match="BUILDING"):
+        estimate_alpha_f(make_spec("krum", f=2), n=10, f=2, trials=2,
+                         iters=3)
+
+
+def test_stateful_spec_rejects_group_size_knob():
+    """group_size/reshard only exist on the synchronous step; a stateful
+    spec forces the general async path, so the combination must raise
+    rather than silently drop the grouping."""
+    import repro.data as _data
+    from repro.simulator.async_loop import async_train_loop
+    from repro.training.step import ByzantineConfig
+    from repro.configs import get_config
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=64)
+    ds = _data.SyntheticLM(vocab_size=64, seq_len=8, n_agents=8,
+                           per_agent_batch=1)
+    bz = ByzantineConfig(n_agents=8, f=2, group_size=2,
+                         aggregator=make_spec("zeno_pp", f=2, n=8))
+    with pytest.raises(NotImplementedError, match="stateless"):
+        async_train_loop(cfg, bz, None, ds, steps=1,
+                         log_fn=lambda *_: None)
+
+
+def test_legacy_nu_alias_still_accepted(grads):
+    out = legacy.tree_aggregate("geometric_median", grads, 2, nu=1e-6)
+    ref = legacy.tree_aggregate("geometric_median", grads, 2, eps=1e-6)
+    assert_trees_bitwise_equal(out, ref)
+
+
+def test_legacy_constants_match_historical_values():
+    assert legacy.COORDWISE == {"coordinate_median", "trimmed_mean",
+                                "phocas", "mean_around_median"}
+    assert legacy.WEIGHTED == {"mean", "krum", "multi_krum", "m_krum",
+                               "cge", "cgc", "mda", "zeno"}
+    assert legacy.ITERATIVE == {"geometric_median", "rfa",
+                                "median_of_means"}
+
+
+def test_register_new_rule_is_one_decorator():
+    """Extensibility contract: a brand-new rule needs ONE registration call
+    and is immediately a first-class spec."""
+    from repro.core.aggregators import AggregatorCaps, register_aggregator
+    name = "test_only_first_row"
+    if name not in REGISTRY:
+        @register_aggregator(name, caps=AggregatorCaps())
+        def _first_row(spec, grads, mask, weights, state):
+            return jax.tree.map(lambda l: l[0], grads)
+    g = {"x": jnp.arange(6.0).reshape(3, 2)}
+    out = make_spec(name).aggregate(g)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(g["x"][0]))

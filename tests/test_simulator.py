@@ -139,6 +139,33 @@ def test_async_under_stragglers_still_converges():
     assert any(m["staleness_mean"] > 0 or m["arrived"] < 8 for m in h)
 
 
+def test_zeno_pp_stateful_spec_through_async_loop():
+    """ROADMAP follow-up: the delay-adaptive Zeno++-style score filter is
+    registered SOLELY through the AggregatorSpec API (one decorator) and
+    flows through the async loop with its server-gradient state threaded
+    through the jitted step — extensibility proof for the new API."""
+    from repro.core.aggregators import make_spec
+    spec = make_spec("zeno_pp", f=2, xi=0.5, ema=0.2, n=8)
+    assert spec.stateful
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
+                         attack="sign_flip",
+                         attack_hyper={"scale": 4.0})
+    sim = SimConfig(faults=(Straggler(dist="lognormal", scale=0.8),),
+                    quorum=6, max_staleness=3, seed=2)
+    _, h = async_train_loop(CFG, bz, OPT(), DS, steps=40, log_every=40,
+                            sim=sim, **SILENT)
+    assert np.isfinite(h[-1]["loss"])
+    assert h[-1]["loss"] < 1.5              # defends where mean diverges
+    # same attack through the undefended mean for contrast
+    bz_mean = ByzantineConfig(n_agents=8, f=2,
+                              aggregator=make_spec("mean", f=2, n=8),
+                              attack="sign_flip",
+                              attack_hyper={"scale": 4.0})
+    _, hm = async_train_loop(CFG, bz_mean, OPT(), DS, steps=40,
+                             log_every=40, sim=sim, **SILENT)
+    assert h[-1]["loss"] < hm[-1]["loss"] + 0.1
+
+
 def test_crash_recover_chaos_run_is_finite():
     bz = ByzantineConfig(n_agents=8, f=0, filter_name="coordinate_median")
     sim = SimConfig(faults=(CrashRecover(rate=0.15, mean_down=2.0),
