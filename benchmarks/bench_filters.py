@@ -1,12 +1,21 @@
 """Benchmark 1 — survey Table 2: the gradient-filter catalogue.
 
-Per registered aggregator: wall-clock per ``spec.aggregate`` call (jitted,
-CPU, fused impl — the path training runs) across (n, d), the asymptotic
-complexity class from Table 2, and the empirical (alpha, f)-resilience flag
-(§3.5).  Mirrors the survey's summary table with measured numbers; every
-rule is reached through the unified :class:`AggregatorSpec` API."""
+Two sections:
+
+  * the Table-2 summary (per registered aggregator: wall-clock per
+    ``spec.aggregate`` call on the default impl, asymptotic complexity
+    class, empirical (alpha, f)-resilience flag);
+  * the IMPL COMPARISON for the kernel-dispatched rules — gather vs fused
+    vs pallas across (n, d), the series the perf trajectory tracks now
+    that ``make_spec`` auto-selects the Pallas path.
+
+``python benchmarks/bench_filters.py`` writes ``BENCH_filters.json``;
+``benchmarks/run.py`` (PYTHONPATH=src:.) consumes :func:`run` like every
+other bench section.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -14,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.aggregators import list_aggregators, make_spec
 from repro.core.resilience import estimate_alpha_f
+from repro.kernels import pallas_supported
 
 COMPLEXITY = {
     "krum": "O(n^2 d)", "multi_krum": "O(n^2 d)", "m_krum": "O(m n^2 d)",
@@ -27,6 +37,8 @@ COMPLEXITY = {
     "zeno_pp": "O(n d)",
 }
 
+IMPLS = ("gather", "fused", "pallas")
+
 
 def time_spec(spec, g, state=None, iters=20):
     jitted = jax.jit(lambda x: spec.aggregate(x, state=state))
@@ -35,6 +47,27 @@ def time_spec(spec, g, state=None, iters=20):
     for _ in range(iters):
         jitted(g).block_until_ready()
     return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def impl_comparison(ns=(8, 16, 32), ds=(4096, 65536), f=3, iters=20):
+    """{rule: {"n{n}_d{d}": {impl: us_per_call}}} for every rule with a
+    registered Pallas kernel — the gather/fused/pallas series."""
+    key = jax.random.PRNGKey(0)
+    rules = [r for r in list_aggregators("table2") if pallas_supported(r)]
+    out = {}
+    for rule in rules:
+        series = {}
+        for n in ns:
+            fr = min(f, (n - 1) // 2)
+            for d in ds:
+                g = jax.random.normal(key, (n, d))
+                series[f"n{n}_d{d}"] = {
+                    impl: round(time_spec(
+                        make_spec(rule, f=fr, impl=impl, n=n), g,
+                        iters=iters), 1)
+                    for impl in IMPLS}
+        out[rule] = series
+    return out
 
 
 def run(quick: bool = True):
@@ -61,6 +94,45 @@ def run(quick: bool = True):
                 "bench": "table2_filters", "name": f"{name}_n{n}_d{d}",
                 "us_per_call": round(us, 1),
                 "derived": (f"complexity={COMPLEXITY.get(name, '-')};"
+                            f"impl={spec.impl};"
                             f"alpha_f_ok={resilient}"),
             })
+    # the gather/fused/pallas comparison as CSV rows too
+    comp = impl_comparison(ns=(16,), ds=tuple(ds), iters=10)
+    for rule, series in comp.items():
+        for shape, impls in series.items():
+            rows.append({
+                "bench": "table2_filters",
+                "name": f"{rule}_{shape}_impls",
+                "us_per_call": impls["pallas"],
+                "derived": (f"gather={impls['gather']};"
+                            f"fused={impls['fused']};"
+                            f"pallas={impls['pallas']}"),
+            })
     return rows
+
+
+def main(out: str = "BENCH_filters.json", full: bool = False):
+    ns = (8, 16, 32) if full else (8, 16)
+    ds = (4096, 65536, 262144) if full else (4096, 65536)
+    comp = impl_comparison(ns=ns, ds=ds)
+    payload = {"bench": "filters_impl_comparison",
+               "unit": "us_per_call",
+               "impls": list(IMPLS),
+               "rules": comp}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    for rule, series in comp.items():
+        for shape, impls in series.items():
+            print(f"{rule:20s} {shape:12s} " + "  ".join(
+                f"{i}={impls[i]:9.1f}us" for i in IMPLS))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_filters.json")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(args.out, full=args.full)

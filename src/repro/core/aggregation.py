@@ -21,6 +21,7 @@ The capability constants are derived views over the registry's
 when a rule is added."""
 from __future__ import annotations
 
+import sys
 import warnings
 
 from repro.core.aggregators import (                       # noqa: F401
@@ -37,11 +38,23 @@ ITERATIVE = {n for n, d in REGISTRY.items()
              if d.caps.iterative and "meta" not in d.tags}
 
 
+# call sites already warned, keyed by the CALLER's (filename, lineno) —
+# stdlib location-dedup is version-gated on the global warning filters,
+# which jax mutates on ordinary dispatches, so without this set a shim in
+# a training loop would re-warn every single step
+_WARNED_SITES: set = set()
+
+
 def _shim_spec(fn_name, name, f, impl, hyper):
-    warnings.warn(
-        f"{fn_name}(name, ...) is deprecated: build an AggregatorSpec with "
-        f"repro.core.aggregators.make_spec({name!r}, f={f}, ...) and call "
-        f"spec.aggregate(...)", AggregatorDeprecationWarning, stacklevel=3)
+    caller = sys._getframe(2)
+    site = (caller.f_code.co_filename, caller.f_lineno)
+    if site not in _WARNED_SITES:
+        _WARNED_SITES.add(site)
+        warnings.warn(
+            f"{fn_name}(name, ...) is deprecated: build an AggregatorSpec "
+            f"with repro.core.aggregators.make_spec({name!r}, f={f}, ...) "
+            f"and call spec.aggregate(...)",
+            AggregatorDeprecationWarning, stacklevel=3)
     hyper = dict(hyper)
     state = None
     if "server_grad" in hyper:

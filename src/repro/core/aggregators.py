@@ -20,7 +20,44 @@ through ``**hyper``.  This module replaces all of that with one object:
     (via :meth:`AggregatorSpec.weights`).  ``impl="gather"`` is the
     paper-faithful dense path, ``impl="fused"`` the sharding-aware
     stats->weights / leaf-wise decomposition — bit-for-bit identical to
-    the historical functions (tests/test_aggregator_spec.py).
+    the historical functions (tests/test_aggregator_spec.py) —
+    ``impl="pallas"`` the tiled TPU-kernel path (:mod:`repro.kernels`),
+    auto-selected by ``make_spec`` where the rule's caps match an
+    available kernel and proven against the gather path by
+    tests/test_kernels_parity.py.
+
+Registered rules — capabilities and available impls
+    ==================  =========================  =====================
+    rule                caps                       impls
+    ==================  =========================  =====================
+    mean                weight_decomposable        fused, gather
+    krum                weight_decomp, pairwise    fused, gather, pallas
+    multi_krum          weight_decomp, pairwise    fused, gather
+    m_krum              weight_decomp, pairwise    fused, gather
+    mda                 weight_decomp, pairwise    fused, gather
+    cge                 weight_decomp, pairwise    fused, gather, pallas
+    cgc                 weight_decomposable        fused, gather
+    zeno                weight_decomp, stateful    fused, gather
+    zeno_pp             weight_decomp, stateful    custom (fused)
+    coordinate_median   coordwise                  fused, gather, pallas*
+    trimmed_mean        coordwise                  fused, gather, pallas*
+    phocas              coordwise                  fused, gather
+    mean_around_median  coordwise                  fused, gather
+    geometric_median    iterative                  fused, gather
+    rfa                 iterative                  fused, gather
+    median_of_means     iterative                  fused, gather
+    bulyan              iterative, pairwise        fused, gather
+    clipped             wrapper                    delegates to inner
+    bucketed            wrapper                    delegates to inner
+    staleness_disc.     wrapper                    delegates to inner
+    ==================  =========================  =====================
+
+    ``pallas*``: also has a FUSED masked/weighted kernel (mean-imputation
+    inside the sort tile — repro.kernels.masked) used by the async loop's
+    quorum masks; other pallas rules impute at tree level first.  All
+    pallas entries run in interpret mode off-TPU (same code path).
+    ``impl="auto"`` (the ``make_spec`` default) picks pallas exactly for
+    the rules marked above; :func:`pallas_available` is the predicate.
 
 Capability flags (:class:`AggregatorCaps`)
     coordwise / weight-decomposable / iterative / masked-capable /
@@ -184,6 +221,9 @@ class AggregatorCaps:
     stateful: bool = False            # carries init_state/update_state
     staleness_aware: bool = False     # `weights` = raw staleness ROUNDS,
     #                                   not discount multipliers
+    pairwise: bool = False            # selection statistics derivable from
+    #                                   the (n, n) Gram of the stack
+    #                                   (pairwise distances / norm diagonal)
 
 
 @dataclass(frozen=True)
@@ -336,9 +376,8 @@ class AggregatorSpec:
         return dataclasses.replace(self, f=min(self.f, f_max), inner=inner)
 
     def with_impl(self, impl: str) -> "AggregatorSpec":
-        if impl not in ("fused", "gather"):
-            raise ValueError(f"impl must be fused|gather, got {impl!r}")
-        return dataclasses.replace(self, impl=impl)
+        return dataclasses.replace(
+            self, impl=_resolve_impl(self.name, impl))
 
     def with_impl_hyper(self, **kw) -> "AggregatorSpec":
         d = get_aggregator_def(self.name)
@@ -431,7 +470,38 @@ class AggregatorSpec:
         return d.weights_fn(self, grads, state)
 
 
-def make_spec(name: str, f: int = 0, impl: str = "fused",
+def pallas_available(name: str) -> bool:
+    """True iff ``name`` has a registered Pallas kernel path AND its caps
+    declare the matching structure (coordinate-wise order statistics or
+    Gram-derivable selection) — the condition ``impl="auto"`` checks."""
+    d = get_aggregator_def(name)
+    if d.is_wrapper or not (d.caps.coordwise or d.caps.pairwise):
+        return False
+    from repro.kernels import pallas_supported
+    return pallas_supported(name)
+
+
+def _resolve_impl(name: str, impl: str) -> str:
+    """``auto`` -> ``pallas`` where caps + kernel availability allow, else
+    ``fused``; explicit ``pallas`` on an unsupported rule raises HERE (at
+    build time), not deep inside jit."""
+    if impl not in ("auto", "fused", "gather", "pallas"):
+        raise ValueError(
+            f"impl must be auto|fused|gather|pallas, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if pallas_available(name) else "fused"
+    if impl == "pallas" and not pallas_available(name):
+        from repro.kernels import pallas_supported
+        reason = ("no Pallas kernel registered for it"
+                  if not pallas_supported(name) else
+                  "its caps are neither coordwise nor pairwise")
+        raise ValueError(
+            f"{name}: impl='pallas' requested but {reason} "
+            "(see repro.kernels.dispatch.PALLAS_RULES)")
+    return impl
+
+
+def make_spec(name: str, f: int = 0, impl: str = "auto",
               inner: AggregatorSpec | None = None, n: int | None = None,
               **hyper) -> AggregatorSpec:
     """Build a validated :class:`AggregatorSpec`.
@@ -440,10 +510,25 @@ def make_spec(name: str, f: int = 0, impl: str = "fused",
     (``native_dtype``) are split off once into ``impl_hyper``; state-like
     keys (``server_grad``) must be threaded via ``state=`` instead.  When
     ``n`` is given, static plans (MDA subset tables, trim counts) are
-    precomputed at build time."""
+    precomputed at build time.
+
+    ``impl="auto"`` (the default) resolves to ``"pallas"`` when the rule's
+    :class:`AggregatorCaps` (coordwise / pairwise) match a registered
+    kernel in :mod:`repro.kernels.dispatch`, else ``"fused"`` — pass
+    ``impl=`` explicitly to override.
+
+    NOTE — masked semantics of the new default: ``pallas`` follows the
+    GATHER path's masked/weighted semantics (impute-then-scale).  For
+    coordinate-wise rules fused is numerically identical, but for the
+    weight-decomposable kernelized rules (krum, cge) the fused path folds
+    the per-agent weights into the selection weights instead — a
+    different (also valid) estimator.  Default-built krum/cge specs
+    therefore changed masked behavior when the default moved from
+    ``"fused"`` to ``"auto"``: pass ``impl="fused"`` to keep the
+    historical masked semantics (``ByzantineConfig.impl`` still defaults
+    to it).  tests/test_kernels_parity.py pins all three."""
     d = get_aggregator_def(name)
-    if impl not in ("fused", "gather"):
-        raise ValueError(f"impl must be fused|gather, got {impl!r}")
+    impl = _resolve_impl(name, impl)
     if f < 0:
         raise ValueError(f"f must be >= 0, got {f}")
     if d.is_wrapper and inner is None:
@@ -488,6 +573,15 @@ def _warm_plan(spec: AggregatorSpec, n: int):
 
 
 def _sync_aggregate(spec, d, grads, state):
+    if spec.impl == "pallas":
+        # kernel path: same dense (n, P) fp32 contract as the gather path,
+        # with the sort / Gram / selection / application stages running as
+        # tiled Pallas kernels (interpret mode off-TPU — same code path)
+        from repro.kernels import pallas_aggregate
+        stack = tree_stack_ravel(
+            jax.tree.map(lambda l: l.astype(jnp.float32), grads))
+        return tree_unravel_like(
+            pallas_aggregate(spec.name, stack, spec.f, spec.hyper), grads)
     if spec.impl == "gather":
         stack = tree_stack_ravel(
             jax.tree.map(lambda l: l.astype(jnp.float32), grads))
@@ -532,8 +626,31 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
         the mean weight of arrived rows (a staleness-adaptive step size).
 
     With mask all-True and weights all-one this reduces to the synchronous
-    path up to exact-arithmetic no-ops."""
+    path up to exact-arithmetic no-ops.
+
+    ``impl="pallas"`` + a coordinate-wise rule takes the FUSED masked
+    kernel (repro.kernels.masked): imputation happens inside the sort
+    tile, so no imputed (n, d) copy is materialized and the mask/weights
+    stay traced operands (fault schedules never recompile).  Arithmetic is
+    identical to the imputation below, bit-for-bit in fp32.  Other pallas
+    rules (Krum/CGE) impute here and run their sync kernels on the imputed
+    stack — the gather path's masked semantics exactly."""
     mask, w, cnt, tot = _masked_prelude(grads, mask, weights)
+    if spec.impl == "pallas" and d.caps.coordwise:
+        from repro.kernels import (pallas_masked_aggregate,
+                                   pallas_masked_supported)
+        leaves = jax.tree.leaves(grads)
+        if (pallas_masked_supported(spec.name)
+                and all(l.dtype == leaves[0].dtype for l in leaves)):
+            stack = tree_stack_ravel(grads)        # native dtype, no cast
+            vec = pallas_masked_aggregate(
+                spec.name, stack, mask.astype(jnp.float32), w / tot,
+                spec.f, spec.hyper)
+            agg = tree_unravel_like(vec, grads)
+            scale = tot / cnt
+            return jax.tree.map(
+                lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                agg)
     wn = w / tot
     mean_sel = tree_weighted_sum(grads, wn)
     imputed = tree_where_agents(
@@ -816,25 +933,30 @@ _register_plain(
     dense_fn=D.mean, weights_fn=_w_mean, masked_fn=_mean_masked, tags=_T2)
 _register_plain(
     "krum",
-    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        pairwise=True),
     dense_fn=D.krum, weights_fn=_w_krum, tags=_T2)
 _register_plain(
     "multi_krum",
-    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        pairwise=True),
     hyper=("m",), gather=("m",),
     dense_fn=D.multi_krum, weights_fn=_w_multi_krum, tags=_T2)
 _register_plain(
     "m_krum",
-    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        pairwise=True),
     hyper=("m",), gather=("m",),
     dense_fn=D.m_krum, weights_fn=_w_m_krum, tags=_T2)
 _register_plain(
     "mda",
-    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        pairwise=True),
     dense_fn=D.mda, weights_fn=_w_mda, tags=_T2)
 _register_plain(
     "cge",
-    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True),
+    caps=AggregatorCaps(weight_decomposable=True, sharding_aware=True,
+                        pairwise=True),
     hyper=("normalize",), gather=("normalize",),
     dense_fn=D.cge, weights_fn=_w_cge, tags=_T2)
 _register_plain(
@@ -888,7 +1010,7 @@ _register_plain(
     dense_fn=D.median_of_means, tree_fn=_t_median_of_means, tags=_T2)
 _register_plain(
     "bulyan",
-    caps=AggregatorCaps(iterative=True, sharding_aware=True),
+    caps=AggregatorCaps(iterative=True, sharding_aware=True, pairwise=True),
     hyper=("base",), gather=("base",),
     # "meta" keeps bulyan out of the derived legacy ITERATIVE constant
     # (historically it was name-dispatched, not a member of that set)
@@ -1124,6 +1246,7 @@ __all__ = [
     "AggregatorCaps", "AggregatorDef", "AggregatorSpec",
     "AggregatorDeprecationWarning", "REGISTRY", "register_aggregator",
     "get_aggregator_def", "list_aggregators", "make_spec",
+    "pallas_available",
     "clipped", "bucketed", "staleness_discounted",
     "tree_stack_ravel", "tree_unravel_like", "tree_sqnorms", "tree_gram",
     "tree_dot", "tree_weighted_sum", "tree_where_agents",

@@ -1,6 +1,12 @@
+from repro.kernels.dispatch import (default_interpret, pallas_aggregate,
+                                    pallas_masked_aggregate,
+                                    pallas_masked_supported, pallas_supported)
 from repro.kernels.ops import (kernel_cge, kernel_coordinate_median,
                                kernel_krum, kernel_pairwise_sq_dists,
                                kernel_trimmed_mean)
 
 __all__ = ["kernel_coordinate_median", "kernel_trimmed_mean", "kernel_krum",
-           "kernel_cge", "kernel_pairwise_sq_dists"]
+           "kernel_cge", "kernel_pairwise_sq_dists",
+           "pallas_aggregate", "pallas_masked_aggregate",
+           "pallas_supported", "pallas_masked_supported",
+           "default_interpret"]

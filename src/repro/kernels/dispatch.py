@@ -1,0 +1,138 @@
+"""Caps-driven kernel dispatch: rule name -> Pallas implementation.
+
+The bridge between the :class:`~repro.core.aggregators.AggregatorSpec`
+engine and the kernel layer.  A Table-2 rule is *kernelizable* when its
+declared capabilities are coordinate-wise (per-coordinate order statistics
+-> :mod:`repro.kernels.coord_stats` / :mod:`repro.kernels.masked`) or
+Gram-derivable (pairwise distances / norms -> :mod:`repro.kernels.pairwise`
++ :mod:`repro.kernels.select` + :mod:`repro.kernels.wsum`).  The tables
+below are the single source of truth the spec builder queries at
+``make_spec`` time to auto-select ``impl="pallas"``.
+
+Every entry has the same contract as the dense gather path it replaces:
+input is the fp32 (n, P) raveled gradient stack (masked variants take the
+native-dtype stack plus traced mask/weights), output is the (P,) fp32
+aggregate, numerically interchangeable with ``impl="gather"`` —
+bit-for-bit for the order-statistic and single-selection rules, selection-
+identical with ulp-level application rounding for averaged selections
+(CGE) — proven case by case in tests/test_kernels_parity.py.
+
+``interpret`` resolution: kernels compile to real Mosaic kernels on TPU
+backends and fall back to interpret mode (pure-jax evaluation of the SAME
+kernel bodies) everywhere else, so CPU CI runs the code path production
+runs — override per call for debugging.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.coord_stats import coord_stat
+from repro.kernels.masked import masked_coord_stat
+from repro.kernels.ops import _pad_d, kernel_cge, kernel_krum
+
+_INTERPRET = None
+
+
+def default_interpret() -> bool:
+    """True (interpret mode) unless running on a real TPU backend."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
+
+
+def _trim_b(n: int, f: int, hyper: dict) -> int:
+    from repro.core.aggregators import trim_count          # lazy: no cycle
+    return trim_count(n, f, hyper.get("beta"))
+
+
+# ---------------------------------------------------------------------------
+# synchronous rules: (stack fp32 (n, P), f, hyper, interpret) -> (P,) fp32
+
+
+def _median(stack, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return coord_stat(gp, "median", interpret=interpret)[:d]
+
+
+def _trimmed_mean(stack, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    b = _trim_b(stack.shape[0], f, hyper)
+    return coord_stat(gp, "trimmed_mean", b=b, interpret=interpret)[:d]
+
+
+def _krum(stack, f, hyper, interpret):
+    # gram -> fused selection -> one-hot weighted sum (exactly the
+    # selected row's bits); ops.kernel_krum is THE one pipeline copy
+    return kernel_krum(stack, f, interpret=interpret)
+
+
+def _cge(stack, f, hyper, interpret):
+    return kernel_cge(stack, f, normalize=hyper.get("normalize", True),
+                      interpret=interpret)
+
+
+PALLAS_RULES = {
+    "coordinate_median": _median,
+    "trimmed_mean": _trimmed_mean,
+    "krum": _krum,
+    "cge": _cge,
+}
+
+
+# ---------------------------------------------------------------------------
+# masked / weighted rules: fused mean-imputation variants (async quorums)
+
+
+def _masked_median(stack, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return masked_coord_stat(gp, mask, wn, "median",
+                             interpret=interpret)[:d]
+
+
+def _masked_trimmed_mean(stack, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    b = _trim_b(stack.shape[0], f, hyper)
+    return masked_coord_stat(gp, mask, wn, "trimmed_mean", b=b,
+                             interpret=interpret)[:d]
+
+
+PALLAS_MASKED_RULES = {
+    "coordinate_median": _masked_median,
+    "trimmed_mean": _masked_trimmed_mean,
+}
+
+
+# ---------------------------------------------------------------------------
+# entry points the spec engine calls
+
+
+def pallas_supported(name: str) -> bool:
+    return name in PALLAS_RULES
+
+
+def pallas_masked_supported(name: str) -> bool:
+    return name in PALLAS_MASKED_RULES
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("name", "f", "hyper", "interpret"))
+def pallas_aggregate(name: str, stack, f: int, hyper: tuple = (), *,
+                     interpret: bool | None = None):
+    """stack: fp32 (n, P) -> (P,) fp32 via the rule's Pallas kernels.
+    ``hyper`` is the spec's sorted static hyper tuple."""
+    itp = default_interpret() if interpret is None else interpret
+    return PALLAS_RULES[name](stack, f, dict(hyper), itp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("name", "f", "hyper", "interpret"))
+def pallas_masked_aggregate(name: str, stack, mask, wn, f: int,
+                            hyper: tuple = (), *,
+                            interpret: bool | None = None):
+    """Mean-imputed masked statistic; mask/wn are TRACED (n,) operands, so
+    per-step fault masks never retrigger compilation."""
+    itp = default_interpret() if interpret is None else interpret
+    return PALLAS_MASKED_RULES[name](stack, mask, wn, f, dict(hyper), itp)

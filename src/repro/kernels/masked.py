@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: masked / weighted coordinate order statistics.
+
+The async training loop aggregates over a *varying subset* of agents every
+server step (quorum masks from the fault simulator) with per-agent staleness
+discounts.  The engine's masked semantics for coordinate-wise rules
+(:func:`repro.core.aggregators._masked_aggregate`) are: impute absent rows
+with the weighted mean of the arrived rows, run the rule on the imputed
+fixed-shape stack, scale by the mean arrived weight.  This kernel fuses the
+imputation INTO the sort tile, so the masked path costs one VMEM pass —
+no imputed (n, d) copy is ever materialized — and the mask/weights arrive
+as ordinary traced operands, so a fault schedule never recompiles the step.
+
+Arithmetic is kept identical to the tree-level engine path (fp32 weighted
+mean -> cast to the stack's native dtype -> select -> fp32 sort -> stat),
+so fp32 results are bit-for-bit with the ``impl="gather"`` reference —
+tests/test_kernels_parity.py is the proof.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.coord_stats import _sort_network, stat_from_sorted
+from repro.kernels.tiling import TILE_D, block_d
+
+
+def _masked_stat_kernel(g_ref, mask_ref, wn_ref, out_ref, *, stat, b,
+                        exact):
+    x = g_ref[...]                                   # (n, T) native dtype
+    m = mask_ref[...][0]                             # (n,) f32, 1 = arrived
+    wn = wn_ref[...][0]                              # (n,) f32, sums to 1
+    xf = x.astype(jnp.float32)
+    # weighted mean of the arrived rows (wn is zero elsewhere) — same
+    # mult-then-axis-0-reduce the tree path uses, then the same round trip
+    # through the stack's native dtype
+    mean = jnp.sum(xf * wn[:, None], axis=0).astype(x.dtype)   # (T,)
+    imputed = jnp.where(m[:, None] > 0.5, x, mean[None])
+    s = _sort_network(imputed.astype(jnp.float32))
+    if exact:
+        # see coord_stats._coord_stat_kernel: pin the reduce order so the
+        # fp32 result is bit-for-bit with the tree-level imputation path
+        s = jax.lax.optimization_barrier(s)
+    out_ref[...] = stat_from_sorted(s, stat, b)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("stat", "b", "interpret"))
+def masked_coord_stat(g, mask, wn, stat: str, b: int = 0, *,
+                      interpret: bool = True):
+    """g: (n, d) any dtype, mask: (n,) {0,1} f32, wn: (n,) f32 normalized
+    weights -> (d,) fp32 statistic over the mean-imputed stack.  d must be
+    a multiple of TILE_D (the dispatch layer pads)."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w = block_d(d, interpret)
+    out = pl.pallas_call(
+        functools.partial(_masked_stat_kernel, stat=stat, b=b,
+                          exact=interpret),
+        grid=(d // w,),
+        in_specs=[
+            pl.BlockSpec((n, w), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(g, mask.astype(jnp.float32).reshape(1, n),
+      wn.astype(jnp.float32).reshape(1, n))
+    return out[0]

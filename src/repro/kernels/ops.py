@@ -47,27 +47,36 @@ def kernel_pairwise_sq_dists(g, *, interpret: bool = True):
     return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gr, 0.0)
 
 
+def _drop_unselected(w, gp):
+    """Zero the NON-selected rows before the weighted sum.  A rejected
+    Byzantine row may carry +-inf/NaN coordinates, and 0.0 * inf = NaN
+    would leak it straight into the aggregate the selection just excluded
+    it from; an exact where-select costs one elementwise pass and keeps
+    finite-data results bit-identical (0 * finite was already exact)."""
+    return jnp.where((w > 0.0)[:, None], gp, 0.0)
+
+
 @functools.partial(jax.jit, static_argnames=("f", "interpret"))
 def kernel_krum(g, f: int, *, interpret: bool = True):
-    """Krum with Pallas Gram + Pallas weighted-select."""
-    from repro.core.filters.dense import krum_scores
-    n = g.shape[0]
-    d2 = kernel_pairwise_sq_dists(g, interpret=interpret)
-    s = krum_scores(d2, f)
-    w = jax.nn.one_hot(jnp.argmin(s), n)
+    """Krum, fully kernel-path: Pallas Gram -> Pallas score/argmin
+    selection -> Pallas weighted-select (one-hot application is exactly
+    the selected row's bits)."""
+    from repro.kernels.select import krum_select
     gp, d = _pad_d(g)
-    return weighted_sum(w, gp, interpret=interpret)[:d]
+    gr = gram(gp, interpret=interpret)
+    w = krum_select(gr, f, interpret=interpret)
+    return weighted_sum(w, _drop_unselected(w, gp), interpret=interpret)[:d]
 
 
 @functools.partial(jax.jit, static_argnames=("f", "normalize", "interpret"))
 def kernel_cge(g, f: int, normalize: bool = True, *, interpret: bool = True):
-    """CGE: norms from the Gram diagonal, masked weighted sum."""
+    """CGE, fully kernel-path: norms off the Pallas Gram diagonal, exact
+    comparison-rank top-k selection, Pallas weighted sum; normalization
+    divides AFTER the sum like the dense reference."""
+    from repro.kernels.select import cge_select
     n = g.shape[0]
     gp, d = _pad_d(g)
     gr = gram(gp, interpret=interpret)
-    norms = jnp.sqrt(jnp.maximum(jnp.diag(gr), 0.0))
-    _, idx = jax.lax.top_k(-norms, n - f)
-    w = jnp.zeros((n,)).at[idx].set(1.0)
-    if normalize:
-        w = w / (n - f)
-    return weighted_sum(w, gp, interpret=interpret)[:d]
+    w = cge_select(gr, n - f, interpret=interpret)
+    out = weighted_sum(w, _drop_unselected(w, gp), interpret=interpret)[:d]
+    return out / (n - f) if normalize else out

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE_D = 512
+from repro.kernels.tiling import TILE_D, block_d
 
 
 def _gram_kernel(g_ref, out_ref):
@@ -39,10 +39,11 @@ def gram(g, *, interpret: bool = True):
     """g: (n, d) -> (n, n) fp32 Gram.  d must be a multiple of TILE_D."""
     n, d = g.shape
     assert d % TILE_D == 0, d
+    w = block_d(d, interpret)
     return pl.pallas_call(
         _gram_kernel,
-        grid=(d // TILE_D,),
-        in_specs=[pl.BlockSpec((n, TILE_D), lambda i: (0, i))],
+        grid=(d // w,),
+        in_specs=[pl.BlockSpec((n, w), lambda i: (0, i))],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,

@@ -26,3 +26,40 @@ def trimmed_mean_from_sorted(s, b: int):
     n = s.shape[0]
     kept = s[b:n - b] if b else s
     return jnp.mean(kept, axis=0)
+
+
+def masked_impute_ref(g, mask, wn):
+    """Mean-imputed stack, arithmetic mirroring the engine's masked path:
+    fp32 weighted mean of arrived rows -> native-dtype round trip ->
+    row-select.  Oracle for kernels/masked.py."""
+    xf = g.astype(jnp.float32)
+    mean = jnp.sum(xf * wn.astype(jnp.float32)[:, None],
+                   axis=0).astype(g.dtype)
+    return jnp.where(mask.astype(bool)[:, None], g, mean[None])
+
+
+def masked_stat_ref(g, mask, wn, stat: str, b: int = 0):
+    """(d,) fp32 oracle for masked_coord_stat."""
+    s = jnp.sort(masked_impute_ref(g, mask, wn).astype(jnp.float32), axis=0)
+    if stat == "median":
+        return median_from_sorted(s)
+    if stat == "trimmed_mean":
+        return trimmed_mean_from_sorted(s, b)
+    raise KeyError(stat)
+
+
+def krum_select_ref(g, f: int):
+    """(n,) one-hot Krum selection oracle (dense scores + argmin)."""
+    import jax
+
+    from repro.core.filters.dense import krum_scores, pairwise_sq_dists
+    s = krum_scores(pairwise_sq_dists(g.astype(jnp.float32)), f)
+    return jax.nn.one_hot(jnp.argmin(s), g.shape[0], dtype=jnp.float32)
+
+
+def cge_select_ref(g, n_keep: int):
+    """(n,) {0,1} smallest-norm keep-mask oracle (top_k selection)."""
+    import jax
+    norms = jnp.linalg.norm(g.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(-norms, n_keep)
+    return jnp.zeros((g.shape[0],), jnp.float32).at[idx].set(1.0)

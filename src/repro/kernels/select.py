@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused Krum / CGE selection on the (n, n) Gram.
+
+:mod:`repro.kernels.pairwise` reduces the O(n^2 d) work of the
+distance-based filters to one tiled MXU pass; what remains is the O(n^2)
+*selection* — Krum scores + argmin, CGE's smallest-norm top-k.  These fit in
+a single VMEM block, so each runs as one grid-step kernel producing the
+(n,) application weights that :mod:`repro.kernels.wsum` then applies.
+
+No ``jnp.sort`` / ``top_k`` inside the kernels: ordering is computed with a
+static odd-even transposition network (rows of the distance matrix) and
+exact comparison-rank selection with first-index tie-breaking — the same
+selection ``jax.lax.top_k`` / ``argmin`` produce, so the chosen rows match
+the dense reference bit-for-bit whenever the scores are not exactly tied.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.coord_stats import _sort_network
+
+
+def _rank(values, ascending: bool = True):
+    """Exact comparison rank with first-index tie-break: rank[i] = number
+    of j that order strictly before i.  Matches argmin / top_k(-v) order.
+
+    NaN scores (an inf-coordinate adversarial gradient turns the whole d2
+    row NaN) are ordered LAST: NaN compares False against everything, so
+    without the rewrite every NaN row would get rank 0 and the "one-hot"
+    selection would silently become multi-hot — handing the adversary
+    exactly the multi-row average the rule exists to prevent."""
+    worst = jnp.float32(jnp.inf) if ascending else -jnp.float32(jnp.inf)
+    values = jnp.where(jnp.isnan(values), worst, values)
+    n = values.shape[0]
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)   # row = candidate i
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    vi, vj = values[:, None], values[None, :]
+    before = (vj < vi) if ascending else (vj > vi)
+    before = before | ((vj == vi) & (j < i))
+    return jnp.sum(before.astype(jnp.int32), axis=1)     # (n,)
+
+
+def _eye_and_diag(gr):
+    """(n, n) bool identity + the Gram diagonal as a (n,) vector, without
+    a gather — THE one copy of the diagonal-extraction trick."""
+    n = gr.shape[0]
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+           == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1))
+    return eye, jnp.sum(jnp.where(eye, gr, 0.0), axis=1)
+
+
+def _d2_from_gram(gr):
+    eye, sq = _eye_and_diag(gr)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gr, 0.0)
+    return jnp.where(eye, jnp.float32(jnp.inf), d2)      # self excluded
+
+
+def _krum_select_kernel(gram_ref, out_ref, *, f):
+    """(n, n) Gram -> (1, n) one-hot weights of the Krum minimizer."""
+    gr = gram_ref[...].astype(jnp.float32)
+    n = gr.shape[0]
+    d2 = _d2_from_gram(gr)
+    # per-row ascending sort of distances-to-others via the same static
+    # network the coordinate kernels use (columns = rows of d2)
+    srt = _sort_network(d2.T)                            # (n, n) cols sorted
+    k = max(n - f - 2, 1)
+    scores = jnp.sum(srt[:k], axis=0)                    # (n,)
+    out_ref[...] = (_rank(scores) == 0).astype(jnp.float32)[None]
+
+
+def _cge_select_kernel(gram_ref, out_ref, *, n_keep):
+    """(n, n) Gram -> (1, n) {0,1} mask of the n_keep smallest-norm rows
+    (norms off the Gram diagonal) — CGE's comparative elimination."""
+    gr = gram_ref[...].astype(jnp.float32)
+    _, sq = _eye_and_diag(gr)
+    norms = jnp.sqrt(jnp.maximum(sq, 0.0))
+    out_ref[...] = (_rank(norms) < n_keep).astype(jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("f", "interpret"))
+def krum_select(gr, f: int, *, interpret: bool = True):
+    """gr: (n, n) Gram -> (n,) one-hot fp32 Krum selection weights."""
+    n = gr.shape[0]
+    return pl.pallas_call(
+        functools.partial(_krum_select_kernel, f=f),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(gr)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_keep", "interpret"))
+def cge_select(gr, n_keep: int, *, interpret: bool = True):
+    """gr: (n, n) Gram -> (n,) {0,1} fp32 keep-mask of the n_keep
+    smallest-norm rows (unnormalized: the caller divides after the sum,
+    exactly like the dense reference)."""
+    n = gr.shape[0]
+    return pl.pallas_call(
+        functools.partial(_cge_select_kernel, n_keep=n_keep),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(gr)[0]

@@ -1,0 +1,19 @@
+"""Shared tile-width policy for the aggregation kernels.
+
+Compiled TPU kernels tile the huge d axis into VMEM-resident TILE_D-lane
+blocks (n sublanes x 512 lanes, fp32).  Interpret mode has no VMEM to
+respect, but it DOES pay the interpreter's per-grid-step dispatch cost
+(~10 ms/step): at model scale (d ~ 1e6 -> thousands of tiles) a tiled
+grid turns one aggregation into tens of seconds on CPU.  So off-TPU the
+kernels run the SAME kernel body over one coarse block — identical code
+path and arithmetic (the parity suite pins fp32 bit-for-bit), CPU cost
+back to the plain-XLA ballpark.
+"""
+from __future__ import annotations
+
+TILE_D = 512
+
+
+def block_d(d: int, interpret: bool) -> int:
+    """Block width along d for a padded (multiple-of-TILE_D) stack."""
+    return d if interpret else TILE_D

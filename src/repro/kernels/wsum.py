@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE_D = 512
+from repro.kernels.tiling import TILE_D, block_d
 
 
 def _wsum_kernel(w_ref, g_ref, out_ref):
@@ -29,14 +29,15 @@ def weighted_sum(w, g, *, interpret: bool = True):
     """w: (n,), g: (n, d) -> (d,) fp32.  d multiple of TILE_D."""
     n, d = g.shape
     assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
     out = pl.pallas_call(
         _wsum_kernel,
-        grid=(d // TILE_D,),
+        grid=(d // w_blk,),
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
         interpret=interpret,
     )(w.reshape(1, n), g)

@@ -29,7 +29,8 @@ def main():
     ap.add_argument("--mode", default=None, choices=[None, "ddp", "fsdp"])
     ap.add_argument("--filter", default=None,
                     help="gradient filter for train_4k (default trimmed_mean)")
-    ap.add_argument("--impl", default=None, choices=[None, "fused", "gather"])
+    ap.add_argument("--impl", default=None,
+                    choices=[None, "fused", "gather", "pallas", "auto"])
     ap.add_argument("--tag", default="")
     ap.add_argument("--skip-existing", action="store_true")
     # §Perf variant knobs

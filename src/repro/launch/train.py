@@ -23,7 +23,8 @@ def main():
     ap.add_argument("--n-agents", type=int, default=8)
     ap.add_argument("--f", type=int, default=1)
     ap.add_argument("--filter", default="trimmed_mean")
-    ap.add_argument("--impl", default="fused", choices=["fused", "gather"])
+    ap.add_argument("--impl", default="fused",
+                    choices=["fused", "gather", "pallas", "auto"])
     ap.add_argument("--attack", default="none")
     ap.add_argument("--attack-scale", type=float, default=None)
     ap.add_argument("--momentum-alpha", type=float, default=0.0)

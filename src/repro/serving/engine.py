@@ -65,7 +65,8 @@ def generate(cfg, params, prompt_batch, max_new_tokens: int,
 
 def generate_replicated(cfg, params_stack, prompt_batch,
                         max_new_tokens: int, aggregator,
-                        seq_capacity: int | None = None, jit: bool = True):
+                        seq_capacity: int | None = None, jit: bool = True,
+                        fault_hook=None):
     """Byzantine-fault-tolerant greedy decoding over r model replicas.
 
     ``params_stack``: params pytree with a leading replica axis (r, ...) —
@@ -75,8 +76,19 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     any ``spec.f`` corrupted replicas are filtered before argmax, and every
     replica's cache advances with the agreed token.
 
+    ``fault_hook(step, logits_stack) -> logits_stack``: optional
+    fault-injection point at the replica communication boundary — called
+    on every decode step (step 0 = prefill) BEFORE aggregation, it models
+    replicas emitting corrupted logits (bit-flipped weights, hostile
+    hosts, lost messages).  The fault-schedule chaos tests
+    (tests/test_serving_chaos.py) drive it with compiled
+    :class:`~repro.simulator.faults.FaultTrace` rows; per-replica caches
+    still advance with the *agreed* token, matching a real deployment
+    where the decode loop is trusted and only replica outputs are not.
+
     Returns (B, max_new_tokens) int32, identical to :func:`generate` on the
-    clean params when <= f replicas are corrupted and the rule tolerates f.
+    clean params when <= f replicas are corrupted at every step and the
+    rule tolerates f.
     """
     B, T = prompt_batch["tokens"].shape
     cap = seq_capacity or (T + max_new_tokens)
@@ -101,10 +113,14 @@ def generate_replicated(cfg, params_stack, prompt_batch,
         agree = jax.jit(agree)
 
     logits, caches = vpre(params_stack)
+    if fault_hook is not None:
+        logits = fault_hook(0, logits)
     token = agree(logits)[:, None]
     out = [token]
-    for _ in range(max_new_tokens - 1):
+    for step in range(1, max_new_tokens):
         logits, caches = vdec(params_stack, token, caches)
+        if fault_hook is not None:
+            logits = fault_hook(step, logits)
         token = agree(logits)[:, None]
         out.append(token)
     return jnp.concatenate(out, axis=1)

@@ -16,8 +16,13 @@ Pipeline per server step t (one parameter version):
      (``spec.aggregate(sent, mask=..., weights=...)``), weighted by a
      staleness discount; stateful rules (Zeno, the delay-adaptive
      ``zeno_pp``) have their state threaded explicitly through the jitted
-     step; if the quorum was missed (stragglers/crashes) the loop can fall
-     back to Draco-style gradient coding
+     step; ``impl="pallas"`` specs run the fused masked kernels
+     (:mod:`repro.kernels.masked`) here — the quorum mask and discount
+     weights enter the kernel as ordinary traced operands, so the step
+     compiles ONCE per shape regardless of the fault schedule, and the
+     threaded ``agg_state`` pytree passes through the kernel path
+     untouched; if the quorum was missed (stragglers/crashes) the loop can
+     fall back to Draco-style gradient coding
      (:func:`repro.core.redundancy.coding.tree_draco_aggregate` with the
      delivery mask);
   4. the server optimizer applies the update, creating version t+1.

@@ -12,8 +12,10 @@ program:
      identical to f agents sending arbitrary vectors, line 11 of Alg. 2);
   4. a gradient filter aggregates across the agent axis (eq. 17) —
      ``impl="gather"`` reproduces the survey's server literally,
-     ``impl="fused"`` uses the stats->weights decomposition (see
-     repro.core.aggregation);
+     ``impl="fused"`` uses the stats->weights decomposition,
+     ``impl="pallas"`` runs the rule's tiled TPU kernels, and
+     ``impl="auto"`` picks pallas where the rule's caps match an
+     available kernel (see repro.core.aggregators);
   5. the server-side optimizer applies the filtered update.
 
 Worker momentum (§3.3.4 variance reduction) and Draco-style coded
@@ -44,7 +46,10 @@ class ByzantineConfig:
     # ... or the legacy string triple, resolved to a spec by resolve_spec()
     filter_name: str = "trimmed_mean"
     filter_hyper: dict = field(default_factory=dict)
-    impl: str = "fused"                 # fused | gather
+    # fused | gather | pallas | auto ("auto" upgrades kernelized rules to
+    # the Pallas path; the default stays "fused" so existing configs keep
+    # their historical sharding-aware program bit-for-bit)
+    impl: str = "fused"
     attack: str = "none"
     attack_hyper: dict = field(default_factory=dict)
     momentum_alpha: float = 0.0         # 0 = raw gradients
@@ -153,7 +158,8 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
     if bz.agg_dtype:
         # sort/exchange in agg_dtype wherever the rule supports it —
         # reaches through composition wrappers to the executing rule
-        # (weighted rules accumulate their statistics in fp32 regardless)
+        # (weighted rules accumulate their statistics in fp32 regardless;
+        # the pallas path, like gather, accumulates fp32 and ignores it)
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
     if bz.group_size > 1:
         k = bz.n_agents // bz.group_size

@@ -51,3 +51,50 @@ def test_bf16_stacks_aggregate(grads):
     for l in jax.tree.leaves(out):
         assert l.dtype == jnp.bfloat16
         assert bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# shim regression (PR 3): warning discipline + exact spec equivalence
+
+
+def test_shims_warn_exactly_once_per_call_site(grads):
+    """Under the stdlib "default" action a deprecation must fire once per
+    CALL SITE (location-deduped), not once per process and not per call —
+    a shim hot loop stays quiet after the first hit, while every distinct
+    legacy usage still surfaces in the log."""
+    import warnings
+
+    from repro.core import aggregation as legacy
+    from repro.core.aggregators import AggregatorDeprecationWarning
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.resetwarnings()
+        warnings.simplefilter("default")
+        for _ in range(3):
+            legacy.tree_aggregate("mean", grads, 0)      # site A, 3 calls
+        legacy.filter_weights("mean", grads, 0)          # site B
+    hits = [w for w in rec
+            if issubclass(w.category, AggregatorDeprecationWarning)]
+    assert len(hits) == 2, [str(w.message)[:40] for w in hits]
+    # the warning points at the CALLER (stacklevel), not the shim module
+    assert all(w.filename == __file__ for w in hits)
+
+
+@pytest.mark.parametrize("name", ["trimmed_mean", "krum", "cge"])
+def test_shims_stay_bitwise_with_spec_aggregate(name, grads):
+    """The shims must keep resolving to impl="fused" even though make_spec
+    now defaults to impl="auto" (which upgrades kernelized rules to
+    pallas) — legacy callers get the exact historical arrays."""
+    from repro.core.aggregation import tree_masked_aggregate
+    from repro.core.aggregators import make_spec
+    spec = make_spec(name, f=2, impl="fused")
+    assert spec.impl == "fused"
+    ref = spec.aggregate(grads)
+    out = tree_aggregate(name, grads, 2)
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        assert x.dtype == y.dtype
+        assert bool(jnp.all(x == y)), name
+    mask = jnp.asarray([True] * 9 + [False] * 3)
+    ref_m = spec.aggregate(grads, mask=mask)
+    out_m = tree_masked_aggregate(name, grads, 2, mask)
+    for x, y in zip(jax.tree.leaves(out_m), jax.tree.leaves(ref_m)):
+        assert bool(jnp.all(x == y)), name

@@ -1,0 +1,349 @@
+"""Kernel-dispatch parity suite: ``impl="pallas"`` vs the gather-path
+reference, for every kernelized rule x {plain, masked, weighted}.
+
+The exactness bar comes from the survey's resilience story (CGE's provable
+(f, eps) guarantees, the approximate-BFT line): a kernel that silently
+disagrees with the reference rule voids the guarantee, so agreement is
+asserted BIT-FOR-BIT for fp32 wherever the two paths share the reference
+arithmetic:
+
+  * coordinate_median / trimmed_mean — identical order statistics (the
+    kernels pin the reduce order to the reference's, see coord_stats);
+  * krum — one-hot application returns exactly the selected row's bits;
+  * cge — the SELECTION mask is asserted bit-for-bit; the application sums
+    the selected rows in index order while the dense reference sums them
+    in norm order, so the averaged output is asserted to ulp-level
+    tolerance (FP addition is not associative; the selected SET is what
+    the (f, eps) guarantee depends on).
+
+bfloat16 stacks are asserted to bf16-resolution tolerance.  Fuzzing is
+seeded ``jax.random`` grids (no ``hypothesis`` here — not installed; the
+importorskip pattern is reserved for optional deps) over odd/even n and
+tile-aligned / non-multiple-of-block d, plus fault-schedule-driven quorum
+masks from the async simulator and a retrace counter proving fixed-shape
+masks never recompile the kernel path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import make_spec, pallas_available
+from repro.kernels import ref
+from repro.kernels.coord_stats import coord_stat
+from repro.kernels.masked import masked_coord_stat
+from repro.kernels.ops import _pad_d
+from repro.kernels.pairwise import gram
+from repro.kernels.select import cge_select, krum_select
+
+RULES = ["coordinate_median", "trimmed_mean", "krum", "cge"]
+NS = [9, 12]                       # odd / even agent counts
+DS = [512, 771]                    # exact tile / non-multiple-of-block
+DTYPES = [jnp.float32, jnp.bfloat16]
+MODES = ["plain", "masked", "weighted"]
+SEEDS = [0, 1]
+F = 2
+
+# rules whose pallas OUTPUT is bit-for-bit with the gather path in fp32
+# (cge: selection bitwise, application within ulp — see module docstring)
+BITWISE_RULES = {"coordinate_median", "trimmed_mean", "krum"}
+
+
+def data(n, d, dtype, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 2.0
+    return g.astype(dtype)
+
+
+def mode_args(mode, n, seed):
+    """(mask, weights) for one fuzz case; masks always keep >= n - F rows."""
+    if mode == "plain":
+        return None, None
+    k1, k2 = jax.random.split(jax.random.PRNGKey(100 + seed))
+    drop = jax.random.choice(k1, n, shape=(F,), replace=False)
+    mask = jnp.ones((n,), bool).at[drop].set(False)
+    if mode == "masked":
+        return mask, None
+    w = jax.random.uniform(k2, (n,), minval=0.3, maxval=1.0)
+    return mask, w
+
+
+def assert_agree(out, ref_out, dtype, rule):
+    a, b = np.asarray(out), np.asarray(ref_out)
+    assert a.dtype == b.dtype
+    if dtype == jnp.float32 and rule in BITWISE_RULES:
+        np.testing.assert_array_equal(a, b)
+    elif dtype == jnp.float32:
+        np.testing.assert_allclose(a, b, rtol=3e-6, atol=3e-6)
+    else:                                      # bf16 resolution
+        np.testing.assert_allclose(a.astype(np.float32),
+                                   b.astype(np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# 1. spec-level parity: impl="pallas" vs impl="gather", all modes
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("d", DS)
+@pytest.mark.parametrize("rule", RULES)
+def test_pallas_matches_gather_spec(rule, n, d, dtype, mode):
+    pa = make_spec(rule, f=F, impl="pallas", n=n)
+    ga = make_spec(rule, f=F, impl="gather", n=n)
+    for seed in SEEDS:
+        g = data(n, d, dtype, seed)
+        mask, w = mode_args(mode, n, seed)
+        out = pa.aggregate(g, mask=mask, weights=w)
+        expect = ga.aggregate(g, mask=mask, weights=w)
+        assert_agree(out, expect, dtype, rule)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("rule", ["coordinate_median", "trimmed_mean"])
+def test_pallas_matches_gather_on_pytrees(rule, mode):
+    """The fused masked kernel path also runs on raveled pytrees (the
+    training loops' actual gradient structure)."""
+    n = 10
+    grads = {"a": data(n, 5 * 7, jnp.float32, 3).reshape(n, 5, 7),
+             "b": {"c": data(n, 11, jnp.float32, 4)}}
+    mask, w = mode_args(mode, n, 0)
+    out = make_spec(rule, f=F, impl="pallas").aggregate(
+        grads, mask=mask, weights=w)
+    expect = make_spec(rule, f=F, impl="gather").aggregate(
+        grads, mask=mask, weights=w)
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_masked_semantics_of_the_new_default_are_pinned():
+    """The default impl moved from "fused" to "auto" (-> pallas for the
+    kernelized rules).  Pallas follows the GATHER masked semantics
+    (impute-then-scale); for coordinate-wise rules fused is numerically
+    the same path, but for weight-decomposable rules (krum, cge) fused
+    folds the weights into the selection instead — so default-built
+    krum/cge specs CHANGED masked behavior with this PR.  This test makes
+    that switch loud: default == pallas == gather, and fused remains the
+    intentionally different historical estimator reachable via
+    impl="fused" (ByzantineConfig's default)."""
+    n = 10
+    g = data(n, 640, jnp.float32, 21)
+    mask, w = mode_args("weighted", n, 4)
+    for rule in ("krum", "cge"):
+        default = make_spec(rule, f=F, n=n)
+        assert default.impl == "pallas"
+        out_d = default.aggregate(g, mask=mask, weights=w)
+        out_g = make_spec(rule, f=F, impl="gather", n=n).aggregate(
+            g, mask=mask, weights=w)
+        out_f = make_spec(rule, f=F, impl="fused", n=n).aggregate(
+            g, mask=mask, weights=w)
+        assert_agree(out_d, out_g, jnp.float32, rule)
+        assert float(jnp.max(jnp.abs(out_d - out_f))) > 1e-3, (
+            f"{rule}: fused masked semantics unexpectedly collapsed into "
+            "the gather/pallas semantics — update the make_spec docstring")
+    # coordinate-wise rules: all three impls agree bit-for-bit
+    for rule in ("coordinate_median", "trimmed_mean"):
+        outs = [make_spec(rule, f=F, impl=i, n=n).aggregate(
+            g, mask=mask, weights=w) for i in ("pallas", "gather", "fused")]
+        np.testing.assert_array_equal(np.asarray(outs[0]),
+                                      np.asarray(outs[1]), err_msg=rule)
+        np.testing.assert_array_equal(np.asarray(outs[0]),
+                                      np.asarray(outs[2]), err_msg=rule)
+
+
+def test_cge_selection_is_bitwise():
+    """What the (f, eps) guarantee rests on: the kernel eliminates exactly
+    the rows the dense reference eliminates."""
+    for n, d, seed in [(9, 512, 0), (12, 771, 1), (16, 1300, 2)]:
+        g = data(n, d, jnp.float32, seed)
+        gp, _ = _pad_d(g)
+        w_kernel = cge_select(gram(gp), n - F)
+        w_ref = ref.cge_select_ref(g, n - F)
+        np.testing.assert_array_equal(np.asarray(w_kernel),
+                                      np.asarray(w_ref), err_msg=str((n, d)))
+
+
+def test_selection_survives_nonfinite_adversary():
+    """An inf-coordinate gradient (the unbounded Byzantine row this
+    library exists to defend against) turns its d2 row NaN; NaN compares
+    False against everything, so a naive comparison-rank would hand EVERY
+    NaN row rank 0 and silently average multiple rows.  The kernels must
+    keep the selection cardinality exact and pick only finite rows."""
+    n, d, f = 8, 512, 2
+    g = data(n, d, jnp.float32, 12)
+    g = g.at[1, 7].set(jnp.inf).at[5, 3].set(-jnp.inf)   # 2 hostile rows
+    gp, _ = _pad_d(g)
+    gr = gram(gp)
+    w_krum = np.asarray(krum_select(gr, f))
+    assert w_krum.sum() == 1.0 and set(np.unique(w_krum)) <= {0.0, 1.0}
+    assert w_krum[1] == 0.0 and w_krum[5] == 0.0         # finite row wins
+    w_cge = np.asarray(cge_select(gr, n - f))
+    assert w_cge.sum() == n - f and set(np.unique(w_cge)) <= {0.0, 1.0}
+    assert w_cge[1] == 0.0 and w_cge[5] == 0.0           # inf norms dropped
+    # and through the spec engine: the aggregate stays finite
+    for rule in ("krum", "cge"):
+        out = make_spec(rule, f=f, impl="pallas", n=n).aggregate(g)
+        assert bool(jnp.all(jnp.isfinite(out))), rule
+
+
+def test_krum_selection_is_bitwise():
+    for n, d, seed in [(9, 512, 0), (12, 771, 1), (16, 1300, 2)]:
+        g = data(n, d, jnp.float32, seed)
+        gp, _ = _pad_d(g)
+        w_kernel = krum_select(gram(gp), F)
+        w_ref = ref.krum_select_ref(g, F)
+        np.testing.assert_array_equal(np.asarray(w_kernel),
+                                      np.asarray(w_ref), err_msg=str((n, d)))
+
+
+# ---------------------------------------------------------------------------
+# 2. raw-kernel parity vs the pure-jnp oracles in kernels/ref.py
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("stat,b", [("median", 0), ("trimmed_mean", 2)])
+def test_coord_stat_matches_oracle(n, stat, b):
+    g = data(n, 1024, jnp.float32, 5)
+    out = coord_stat(g, stat, b=b)
+    expect = (ref.median_from_sorted if stat == "median"
+              else lambda s: ref.trimmed_mean_from_sorted(s, b))(
+                  jnp.sort(g, axis=0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("stat,b", [("median", 0), ("trimmed_mean", 2)])
+def test_masked_coord_stat_matches_oracle(n, stat, b, dtype):
+    g = data(n, 1024, dtype, 6)
+    mask, _ = mode_args("masked", n, 7)
+    w = jax.random.uniform(jax.random.PRNGKey(8), (n,), minval=0.2,
+                           maxval=1.0) * mask
+    wn = w / jnp.sum(w)
+    out = masked_coord_stat(g, mask.astype(jnp.float32), wn, stat, b=b)
+    expect = ref.masked_stat_ref(g, mask, wn, stat, b=b)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# 3. caps-driven auto-selection (the acceptance criterion)
+
+
+def test_make_spec_auto_selects_pallas():
+    for rule in RULES:
+        assert pallas_available(rule), rule
+        assert make_spec(rule, n=12, f=F).impl == "pallas", rule
+    # non-kernelized rules keep the fused default ...
+    for rule in ("mean", "mda", "geometric_median", "bulyan", "zeno_pp"):
+        assert make_spec(rule, f=1).impl == "fused", rule
+    # ... wrappers never kernelize themselves (the inner spec does)
+    from repro.core.aggregators import clipped
+    spec = clipped(make_spec("trimmed_mean", f=F), tau=1.0)
+    assert spec.impl == "fused" and spec.inner.impl == "pallas"
+
+
+def test_impl_override_and_validation():
+    assert make_spec("trimmed_mean", f=F, impl="fused").impl == "fused"
+    assert make_spec("trimmed_mean", f=F, impl="gather").impl == "gather"
+    spec = make_spec("trimmed_mean", f=F).with_impl("gather")
+    assert spec.impl == "gather"
+    assert spec.with_impl("auto").impl == "pallas"
+    with pytest.raises(ValueError, match="pallas"):
+        make_spec("geometric_median", f=F, impl="pallas")
+    with pytest.raises(ValueError, match="impl must be"):
+        make_spec("trimmed_mean", f=F, impl="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# 4. async-loop fault masks: parity along a simulated fault trace, and
+#    fixed shapes => the jitted kernel path never retraces
+
+
+def _fault_trace_weights(n, steps):
+    from repro.simulator.async_loop import (SimConfig, plan_arrivals,
+                                            staleness_weights)
+    from repro.simulator.faults import CrashRecover, MessageDrop, Straggler
+    sim = SimConfig(faults=(Straggler(dist="lognormal", scale=0.6),
+                            CrashRecover(rate=0.15, mean_down=2.0),
+                            MessageDrop(p=0.15)),
+                    quorum=max(2, n - 3), max_staleness=3, seed=11)
+    atrace = plan_arrivals(sim, n, steps)
+    return atrace, staleness_weights(sim, atrace)
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_parity_under_async_fault_masks(rule):
+    """Every step of a chaos trace (stragglers + crash/recover + message
+    drops): the kernel path agrees with the gather path on exactly the
+    quorum masks and staleness discounts the async loop would feed it."""
+    n, d, steps = 8, 640, 12
+    pa = make_spec(rule, f=2, impl="pallas", n=n)
+    ga = make_spec(rule, f=2, impl="gather", n=n)
+    atrace, contrib_w = _fault_trace_weights(n, steps)
+    g = data(n, d, jnp.float32, 9)
+    for t in range(steps):
+        mask = jnp.asarray(atrace.contrib[t])
+        if not bool(mask.any()):
+            continue
+        w = jnp.asarray(contrib_w[t])
+        out = pa.aggregate(g, mask=mask, weights=w)
+        expect = ga.aggregate(g, mask=mask, weights=w)
+        assert_agree(out, expect, jnp.float32, rule)
+
+
+def test_async_loop_end_to_end_parity():
+    """The tentpole, end to end: the async training loop under a fault
+    schedule produces BIT-IDENTICAL parameters with impl="pallas" and
+    impl="gather" aggregators — the kernel path is a drop-in for the
+    reference inside the jitted step (threaded state, quorum masks,
+    staleness weights and all)."""
+    from repro.configs import get_config
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant
+    from repro.simulator.async_loop import SimConfig, async_train_loop
+    from repro.simulator.faults import MessageDrop, Straggler
+    from repro.training.step import ByzantineConfig
+
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=64,
+                                                 dtype="float32")
+    sim = SimConfig(faults=(Straggler(dist="lognormal", scale=0.7),
+                            MessageDrop(p=0.15)),
+                    quorum=6, max_staleness=3, seed=5)
+    results = {}
+    for impl in ("pallas", "gather"):
+        ds = SyntheticLM(vocab_size=64, seq_len=8, n_agents=8,
+                         per_agent_batch=1)
+        bz = ByzantineConfig(
+            n_agents=8, f=2, attack="sign_flip",
+            aggregator=make_spec("trimmed_mean", f=2, impl=impl, n=8))
+        # _force_general: every step runs the masked/weighted kernel path
+        # (the path under test) and the sync fast path never compiles
+        params, hist = async_train_loop(
+            cfg, bz, adamw(constant(1e-3)), ds, steps=3, sim=sim,
+            log_every=1, log_fn=lambda *_: None, _force_general=True)
+        results[impl] = (params, hist)
+    pa, ga = results["pallas"], results["gather"]
+    for x, y in zip(jax.tree.leaves(pa[0]), jax.tree.leaves(ga[0])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert [m["loss"] for m in pa[1]] == [m["loss"] for m in ga[1]]
+
+
+def test_fault_masks_do_not_retrace():
+    """The masked kernels take the quorum mask and discounts as traced
+    operands: 10 different fault-mask rows must reuse ONE compilation."""
+    n, d = 8, 640
+    spec = make_spec("trimmed_mean", f=2, impl="pallas", n=n)
+    traces = []
+
+    @jax.jit
+    def step(g, mask, w):
+        traces.append(1)                     # python side effect: tracing
+        return spec.aggregate(g, mask=mask, weights=w)
+
+    g = data(n, d, jnp.float32, 10)
+    atrace, contrib_w = _fault_trace_weights(n, 10)
+    for t in range(10):
+        step(g, jnp.asarray(atrace.contrib[t]),
+             jnp.asarray(contrib_w[t])).block_until_ready()
+    assert len(traces) == 1, f"kernel path retraced {len(traces)} times"
