@@ -8,7 +8,10 @@ Three fault profiles on the same smoke-scale LM:
 
 Per profile: wall-clock steps/sec (jitted, host-dispatched), virtual-time
 per step (the simulated cluster's wall clock), staleness histogram, final
-loss.  ``python benchmarks/bench_async.py`` writes ``BENCH_async.json``;
+loss.  A membership-churn series (PR 4) additionally sweeps churn rates
+and compares the bucketed elastic spec against the naive one-plan-per-
+live-count re-jit baseline — steps/sec and RECOMPILE COUNT per run.
+``python benchmarks/bench_async.py`` writes ``BENCH_async.json``;
 ``run.py`` consumes :func:`run` like every other bench section.
 """
 from __future__ import annotations
@@ -17,11 +20,12 @@ import json
 import time
 
 from repro.configs import get_config
-from repro.core.aggregators import make_spec
+from repro.core.aggregators import elastic, frac, make_spec
+from repro.core.tracecount import TRACE_COUNTS
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
-from repro.simulator import (CrashRecover, MessageDrop, SimConfig, Straggler,
-                             async_train_loop, plan_arrivals)
+from repro.simulator import (Churn, CrashRecover, MessageDrop, SimConfig,
+                             Straggler, async_train_loop, plan_arrivals)
 from repro.training import ByzantineConfig
 
 PROFILES = {
@@ -74,6 +78,56 @@ def bench_profile(name: str, sim: SimConfig, steps: int, aggregator=None):
     }
 
 
+CHURN_RATES = (0.0, 0.05, 0.2)
+ELASTIC_BUCKETS = (4, 6, 8)                   # the bucketed elastic spec
+NAIVE_BUCKETS = tuple(range(4, 9))            # one plan per live count
+
+
+def bench_churn(rate: float, steps: int, buckets) -> dict:
+    """One membership-churn run: steps/sec + how many times the jitted
+    steps (async per-bucket + sync fast path) actually compiled."""
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=64,
+                                                 dtype="float32")
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
+                     per_agent_batch=2)
+    spec = make_spec("trimmed_mean", f=frac(0.25),
+                     n=elastic(8, buckets=buckets))
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
+                         attack="sign_flip")
+    sim = SimConfig(faults=(Churn(rate=rate, mean_out=2.0,
+                                  agents=(0, 1, 2, 3)),),
+                    quorum=4, seed=0)
+    before = (TRACE_COUNTS["async_step"], TRACE_COUNTS["train_step"])
+    t0 = time.perf_counter()
+    _, hist = async_train_loop(cfg, bz, adamw(constant(3e-3)), ds,
+                               steps=steps, sim=sim, log_every=steps,
+                               log_fn=lambda *_: None)
+    wall = time.perf_counter() - t0
+    recompiles = ((TRACE_COUNTS["async_step"] - before[0])
+                  + (TRACE_COUNTS["train_step"] - before[1]))
+    s = plan_arrivals(sim, 8, steps).summary()
+    return {
+        "churn_rate": rate,
+        "buckets": list(buckets),
+        "steps": steps,
+        "steps_per_sec": steps / wall,
+        "recompiles": recompiles,
+        "mean_live": s["mean_live"],
+        "final_loss": hist[-1]["loss"],
+    }
+
+
+def churn_series(steps: int) -> list[dict]:
+    rows = []
+    for rate in CHURN_RATES:
+        for label, buckets in (("elastic", ELASTIC_BUCKETS),
+                               ("naive_rejit", NAIVE_BUCKETS)):
+            r = bench_churn(rate, steps, buckets)
+            r["variant"] = label
+            rows.append(r)
+    return rows
+
+
 def run(quick: bool = True):
     """run.py harness entry point: CSV rows."""
     steps = 20 if quick else 100
@@ -89,6 +143,18 @@ def run(quick: bool = True):
                         f"stal={r['mean_staleness']:.2f} "
                         f"loss={r['final_loss']:.3f}"),
         })
+    if not quick:
+        # 6 extra training runs (3 rates x 2 variants) — full runs only;
+        # the quick harness pass stays within its historical budget
+        for r in churn_series(steps):
+            rows.append({
+                "bench": "async",
+                "name": f"churn{r['churn_rate']}+{r['variant']}",
+                "us_per_call": 1e6 / r["steps_per_sec"],
+                "derived": (f"recompiles={r['recompiles']} "
+                            f"live={r['mean_live']:.1f} "
+                            f"loss={r['final_loss']:.3f}"),
+            })
     return rows
 
 
@@ -97,12 +163,20 @@ def main(out: str = "BENCH_async.json", steps: int = 40):
     runs = [(n, s, None) for n, s in PROFILES.items()] + [ZENO_PP_PROFILE]
     results = {name: bench_profile(name, sim, steps, aggregator=agg)
                for name, sim, agg in runs}
+    results["churn"] = churn_series(steps)
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     for name, r in results.items():
+        if name == "churn":
+            continue
         print(f"{name:12s} {r['steps_per_sec']:8.2f} steps/s  "
               f"vtime/step {r['virtual_time_per_step']:6.2f}  "
               f"stal {r['mean_staleness']:.2f}  loss {r['final_loss']:.3f}")
+    for r in results["churn"]:
+        print(f"churn {r['churn_rate']:<4} {r['variant']:12s} "
+              f"{r['steps_per_sec']:8.2f} steps/s  "
+              f"recompiles {r['recompiles']:2d}  "
+              f"live {r['mean_live']:.1f}  loss {r['final_loss']:.3f}")
     print(f"wrote {out}")
 
 

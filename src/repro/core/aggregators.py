@@ -26,31 +26,41 @@ through ``**hyper``.  This module replaces all of that with one object:
     available kernel and proven against the gather path by
     tests/test_kernels_parity.py.
 
-Registered rules — capabilities and available impls
-    ==================  =========================  =====================
-    rule                caps                       impls
-    ==================  =========================  =====================
-    mean                weight_decomposable        fused, gather
-    krum                weight_decomp, pairwise    fused, gather, pallas
-    multi_krum          weight_decomp, pairwise    fused, gather
-    m_krum              weight_decomp, pairwise    fused, gather
-    mda                 weight_decomp, pairwise    fused, gather
-    cge                 weight_decomp, pairwise    fused, gather, pallas
-    cgc                 weight_decomposable        fused, gather
-    zeno                weight_decomp, stateful    fused, gather
-    zeno_pp             weight_decomp, stateful    custom (fused)
-    coordinate_median   coordwise                  fused, gather, pallas*
-    trimmed_mean        coordwise                  fused, gather, pallas*
-    phocas              coordwise                  fused, gather
-    mean_around_median  coordwise                  fused, gather
-    geometric_median    iterative                  fused, gather
-    rfa                 iterative                  fused, gather
-    median_of_means     iterative                  fused, gather
-    bulyan              iterative, pairwise        fused, gather
-    clipped             wrapper                    delegates to inner
-    bucketed            wrapper                    delegates to inner
-    staleness_disc.     wrapper                    delegates to inner
-    ==================  =========================  =====================
+Registered rules — capabilities, available impls, elastic-n plans
+    ==================  =========================  ===================  =======
+    rule                caps                       impls                elastic
+    ==================  =========================  ===================  =======
+    mean                weight_decomposable        fused, gather        yes
+    krum                weight_decomp, pairwise    fused, gather, pls   yes (nbr counts)
+    multi_krum          weight_decomp, pairwise    fused, gather        yes (nbr counts)
+    m_krum              weight_decomp, pairwise    fused, gather        yes (nbr counts)
+    mda                 weight_decomp, pairwise    fused, gather        yes (subset tables)
+    cge                 weight_decomp, pairwise    fused, gather, pls   yes (keep counts)
+    cgc                 weight_decomposable        fused, gather        yes
+    zeno                weight_decomp, stateful    fused, gather        yes (state n-free)
+    zeno_pp             weight_decomp, stateful    custom (fused)       yes (state n-free)
+    coordinate_median   coordwise                  fused, gather, pls*  yes
+    trimmed_mean        coordwise                  fused, gather, pls*  yes (trim counts)
+    phocas              coordwise                  fused, gather        yes
+    mean_around_median  coordwise                  fused, gather        yes
+    geometric_median    iterative                  fused, gather        yes
+    rfa                 iterative                  fused, gather        yes
+    median_of_means     iterative                  fused, gather        yes (group counts)
+    bulyan              iterative, pairwise        fused, gather        yes (theta/beta)
+    clipped             wrapper                    delegates to inner   via inner
+    bucketed            wrapper                    delegates to inner   via inner
+    staleness_disc.     wrapper                    delegates to inner   via inner
+    ==================  =========================  ===================  =======
+
+    ``elastic``: every rule supports elastic-n specs — build with
+    ``make_spec(name, n=elastic(n_max, buckets=...), f=frac(0.2))`` and
+    the per-bucket static plans named in parentheses are precomputed at
+    BUILD time; ``spec.respecialize(n_live)`` then selects the bucket's
+    concrete spec (dataclass-equal to a fresh ``make_spec(..., n=b)``, so
+    jit caches hit and membership churn over the bucketed range costs at
+    most ``len(buckets)`` compilations).  ``f = frac(ratio)`` re-derives
+    the Byzantine budget per bucket so breakdown bounds track the live
+    roster; a static int ``f`` is carried unchanged across buckets.
 
     ``pallas*``: also has a FUSED masked/weighted kernel (mean-imputation
     inside the sort tile — repro.kernels.masked) used by the async loop's
@@ -207,6 +217,113 @@ def trim_count(n: int, f: int, beta: float | None) -> int:
 
 
 # ---------------------------------------------------------------------------
+# elastic membership: n as a bucketed range, f as a live-roster policy
+
+
+@dataclass(frozen=True)
+class ElasticN:
+    """A bucketed range of live agent counts for elastic-n specs.
+
+    ``buckets`` are ascending capacities ending at ``n_max``; a live roster
+    of ``n_live`` agents is served by the smallest bucket >= n_live (live
+    rows are packed into the bucket's stack, surplus slots are ghost rows
+    masked out under the engine's documented masked semantics).  Build via
+    :func:`elastic`."""
+    n_max: int
+    buckets: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("elastic: need at least one bucket")
+        if list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError(
+                f"elastic: buckets must be strictly ascending, got "
+                f"{self.buckets}")
+        if self.buckets[-1] != self.n_max or self.buckets[0] < 1:
+            raise ValueError(
+                f"elastic: buckets must lie in [1, n_max={self.n_max}] and "
+                f"end at n_max, got {self.buckets}")
+
+    def bucket_for(self, n_live: int) -> int:
+        """Smallest bucket capacity serving ``n_live`` live agents."""
+        if n_live > self.n_max:
+            raise ValueError(
+                f"n_live={n_live} exceeds the elastic n_max={self.n_max}")
+        if n_live < 1:
+            raise ValueError(f"n_live must be >= 1, got {n_live}")
+        for b in self.buckets:
+            if b >= n_live:
+                return b
+        raise AssertionError("unreachable: last bucket == n_max")
+
+    def pack(self, live):
+        """Pack live agent indices into their bucket's fixed shape.
+
+        ``live``: 1-d array of live agent slots (ascending, >= 1 entry —
+        raises on an empty roster; the loops only reach the elastic path
+        when something was delivered, which implies a live member).
+        Returns ``(bucket, idx, valid)``: ``idx`` (bucket,) int32 — the
+        live slots padded by REPEATING the first live slot — and ``valid``
+        (bucket,) bool marking the real ones.  The one shared packing
+        idiom of the async loop, the sync step driver and the serving
+        engine, so pad strategy and error behaviour can never diverge."""
+        live = np.asarray(live, np.int32)
+        b = self.bucket_for(len(live))       # raises on an empty roster
+        idx = np.concatenate([live, np.full(b - len(live), live[0],
+                                            np.int32)])
+        valid = np.arange(b) < len(live)
+        return b, idx, valid
+
+
+def elastic(n_max: int, buckets: int | Tuple[int, ...] = 3,
+            n_min: int | None = None) -> ElasticN:
+    """Elastic agent count for ``make_spec(..., n=elastic(n_max, ...))``.
+
+    ``buckets`` is either an explicit ascending tuple of capacities (the
+    last must equal ``n_max``) or a bucket COUNT: capacities are then
+    spread evenly over [n_min (default ~n_max/2), n_max].  More buckets =
+    tighter plans under churn but more (bounded, build-time-planned)
+    compilations; ``buckets=tuple(range(n_min, n_max + 1))`` degenerates
+    to one plan per live count — the naive re-jit baseline the benchmarks
+    compare against."""
+    if isinstance(buckets, int):
+        lo = n_min if n_min is not None else max(1, (n_max + 1) // 2)
+        if not 1 <= lo <= n_max:
+            raise ValueError(f"n_min={lo} outside [1, n_max={n_max}]")
+        k = max(1, int(buckets))
+        if k == 1:
+            return ElasticN(n_max=n_max, buckets=(n_max,))
+        pts = np.unique(np.linspace(lo, n_max, k).round().astype(int))
+        return ElasticN(n_max=n_max, buckets=tuple(int(b) for b in pts))
+    return ElasticN(n_max=n_max, buckets=tuple(int(b) for b in buckets))
+
+
+@dataclass(frozen=True)
+class FracF:
+    """A Byzantine-budget POLICY: ``f = max(min_f, floor(ratio * n))``,
+    re-derived per elastic bucket so the breakdown bound tracks the live
+    roster.  Build via :func:`frac`."""
+    ratio: float
+    min_f: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.ratio < 1.0:
+            raise ValueError(f"frac ratio must be in [0, 1), got "
+                             f"{self.ratio}")
+
+    def resolve(self, n: int) -> int:
+        # epsilon guards fp products landing just below an integer
+        # (0.29 * 100 == 28.999999999999996): the budget must not silently
+        # tolerate one fewer adversary than the stated ratio
+        return max(self.min_f, int(np.floor(self.ratio * n + 1e-9)))
+
+
+def frac(ratio: float, min_f: int = 0) -> FracF:
+    """``f=frac(0.2)``: tolerate 20% of the LIVE roster per bucket."""
+    return FracF(ratio=ratio, min_f=min_f)
+
+
+# ---------------------------------------------------------------------------
 # capability flags + registry
 
 
@@ -325,6 +442,11 @@ class AggregatorSpec:
     impl_hyper: tuple = ()            # impl-only keys, e.g. native_dtype
     inner: Optional["AggregatorSpec"] = None   # wrapper composition
     n: Optional[int] = None           # static agent count (plan precompute)
+    # elastic-n: the bucketed live-count range this spec was built for
+    # (``n`` then holds n_max and ``f`` the budget resolved at n_max);
+    # ``respecialize(n_live)`` selects the per-bucket concrete spec
+    elastic: Optional[ElasticN] = None
+    f_policy: Optional[FracF] = None  # f re-derived per bucket when set
 
     # -- introspection ----------------------------------------------------
     @property
@@ -346,6 +468,17 @@ class AggregatorSpec:
                                           and self.inner.staleness_aware)
 
     @property
+    def elastic_n(self) -> Optional[ElasticN]:
+        """The ElasticN governing this spec — its own, or the wrapped
+        chain's (composition wrappers delegate elasticity to their inner
+        rule, however deeply nested).  This is what the training/serving
+        loops consult: reading ``.elastic`` alone would silently miss
+        wrapper(elastic-inner) specs."""
+        if self.elastic is not None:
+            return self.elastic
+        return self.inner.elastic_n if self.inner is not None else None
+
+    @property
     def hyper_dict(self) -> dict:
         return dict(self.hyper)
 
@@ -361,8 +494,11 @@ class AggregatorSpec:
 
     def describe(self) -> str:
         h = ", ".join(f"{k}={v}" for k, v in self.hyper)
+        el = (f", elastic[{'/'.join(map(str, self.elastic.buckets))}]"
+              if self.elastic else "")
         inner = f" -> {self.inner.describe()}" if self.inner else ""
-        return f"{self.name}(f={self.f}{', ' + h if h else ''})" + inner
+        return (f"{self.name}(f={self.f}{', ' + h if h else ''}{el})"
+                + inner)
 
     # -- evolution --------------------------------------------------------
     def with_f(self, f: int) -> "AggregatorSpec":
@@ -378,6 +514,25 @@ class AggregatorSpec:
     def with_impl(self, impl: str) -> "AggregatorSpec":
         return dataclasses.replace(
             self, impl=_resolve_impl(self.name, impl))
+
+    def respecialize(self, n_live: int) -> "AggregatorSpec":
+        """The concrete spec serving a live roster of ``n_live`` agents.
+
+        Elastic specs select the smallest bucket >= n_live: the returned
+        spec is dataclass-EQUAL (hence hash-equal, hence jit-cache-equal)
+        to a fresh ``make_spec(name, f=f_b, impl=..., n=b, **hyper)`` with
+        ``f_b`` re-derived by the ``frac`` policy when one was given —
+        bit-for-bit parity is pinned by
+        tests/test_membership_conformance.py.  All bucket specs are
+        prebuilt at ``make_spec`` time, so this never retraces and never
+        enumerates plans on the hot path; churn over the bucketed range
+        costs at most ``len(buckets)`` step compilations.
+
+        Non-elastic specs return themselves when ``n_live`` matches (or
+        ``n`` was never pinned); a mismatched static n raises — silently
+        serving a different roster than the spec was planned for would
+        void the (n, f) guarantee."""
+        return _respecialize(self, n_live)
 
     def with_impl_hyper(self, **kw) -> "AggregatorSpec":
         d = get_aggregator_def(self.name)
@@ -470,6 +625,46 @@ class AggregatorSpec:
         return d.weights_fn(self, grads, state)
 
 
+@functools.lru_cache(maxsize=None)
+def _respecialize(spec: AggregatorSpec, n_live: int) -> AggregatorSpec:
+    """Cached respecialization: repeat calls for the same (spec, n_live)
+    return the SAME object, so hot loops pay one dict probe and jit
+    closures see a stable static."""
+    if spec.elastic is None:
+        if spec.inner is not None and spec.inner.elastic_n is not None:
+            # key the wrapper on the RESOLVED inner (recursing through
+            # however many wrapper levels sit above the elastic rule), so
+            # every n_live that maps to the same bucket yields the same
+            # wrapper object
+            return _with_inner(spec, _respecialize(spec.inner, n_live))
+        if spec.n is None or spec.n == n_live:
+            return spec
+        raise ValueError(
+            f"{spec.describe()} was built for static n={spec.n}, not "
+            f"n_live={n_live} — build it with n=elastic(...) to allow "
+            "membership changes")
+    return _bucket_spec(spec, spec.elastic.bucket_for(n_live))
+
+
+@functools.lru_cache(maxsize=None)
+def _with_inner(spec: AggregatorSpec, inner: AggregatorSpec):
+    return dataclasses.replace(spec, inner=inner)
+
+
+@functools.lru_cache(maxsize=None)
+def _bucket_spec(spec: AggregatorSpec, b: int) -> AggregatorSpec:
+    """The concrete per-bucket spec of an elastic spec — cached, so every
+    respecialize() call for the same bucket returns the SAME object."""
+    f_b = spec.f_policy.resolve(b) if spec.f_policy is not None else spec.f
+    inner = spec.inner
+    if inner is not None and inner.elastic_n is not None:
+        inner = inner.respecialize(b)
+    out = dataclasses.replace(spec, n=b, f=f_b, elastic=None,
+                              f_policy=None, inner=inner)
+    _warm_plan(out, b)
+    return out
+
+
 def pallas_available(name: str) -> bool:
     """True iff ``name`` has a registered Pallas kernel path AND its caps
     declare the matching structure (coordinate-wise order statistics or
@@ -501,8 +696,9 @@ def _resolve_impl(name: str, impl: str) -> str:
     return impl
 
 
-def make_spec(name: str, f: int = 0, impl: str = "auto",
-              inner: AggregatorSpec | None = None, n: int | None = None,
+def make_spec(name: str, f: "int | FracF" = 0, impl: str = "auto",
+              inner: AggregatorSpec | None = None,
+              n: "int | ElasticN | None" = None,
               **hyper) -> AggregatorSpec:
     """Build a validated :class:`AggregatorSpec`.
 
@@ -511,6 +707,13 @@ def make_spec(name: str, f: int = 0, impl: str = "auto",
     keys (``server_grad``) must be threaded via ``state=`` instead.  When
     ``n`` is given, static plans (MDA subset tables, trim counts) are
     precomputed at build time.
+
+    ``n=elastic(n_max, buckets=...)`` builds an ELASTIC spec: static plans
+    are precomputed per bucket at build time and
+    :meth:`AggregatorSpec.respecialize` selects the bucket's concrete spec
+    without retracing when membership changes.  ``f`` may then be a
+    :func:`frac` policy, re-derived per bucket so breakdown bounds track
+    the live roster (a plain int f is carried unchanged).
 
     ``impl="auto"`` (the default) resolves to ``"pallas"`` when the rule's
     :class:`AggregatorCaps` (coordwise / pairwise) match a registered
@@ -529,6 +732,17 @@ def make_spec(name: str, f: int = 0, impl: str = "auto",
     to it).  tests/test_kernels_parity.py pins all three."""
     d = get_aggregator_def(name)
     impl = _resolve_impl(name, impl)
+    el = n if isinstance(n, ElasticN) else None
+    n_int = el.n_max if el is not None else n
+    f_policy = f if isinstance(f, FracF) else None
+    if f_policy is not None:
+        if n_int is None:
+            raise ValueError(
+                f"{name}: f=frac(...) needs n= to resolve the budget — "
+                "pass n=<int> or n=elastic(...)")
+        f = f_policy.resolve(n_int)
+        if el is None:
+            f_policy = None           # static n: nothing to re-derive
     if f < 0:
         raise ValueError(f"f must be >= 0, got {f}")
     if d.is_wrapper and inner is None:
@@ -552,9 +766,13 @@ def make_spec(name: str, f: int = 0, impl: str = "auto",
     spec = AggregatorSpec(name=name, f=f,
                           hyper=tuple(sorted(plain.items())), impl=impl,
                           impl_hyper=tuple(sorted(impl_only.items())),
-                          inner=inner, n=n)
-    if n is not None:
-        _warm_plan(spec, n)
+                          inner=inner, n=n_int, elastic=el,
+                          f_policy=f_policy)
+    if el is not None:
+        for b in el.buckets:          # prebuild every bucket's plans NOW
+            _bucket_spec(spec, b)
+    elif n_int is not None:
+        _warm_plan(spec, n_int)
     return spec
 
 
@@ -659,10 +877,16 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
             m.astype(l.dtype)[None], l.shape), mean_sel, grads))
     if d.caps.weight_decomposable and spec.impl == "fused":
         # imputed rows carry the average arrived weight: a rule selecting
-        # one (it equals the weighted consensus) stays a valid update
+        # one (it equals the weighted consensus) stays a valid update.
+        # Normalize to the RULE's own total weight, not to 1: selection
+        # rules sum to 1 so nothing changes, but cgc's clip attenuation
+        # (sum < 1) must survive masking — and with mask all-True and
+        # weights all-one, fw == rule_w bit-for-bit (the documented
+        # full-roster identity the conformance suite pins)
         row_w = jnp.where(mask, w, tot / cnt)
-        fw = d.weights_fn(spec, imputed, state) * row_w
-        fw = fw / jnp.maximum(jnp.sum(fw), 1e-30)
+        rule_w = d.weights_fn(spec, imputed, state)
+        fw = rule_w * row_w
+        fw = fw * (jnp.sum(rule_w) / jnp.maximum(jnp.sum(fw), 1e-30))
         return tree_weighted_sum(imputed, fw)
     agg = _sync_aggregate(spec, d, imputed, state)
     scale = tot / cnt                      # <= 1, == 1 when all fresh
@@ -770,14 +994,15 @@ def _w_m_krum(spec, grads, state):
     n, f = _n_agents(grads), spec.f
     m = spec.hp("m", 2)
     d2 = _gram_to_d2(tree_gram(grads))
-
-    def body(carry, _):
-        mask, w = carry
-        s = D.krum_scores(d2, f, mask=mask)
-        i = jnp.argmin(s)
-        return (mask.at[i].set(False), w.at[i].set(1.0 / m)), None
-    (_, w), _ = jax.lax.scan(
-        body, (jnp.ones((n,), bool), jnp.zeros((n,))), None, length=m)
+    # unrolled with a shrinking neighbour count (see D.krum_scores): the
+    # fused path must select exactly the rows the dense reference selects
+    mask = jnp.ones((n,), bool)
+    w = jnp.zeros((n,))
+    for it in range(m):
+        s = D.krum_scores(d2, f, mask=mask, k=max(n - it - f - 2, 1))
+        i = D.argmin_tiebreak(s, D.masked_row_sums(d2, mask))
+        mask = mask.at[i].set(False)
+        w = w.at[i].set(1.0 / m)
     return w
 
 
@@ -786,7 +1011,11 @@ def _w_mda(spec, grads, state):
     combos = mda_combos(n, f)
     d2 = _gram_to_d2(tree_gram(grads))
     sub = d2[combos[:, :, None], combos[:, None, :]]
-    best = jnp.asarray(combos)[jnp.argmin(jnp.max(sub, axis=(1, 2)))]
+    # equal-diameter ties broken by subset perimeter (permutation
+    # invariance under elastic re-packing — see D.argmin_tiebreak)
+    best = jnp.asarray(combos)[
+        D.argmin_tiebreak(jnp.max(sub, axis=(1, 2)),
+                          jnp.sum(sub, axis=(1, 2)))]
     return jnp.zeros((n,)).at[best].set(1.0 / (n - f))
 
 
@@ -893,15 +1122,16 @@ def tree_bulyan(grads, f):
     n = _n_agents(grads)
     theta = n - 2 * f
     d2 = _gram_to_d2(tree_gram(grads))
-
-    def body(carry, _):
-        mask, sel = carry
-        s = D.krum_scores(d2, f, mask=mask)
-        i = jnp.argmin(s)
-        return (mask.at[i].set(False), sel.at[i].set(True)), None
-    (_, sel), _ = jax.lax.scan(
-        body, (jnp.ones((n,), bool), jnp.zeros((n,), bool)), None,
-        length=theta)
+    # unrolled with a shrinking neighbour count (see D.krum_scores) so all
+    # theta selections are genuine — the scan version collapsed to index
+    # order after f + 2 picks
+    mask = jnp.ones((n,), bool)
+    sel = jnp.zeros((n,), bool)
+    for it in range(theta):
+        s = D.krum_scores(d2, f, mask=mask, k=max(n - it - f - 2, 1))
+        i = D.argmin_tiebreak(s, D.masked_row_sums(d2, mask))
+        mask = mask.at[i].set(False)
+        sel = sel.at[i].set(True)
 
     beta = max(theta - 2 * f, 1)
 
@@ -1246,7 +1476,7 @@ __all__ = [
     "AggregatorCaps", "AggregatorDef", "AggregatorSpec",
     "AggregatorDeprecationWarning", "REGISTRY", "register_aggregator",
     "get_aggregator_def", "list_aggregators", "make_spec",
-    "pallas_available",
+    "pallas_available", "ElasticN", "FracF", "elastic", "frac",
     "clipped", "bucketed", "staleness_discounted",
     "tree_stack_ravel", "tree_unravel_like", "tree_sqnorms", "tree_gram",
     "tree_dot", "tree_weighted_sum", "tree_where_agents",

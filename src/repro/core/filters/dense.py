@@ -50,24 +50,54 @@ def pairwise_sq_dists(g):
     return jnp.where(jnp.eye(n, dtype=bool), 0.0, d2)
 
 
-def krum_scores(d2, f, mask=None):
-    """Krum score s(i) = sum of distances to the n-f-2 closest others.
+def krum_scores(d2, f, mask=None, k=None):
+    """Krum score s(i) = sum of distances to the k closest others
+    (k defaults to the classic n - f - 2).
 
     ``mask``: bool (n,) — unavailable agents get +inf distance & +inf score
-    (used by iterative m-Krum / Bulyan selection).
+    (used by iterative m-Krum / Bulyan selection).  Iterative callers MUST
+    shrink ``k`` with the remaining candidate count (k = remaining - f - 2):
+    once k exceeds candidates - 1 every sum picks up +inf pads, every score
+    collapses to inf, and argmin degrades to index order — the selection
+    then silently depends on agent NUMBERING, which the membership
+    conformance suite (permutation invariance) rejects.
     """
     n = d2.shape[0]
     big = jnp.asarray(jnp.inf, d2.dtype)
     d2 = d2 + jnp.where(jnp.eye(n, dtype=bool), big, 0.0)   # exclude self
     if mask is not None:
         d2 = jnp.where(mask[None, :], d2, big)
-    k = n - f - 2
-    k = max(k, 1)
+    k = (n - f - 2) if k is None else int(k)
+    k = max(min(k, n - 1), 1)
     neg_top, _ = jax.lax.top_k(-d2, k)                      # k smallest
     scores = -jnp.sum(neg_top, axis=-1)
     if mask is not None:
         scores = jnp.where(mask, scores, big)
     return scores
+
+
+def masked_row_sums(d2, mask):
+    """Full-degree score: sum of a candidate's distances to ALL remaining
+    candidates (masked rows get +inf).  The cheap O(n^2) tie-break
+    secondary for the iterative selection loops — equal to
+    ``krum_scores(..., k=candidates - 1)`` without its top_k sort."""
+    n = d2.shape[0]
+    off = ~jnp.eye(n, dtype=bool)
+    s = jnp.sum(jnp.where(mask[None, :] & off, d2, 0.0), axis=-1)
+    return jnp.where(mask, s, jnp.inf)
+
+
+def argmin_tiebreak(primary, secondary):
+    """Index of the minimum of ``primary``, with EXACT fp ties broken by
+    ``secondary`` (and only then by index).  Iterative krum selection ties
+    structurally — with one neighbour left, the closest PAIR shares one
+    symmetric distance, so both rows carry bitwise-equal scores — and a
+    bare argmin would resolve by agent NUMBERING, which elastic membership
+    makes arbitrary (rows are re-packed per roster bucket).  Secondary =
+    the full-degree score keeps the pick a function of the geometry
+    alone."""
+    tied = primary == jnp.min(primary)
+    return jnp.argmin(jnp.where(tied, secondary, jnp.inf))
 
 
 # ---------------------------------------------------------------------------
@@ -103,18 +133,18 @@ def multi_krum(g, f, m: int = 2):
 
 @register("m_krum")
 def m_krum(g, f, m: int = 2):
-    """First (iterative) variant: recompute scores after each removal."""
+    """First (iterative) variant: recompute scores after each removal.
+    Unrolled (m is static) so the neighbour count shrinks with the
+    remaining candidate set — see :func:`krum_scores`."""
     n = g.shape[0]
-
-    def body(carry, _):
-        mask, acc = carry
-        d2 = pairwise_sq_dists(g)
-        s = krum_scores(d2, f, mask=mask)
-        i = jnp.argmin(s)
-        return (mask.at[i].set(False), acc + g[i]), None
-
-    (mask, acc), _ = jax.lax.scan(
-        body, (jnp.ones((n,), bool), jnp.zeros_like(g[0])), None, length=m)
+    d2 = pairwise_sq_dists(g)
+    mask = jnp.ones((n,), bool)
+    acc = jnp.zeros_like(g[0])
+    for it in range(m):
+        s = krum_scores(d2, f, mask=mask, k=max(n - it - f - 2, 1))
+        i = argmin_tiebreak(s, masked_row_sums(d2, mask))
+        mask = mask.at[i].set(False)
+        acc = acc + g[i]
     return acc / m
 
 
@@ -129,7 +159,11 @@ def mda(g, f):
     d2 = pairwise_sq_dists(g)
     sub = d2[combos[:, :, None], combos[:, None, :]]   # (C, n-f, n-f)
     diam = jnp.max(sub, axis=(1, 2))
-    best = jnp.asarray(combos)[jnp.argmin(diam)]       # jit-safe indexing
+    # equal-diameter subsets tie STRUCTURALLY (different removals that
+    # leave the same bottleneck pair): break by subset perimeter, not by
+    # enumeration order (see argmin_tiebreak)
+    best = jnp.asarray(combos)[
+        argmin_tiebreak(diam, jnp.sum(sub, axis=(1, 2)))]
     return jnp.mean(g[best], axis=0)
 
 
@@ -256,14 +290,20 @@ def bulyan(g, f, base: str = "krum"):
     assert theta >= 1, "Bulyan needs n > 2f (and n >= 4f+3 for guarantees)"
     base_fn = FILTERS[base]
 
-    def body(carry, _):
-        mask, sel = carry
-        # run base filter on the still-available set (mask via +inf trick for
-        # krum; generic base: weight unavailable rows to the mean)
+    # unrolled (theta is static): the krum neighbour count must shrink
+    # with the remaining candidate set or every score collapses to inf
+    # once fewer than n - f - 1 candidates remain (see krum_scores) — the
+    # old scan selected only f + 2 genuine rows and tie-broke the rest by
+    # agent index
+    d2 = pairwise_sq_dists(g) if base == "krum" else None
+    mask = jnp.ones((n,), bool)
+    sel = jnp.zeros((n,), bool)
+    for it in range(theta):
+        # run base filter on the still-available set (mask via +inf trick
+        # for krum; generic base: weight unavailable rows to the mean)
         if base == "krum":
-            d2 = pairwise_sq_dists(g)
-            s = krum_scores(d2, f, mask=mask)
-            i = jnp.argmin(s)
+            s = krum_scores(d2, f, mask=mask, k=max(n - it - f - 2, 1))
+            i = argmin_tiebreak(s, masked_row_sums(d2, mask))
         else:
             avail_mean = (jnp.sum(jnp.where(mask[:, None], g, 0.0), axis=0)
                           / jnp.maximum(jnp.sum(mask), 1))
@@ -271,10 +311,8 @@ def bulyan(g, f, base: str = "krum"):
             d = jnp.sum(jnp.square(g - out[None]), axis=-1)
             d = jnp.where(mask, d, jnp.inf)
             i = jnp.argmin(d)
-        return (mask.at[i].set(False), sel.at[i].set(True)), None
-
-    init = (jnp.ones((n,), bool), jnp.zeros((n,), bool))
-    (mask, sel), _ = jax.lax.scan(body, init, None, length=theta)
+        mask = mask.at[i].set(False)
+        sel = sel.at[i].set(True)
 
     # stage 2: coordinate-wise trimmed average around the median of selected
     beta = max(theta - 2 * f, 1)

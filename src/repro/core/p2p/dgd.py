@@ -175,6 +175,14 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
                  else compile_schedule(tuple(fault_schedule), n, steps + 1,
                                        seed=fault_seed))
         assert trace.n_agents == n, (trace.n_agents, n)
+        if trace.roster is not None:
+            # membership changes a decentralized topology itself (graph
+            # rewiring + weight renormalization) — refusing beats silently
+            # letting churned-out agents keep broadcasting and mixing
+            raise NotImplementedError(
+                "p2p_dgd_run does not support membership (Join/Rejoin/"
+                "Churn) schedules yet — the roster would need to rewire "
+                "the mixing graph; see ROADMAP 'Elastic membership'")
     W = metropolis_weights(adj)
     if isinstance(combine, str):
         comb = COMBINE[combine]

@@ -1,0 +1,38 @@
+"""Trace-count bookkeeping for compile-regression tests.
+
+``count_trace(site)`` is called from inside jit-traced step functions (the
+async/sync training steps, the serving agreement step).  Python side
+effects run once per TRACE, never per execution, so the counter increments
+exactly when XLA (re)compiles that site — the same trick the kernel-parity
+suite uses locally, promoted to a library hook so the membership-retrace
+suite can assert compile bounds on the REAL loops: membership churn over a
+bucketed elastic spec must cost at most ``len(buckets)`` compilations per
+loop, ever (tests/test_membership_retrace.py).
+
+Zero runtime cost on the compiled path; counters are process-global and
+monotonic — tests snapshot before/after rather than resetting blindly.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+TRACE_COUNTS: Counter = Counter()
+
+
+def count_trace(site: str) -> None:
+    """Record one tracing of ``site`` (call from INSIDE the traced fn)."""
+    TRACE_COUNTS[site] += 1
+
+
+def trace_count(site: str) -> int:
+    return TRACE_COUNTS[site]
+
+
+def reset_traces(site: str | None = None) -> None:
+    if site is None:
+        TRACE_COUNTS.clear()
+    else:
+        TRACE_COUNTS.pop(site, None)
+
+
+__all__ = ["TRACE_COUNTS", "count_trace", "trace_count", "reset_traces"]

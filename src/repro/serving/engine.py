@@ -16,7 +16,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.tracecount import count_trace
 from repro.models import decode_step, init_cache, prefill
 
 
@@ -66,7 +68,7 @@ def generate(cfg, params, prompt_batch, max_new_tokens: int,
 def generate_replicated(cfg, params_stack, prompt_batch,
                         max_new_tokens: int, aggregator,
                         seq_capacity: int | None = None, jit: bool = True,
-                        fault_hook=None):
+                        fault_hook=None, roster=None):
     """Byzantine-fault-tolerant greedy decoding over r model replicas.
 
     ``params_stack``: params pytree with a leading replica axis (r, ...) —
@@ -86,6 +88,19 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     still advance with the *agreed* token, matching a real deployment
     where the decode loop is trusted and only replica outputs are not.
 
+    ``roster``: optional (steps, r) bool membership schedule (elastic
+    replica sets — e.g. ``FaultTrace.roster`` from a Join/Rejoin/Churn
+    schedule; row 0 gates the prefill logits).  A non-member replica's
+    logits are EXCLUDED from agreement — bit-for-bit, its emissions
+    cannot steer the stream — while its cache still advances with the
+    agreed token (a warm standby), so a replica that joins or rejoins
+    mid-decode is instantly consistent and folds straight into the f-of-r
+    vote.  The roster row is a traced operand; with an elastic-n
+    ``aggregator`` (``make_spec(..., n=elastic(r, buckets=...))``) the
+    live rows are packed per bucket and the rule's (n, f) plan tracks the
+    live replica count, costing at most ``len(buckets)`` agreement
+    compilations per call.
+
     Returns (B, max_new_tokens) int32, identical to :func:`generate` on the
     clean params when <= f replicas are corrupted at every step and the
     rule tolerates f.
@@ -104,23 +119,64 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     vdec = jax.vmap(rep_decode, in_axes=(0, None, 0))
 
     def agree(logits_stack):                       # (r, B, V) -> (B,) token
+        count_trace("serving_agree")
         agg = aggregator.aggregate(logits_stack.astype(jnp.float32))
         return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+
+    def agree_masked(logits_stack, member):        # member: (r,) bool traced
+        count_trace("serving_agree")
+        agg = aggregator.aggregate(logits_stack.astype(jnp.float32),
+                                   mask=member)
+        return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+
+    def make_agree_bucket(b: int):
+        spec_b = aggregator.respecialize(b)
+
+        def agree_b(logits_stack, idx, valid):     # idx (b,) i32, valid (b,)
+            count_trace("serving_agree")
+            agg = spec_b.aggregate(logits_stack[idx].astype(jnp.float32),
+                                   mask=valid)
+            return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+        return jax.jit(agree_b) if jit else agree_b
 
     if jit:
         vpre = jax.jit(vpre)
         vdec = jax.jit(vdec)
         agree = jax.jit(agree)
+        agree_masked = jax.jit(agree_masked)
+
+    el = getattr(aggregator, "elastic_n", None)   # wrapper chains delegate
+    r = jax.tree.leaves(params_stack)[0].shape[0]
+    if el is not None and el.n_max != r:
+        raise ValueError(
+            f"elastic aggregator {aggregator.describe()} was built for "
+            f"n_max={el.n_max} but params_stack has {r} replicas")
+    bucket_agree: dict = {}
+
+    def agree_step(step, logits):
+        if roster is None:
+            return agree(logits)
+        member = np.asarray(roster[min(step, len(roster) - 1)], bool)
+        live = np.flatnonzero(member)
+        if len(live) == 0:
+            raise ValueError(f"roster at step {step} has no live replicas")
+        if el is None:
+            return agree_masked(logits, jnp.asarray(member))
+        b, idx, valid = el.pack(live)
+        if b not in bucket_agree:
+            bucket_agree[b] = make_agree_bucket(b)
+        return bucket_agree[b](logits, jnp.asarray(idx),
+                               jnp.asarray(valid))
 
     logits, caches = vpre(params_stack)
     if fault_hook is not None:
         logits = fault_hook(0, logits)
-    token = agree(logits)[:, None]
+    token = agree_step(0, logits)[:, None]
     out = [token]
     for step in range(1, max_new_tokens):
         logits, caches = vdec(params_stack, token, caches)
         if fault_hook is not None:
             logits = fault_hook(step, logits)
-        token = agree(logits)[:, None]
+        token = agree_step(step, logits)[:, None]
         out.append(token)
     return jnp.concatenate(out, axis=1)

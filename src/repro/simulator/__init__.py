@@ -5,9 +5,10 @@ Layers (each usable on its own):
   events      — virtual-clock event queue -> arrival/staleness AsyncTrace
   async_loop  — bounded-staleness training loop (sync loop = degenerate case)
 """
-from repro.simulator.faults import (CrashRecover, FaultTrace, MessageDrop,
-                                    Partition, PermanentCrash, Straggler,
-                                    compile_schedule, no_faults)
+from repro.simulator.faults import (Churn, CrashRecover, FaultTrace, Join,
+                                    MessageDrop, Partition, PermanentCrash,
+                                    Rejoin, Straggler, compile_schedule,
+                                    no_faults)
 from repro.simulator.events import AsyncTrace, simulate_arrivals
 from repro.simulator.async_loop import (SimConfig, async_train_loop,
                                         make_async_step, plan_arrivals,
@@ -15,7 +16,8 @@ from repro.simulator.async_loop import (SimConfig, async_train_loop,
 
 __all__ = [
     "Straggler", "CrashRecover", "PermanentCrash", "MessageDrop",
-    "Partition", "FaultTrace", "compile_schedule", "no_faults",
+    "Partition", "Join", "Rejoin", "Churn",
+    "FaultTrace", "compile_schedule", "no_faults",
     "AsyncTrace", "simulate_arrivals",
     "SimConfig", "async_train_loop", "make_async_step", "plan_arrivals",
     "staleness_weights",

@@ -32,9 +32,19 @@ is "pure" (all n agents deliver zero-staleness gradients computed at the
 current version) and the host dispatches to the *exact* synchronous
 train-step from :mod:`repro.training.step`, so ``train_loop`` ==
 ``async_train_loop`` bit-for-bit when latency is uniform and quorum = n.
+
+Elastic membership: when the schedule contains Join/Rejoin/Churn specs the
+trace carries a per-step roster, and an elastic-n aggregator
+(``make_spec(..., n=elastic(n_max, buckets=...))``) packs the LIVE agents
+into per-bucket fixed-shape stacks — the rule's (n, f) plan tracks the
+live roster, the roster indices are traced operands, and churn over the
+bucketed range costs at most ``len(buckets)`` step compilations
+(tests/test_membership_retrace.py).  A non-elastic spec under churn keeps
+its n_max plan and masks departed rows (one compile, imputed ghosts).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -45,6 +55,7 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.core.aggregators import tree_where_agents
+from repro.core.tracecount import count_trace
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
 from repro.core.redundancy.coding import tree_draco_aggregate
@@ -93,10 +104,11 @@ def plan_arrivals(sim: SimConfig, n_agents: int, steps: int) -> AsyncTrace:
                              max_staleness=sim.max_staleness)
 
 
-def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
+def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
+                    bucket: int | None = None):
     """Returns async_step(params, opt_state, momentum, buffer, agg_state,
-    batch, key, refresh, contrib_w, use_coded) -> (params, opt_state,
-    momentum, buffer, agg_state, metrics).
+    batch, key, refresh, contrib_w, use_coded[, roster_idx, roster_valid])
+    -> (params, opt_state, momentum, buffer, agg_state, metrics).
 
     ``refresh``   (n,) bool  — agents computing a fresh gradient this step;
     ``contrib_w`` (n,) f32   — staleness-discounted delivery weights
@@ -105,7 +117,16 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
                                for stateless rules), threaded explicitly;
     ``use_coded`` () bool    — quorum missed: aggregate with the gradient
                                code over delivered rows instead of the
-                               filter (requires ``fallback_r``)."""
+                               filter (requires ``fallback_r``).
+
+    ``bucket`` (elastic membership): the step additionally takes
+    ``roster_idx`` (bucket,) int32 — live agent slots, padded by repeating
+    a live slot — and ``roster_valid`` (bucket,) bool — which slots are
+    real.  The live rows are packed into a (bucket, ...) stack and
+    aggregated by ``spec.respecialize(bucket)`` (per-bucket f and static
+    plans), with pad slots masked out; both roster operands are TRACED, so
+    churn within a bucket never recompiles and churn across the bucketed
+    range compiles at most once per bucket."""
     from repro.training.step import tree_attack
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
         if bz.attack != "none" else None
@@ -122,13 +143,21 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
             "SimConfig.staleness_weighting and use the inner spec instead")
     if bz.agg_dtype:
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
+    spec = spec.respecialize(bucket) if bucket is not None else spec
+    if bucket is not None and (bz.draco_r > 0 or fallback_r > 0):
+        raise NotImplementedError(
+            "gradient coding is positional over the static roster — "
+            "draco_r/coded_fallback_r are not supported with elastic "
+            "membership buckets")
     stateful = spec.stateful
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
 
     def async_step(params, opt_state, momentum, buffer, agg_state, batch,
-                   key, refresh, contrib_w, use_coded):
+                   key, refresh, contrib_w, use_coded,
+                   roster_idx=None, roster_valid=None):
+        count_trace("async_step")
         # (2) fresh gradients at the current version for dispatching agents
         losses, grads = jax.vmap(
             jax.value_and_grad(agent_loss), in_axes=(None, 0))(params, batch)
@@ -154,6 +183,15 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0):
             # coded regime: the repetition code already handles partial
             # delivery (vote among delivered group members)
             agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask)
+        elif bucket is not None:
+            # elastic membership: pack the live rows into the bucket's
+            # fixed-shape stack; pad slots (repeated live rows) are masked
+            # out, so the rule runs its per-bucket (n, f) plan over the
+            # live roster only
+            sent_b = jax.tree.map(lambda l: l[roster_idx], sent)
+            w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
+            agg = spec.aggregate(sent_b, mask=w_b > 0.0, weights=w_b,
+                                 state=agg_state if stateful else None)
         else:
             agg = spec.aggregate(sent, mask=mask, weights=contrib_w,
                                  state=agg_state if stateful else None)
@@ -199,8 +237,27 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     sim = sim if sim is not None else SimConfig()
     n = bz.n_agents
     spec = bz.resolve_spec()
-    stateful = spec.stateful
     atrace = plan_arrivals(sim, n, steps)
+    roster = atrace.roster                 # (steps, n) bool | None
+    el = spec.elastic_n                    # wrapper chains delegate
+    if el is not None:
+        if el.n_max != n:
+            raise ValueError(
+                f"elastic aggregator {spec.describe()} was built for "
+                f"n_max={el.n_max} but the config declares "
+                f"n_agents={n}")
+        if bz.draco_r > 0 or sim.coded_fallback_r > 0:
+            raise NotImplementedError(
+                "gradient coding is positional over the static roster — "
+                "draco_r/coded_fallback_r are not supported with elastic "
+                "membership")
+        if roster is None:
+            # membership never changes: run the concrete n_max spec (the
+            # elastic master is bit-for-bit its own n_max bucket)
+            bz = dataclasses.replace(bz, aggregator=spec.respecialize(n))
+            spec = bz.resolve_spec()
+            el = None
+    stateful = spec.stateful
     contrib_w = staleness_weights(sim, atrace)
     if (bz.group_size > 1 or bz.reshard) and (stateful
                                               or not atrace.is_synchronous()):
@@ -230,15 +287,29 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     if jit:
         step_fn = jax.jit(step_fn) if step_fn is not None else None
         async_fn = jax.jit(async_fn)
+
+    # elastic membership: one step function per roster BUCKET (built
+    # lazily, compiled at most len(el.buckets) times over the whole run —
+    # the roster operands themselves are traced, so churn within a bucket
+    # reuses the bucket's single compilation)
+    bucket_fns: dict = {}
+
+    def bucket_fn(b: int):
+        if b not in bucket_fns:
+            fn = make_async_step(cfg, bz, optimizer, bucket=b)
+            bucket_fns[b] = jax.jit(fn) if jit else fn
+        return bucket_fns[b]
     byz_mask = make_byzantine_mask(n, bz.f)
     agg_state = (spec.init_state(jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params))
         if stateful else {})
 
-    # a step is "pure" iff it is exactly the synchronous step: everybody
-    # dispatches AND delivers with zero staleness
+    # a step is "pure" iff it is exactly the synchronous step: the FULL
+    # roster dispatches AND delivers with zero staleness
     pure = (atrace.contrib.all(1) & atrace.refresh.all(1)
             & (atrace.staleness.max(1, initial=0) == 0))
+    if roster is not None:
+        pure &= roster.all(1)
     if _force_general or stateful:
         pure = np.zeros(steps, bool)
 
@@ -272,11 +343,23 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             pending_refresh = np.zeros(n, bool)
             use_coded = bool(not atrace.quorum_met[step]
                              and sim.coded_fallback_r > 0)
-            (params, opt_state, momentum, buffer, agg_state,
-             metrics) = async_fn(
-                params, opt_state, momentum, buffer, agg_state, batch,
-                k_step, jnp.asarray(refresh), jnp.asarray(contrib_w[step]),
-                jnp.asarray(use_coded))
+            if el is not None:
+                # pack the live roster into its bucket's fixed shape
+                # (arrived > 0 here, and contributors are members, so the
+                # roster row has at least one live agent)
+                b, idx, valid = el.pack(np.flatnonzero(roster[step]))
+                (params, opt_state, momentum, buffer, agg_state,
+                 metrics) = bucket_fn(int(b))(
+                    params, opt_state, momentum, buffer, agg_state, batch,
+                    k_step, jnp.asarray(refresh),
+                    jnp.asarray(contrib_w[step]), jnp.asarray(use_coded),
+                    jnp.asarray(idx), jnp.asarray(valid))
+            else:
+                (params, opt_state, momentum, buffer, agg_state,
+                 metrics) = async_fn(
+                    params, opt_state, momentum, buffer, agg_state, batch,
+                    k_step, jnp.asarray(refresh),
+                    jnp.asarray(contrib_w[step]), jnp.asarray(use_coded))
         if step % log_every == 0 or step == steps - 1:
             if metrics is None:
                 m = {"loss": float("nan"), "loss_all": float("nan"),
@@ -286,6 +369,7 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             m["step"] = step
             m["wall_s"] = time.time() - t0
             m["arrived"] = arrived
+            m["n_live"] = atrace.n_live(step)
             m["staleness_mean"] = (
                 float(atrace.staleness[step][atrace.contrib[step]].mean())
                 if arrived else 0.0)

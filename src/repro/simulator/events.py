@@ -28,6 +28,19 @@ gradient computation):
   * a gradient older than ``max_staleness`` versions on arrival is discarded
     (bounded staleness); the agent re-dispatches fresh.
 
+Elastic membership (``trace.roster`` — :class:`~repro.simulator.faults.Join`
+/ ``Rejoin`` / ``Churn`` schedules): an agent absent from the roster can
+neither dispatch, arrive, nor count toward quorum.  A delivery in flight
+when its sender leaves the roster is discarded at the server (the agent is
+gone); the agent re-dispatches fresh at its next membership version.  The
+effective quorum at step t is ``min(quorum, n_live(t))`` (``quorum=None``
+means the full LIVE roster), so a shrunken cluster still makes progress and
+a grown one is awaited in full.
+
+Two arrivals sharing an instant are processed in AGENT-ID order (the heap
+key is ``(vtime, agent, seq)``): the outcome of a same-instant tie is
+pinned by the trace alone, never by internal dispatch order.
+
 If the quorum cannot be met (too many agents crashed or in flight), the
 step is marked ``quorum_met[t] = False`` and proceeds with whatever arrived
 — the training loop may then fall back to coded aggregation
@@ -52,17 +65,26 @@ class AsyncTrace:
     refresh: np.ndarray       # (steps, n) bool — agent dispatched at version t
     vclock: np.ndarray        # (steps,) float64 — virtual completion time
     quorum_met: np.ndarray    # (steps,) bool
+    # (steps, n) bool per-step membership; None = the full static roster.
+    # The training loops thread row t into the jitted step (fixed shape),
+    # and elastic-n specs re-specialize their plans from its live count.
+    roster: Optional[np.ndarray] = None
 
     @property
     def steps(self) -> int:
         return self.contrib.shape[0]
 
+    def n_live(self, t: int) -> int:
+        return (self.contrib.shape[1] if self.roster is None
+                else int(self.roster[t].sum()))
+
     def is_synchronous(self) -> bool:
         """True iff every step is the degenerate synchronous case: all n
-        agents contribute a zero-staleness gradient computed at the current
-        version."""
+        agents (the full static roster) contribute a zero-staleness
+        gradient computed at the current version."""
         return (bool(self.contrib.all()) and bool(self.refresh.all())
-                and int(self.staleness.max(initial=0)) == 0)
+                and int(self.staleness.max(initial=0)) == 0
+                and (self.roster is None or bool(self.roster.all())))
 
     def staleness_histogram(self):
         """{staleness value: count} over contributing deliveries."""
@@ -73,8 +95,11 @@ class AsyncTrace:
     def summary(self) -> dict:
         arrived = self.contrib.sum(1)
         stal = self.staleness[self.contrib]
+        live = (np.full(self.steps, self.contrib.shape[1])
+                if self.roster is None else self.roster.sum(1))
         return {
             "steps": int(self.steps),
+            "mean_live": float(live.mean()) if self.steps else 0.0,
             "mean_arrived": float(arrived.mean()) if self.steps else 0.0,
             "mean_staleness": float(stal.mean()) if stal.size else 0.0,
             "max_staleness": int(stal.max()) if stal.size else 0,
@@ -89,12 +114,14 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
                       max_staleness: Optional[int] = None) -> AsyncTrace:
     """Run the virtual clock over a FaultTrace.
 
-    quorum=None means n (fully synchronous barrier); quorum=k applies the
-    update as soon as k gradients are in."""
+    quorum=None means the full live roster (fully synchronous barrier);
+    quorum=k applies the update as soon as k gradients are in — capped per
+    step at the live roster size, so a shrunken cluster keeps making
+    progress (roster-aware quorum accounting)."""
     n = trace.n_agents
     h = trace.horizon
     assert h >= steps, (h, steps)
-    q = n if quorum is None else max(1, min(int(quorum), n))
+    q0 = n if quorum is None else max(1, min(int(quorum), n))
 
     contrib = np.zeros((steps, n), bool)
     staleness = np.zeros((steps, n), np.int64)
@@ -102,7 +129,10 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
     vclock = np.zeros(steps)
     quorum_met = np.ones(steps, bool)
 
-    heap = []                 # (arrival_vtime, seq, agent, version, immune)
+    # heap key (arrival_vtime, agent, seq): same-instant ties resolve by
+    # AGENT ID, so the accepted set is a function of the trace alone and
+    # never of internal dispatch order (seq only breaks exact re-pushes)
+    heap = []                 # (arrival_vtime, agent, seq, version, immune)
     waiting = {}              # version -> [agents waiting for it to exist]
     seq = 0
 
@@ -110,8 +140,9 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
                  immune: bool = False):
         nonlocal seq
         v = version
-        while v < steps and not trace.alive[min(v, h - 1), agent]:
-            v += 1            # down: wait for the first alive version
+        while v < steps and not (trace.alive[min(v, h - 1), agent]
+                                 and trace.member(v, agent)):
+            v += 1            # down or out of roster: wait to re-enter
         if v >= steps:
             return            # never returns within the horizon
         if v > version:
@@ -120,7 +151,7 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
         refresh[v, agent] = True
         heapq.heappush(
             heap, (vtime + float(trace.delay[min(v, h - 1), agent]),
-                   seq, agent, v, immune))
+                   agent, seq, v, immune))
         seq += 1
 
     for i in range(n):
@@ -129,9 +160,19 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
     now = 0.0
     for t in range(steps):
         got = []
+        live_t = trace.n_live(t)
+        q_t = min(q0, live_t) if quorum is not None else live_t
 
         def receive(vt, agent, version, immune) -> bool:
             """True if the delivery is accepted into update t."""
+            if trace.roster is not None and not trace.roster[
+                    min(version, h - 1):min(t, h - 1) + 1, agent].all():
+                # the sender left the roster at some point while its
+                # gradient was in flight (its state is gone — even if it
+                # already rejoined by the arrival instant): discard; it
+                # re-dispatches fresh at its next membership version
+                dispatch(agent, vt, t)
+                return False
             if (not immune) and trace.drop[min(version, h - 1), agent]:
                 dispatch(agent, vt, t, immune=True)     # retry, never re-drop
                 return False
@@ -141,16 +182,16 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
             got.append((agent, version))
             return True
 
-        while len(got) < q and heap:
-            vt, _, agent, version, immune = heapq.heappop(heap)
+        while len(got) < q_t and heap:
+            vt, agent, _, version, immune = heapq.heappop(heap)
             now = max(now, vt)
             receive(vt, agent, version, immune)
         # everything that arrived by the quorum instant joins the update
         while heap and heap[0][0] <= now:
-            vt, _, agent, version, immune = heapq.heappop(heap)
+            vt, agent, _, version, immune = heapq.heappop(heap)
             receive(vt, agent, version, immune)
 
-        if len(got) < q:
+        if len(got) < q_t or live_t == 0:
             quorum_met[t] = False
         for agent, version in got:
             contrib[t, agent] = True
@@ -163,5 +204,7 @@ def simulate_arrivals(trace: FaultTrace, steps: int,
         for agent, immune in waiting.pop(t + 1, ()):
             dispatch(agent, now, t + 1, immune=immune)
 
+    roster = (None if trace.roster is None
+              else trace.roster[:steps].copy())
     return AsyncTrace(contrib=contrib, staleness=staleness, refresh=refresh,
-                      vclock=vclock, quorum_met=quorum_met)
+                      vclock=vclock, quorum_met=quorum_met, roster=roster)

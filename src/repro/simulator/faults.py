@@ -17,7 +17,15 @@ cluster simulator (:mod:`repro.simulator.events`) and the p2p DGD loop
   ``delay[v, i]``  compute + network latency, in virtual-time units of one
                    base gradient computation, for the dispatch at version v;
   ``adj[v]``       (n, n) bool link mask for decentralized topologies
-                   (``None`` unless a :class:`Partition` spec is present).
+                   (``None`` unless a :class:`Partition` spec is present);
+  ``roster[v, i]`` agent i is a MEMBER of the cluster at version v (``None``
+                   unless a membership spec — :class:`Join`, :class:`Rejoin`,
+                   :class:`Churn` — is present).  Membership is a stronger
+                   notion than liveness: a crashed agent is still expected
+                   back and still counts toward the deployment's (n, f)
+                   bookkeeping, while a non-member can neither dispatch,
+                   arrive, nor count toward quorum (elastic membership —
+                   agents joining/rejoining, not just leaving).
 
 Everything is sampled from one ``numpy.random.default_rng(seed)`` in spec
 order, so a schedule is a pure function of (specs, n, horizon, seed) — the
@@ -57,7 +65,7 @@ class Straggler:
     prob: float = 1.0
     agents: Optional[Tuple[int, ...]] = None
 
-    def apply(self, rng, alive, drop, delay, adj):
+    def apply(self, rng, alive, drop, delay, adj, roster):
         h, n = delay.shape
         sel = _agent_idx(self.agents, n)
         shape = (h, len(sel))
@@ -84,7 +92,7 @@ class CrashRecover:
     mean_down: float = 3.0
     agents: Optional[Tuple[int, ...]] = None
 
-    def apply(self, rng, alive, drop, delay, adj):
+    def apply(self, rng, alive, drop, delay, adj, roster):
         h, n = alive.shape
         sel = _agent_idx(self.agents, n)
         p_up = 1.0 / max(self.mean_down, 1.0)       # geometric recovery
@@ -106,7 +114,7 @@ class PermanentCrash:
     agents: Tuple[int, ...]
     at: int = 0
 
-    def apply(self, rng, alive, drop, delay, adj):
+    def apply(self, rng, alive, drop, delay, adj, roster):
         sel = _agent_idx(self.agents, alive.shape[1])
         alive[self.at:, sel] = False
 
@@ -118,10 +126,72 @@ class MessageDrop:
     p: float = 0.1
     agents: Optional[Tuple[int, ...]] = None
 
-    def apply(self, rng, alive, drop, delay, adj):
+    def apply(self, rng, alive, drop, delay, adj, roster):
         h, n = drop.shape
         sel = _agent_idx(self.agents, n)
         drop[:, sel] |= rng.random((h, len(sel))) < self.p
+
+
+# ---------------------------------------------------------------------------
+# membership (elastic roster) specs — survey §2.2's churn beyond fail-stop:
+# real federated/swarm deployments have agents joining and rejoining, and
+# every Table-2 guarantee is a function of the LIVE (n, f)
+
+
+@dataclass(frozen=True)
+class Join:
+    """Agents that are not founding members: they enter the roster at
+    version ``at`` and stay (barring later membership specs)."""
+    agents: Tuple[int, ...]
+    at: int
+
+    def apply(self, rng, alive, drop, delay, adj, roster):
+        sel = _agent_idx(self.agents, roster.shape[1])
+        roster[:self.at, sel] = False
+
+
+@dataclass(frozen=True)
+class Rejoin:
+    """A scheduled leave/rejoin cycle: members until ``leave_at``, out of
+    the roster during [leave_at, rejoin_at), members again after.  A
+    gradient in flight when the agent leaves is discarded (the agent is
+    gone); on rejoining it dispatches fresh against the then-current
+    version."""
+    agents: Tuple[int, ...]
+    leave_at: int
+    rejoin_at: int
+
+    def apply(self, rng, alive, drop, delay, adj, roster):
+        if self.rejoin_at < self.leave_at:
+            raise ValueError((self.leave_at, self.rejoin_at))
+        sel = _agent_idx(self.agents, roster.shape[1])
+        roster[self.leave_at:self.rejoin_at, sel] = False
+
+
+@dataclass(frozen=True)
+class Churn:
+    """Stochastic membership churn (two-state Markov chain per agent, the
+    roster-level analogue of :class:`CrashRecover`): while a member, an
+    agent leaves each version with probability ``rate``; time out of the
+    roster is geometric with mean ``mean_out`` versions."""
+    rate: float = 0.05
+    mean_out: float = 3.0
+    agents: Optional[Tuple[int, ...]] = None
+
+    def apply(self, rng, alive, drop, delay, adj, roster):
+        h, n = roster.shape
+        sel = _agent_idx(self.agents, n)
+        p_in = 1.0 / max(self.mean_out, 1.0)        # geometric re-entry
+        for i in sel:
+            member = True
+            for v in range(h):
+                if member:
+                    if rng.random() < self.rate:
+                        member = False
+                else:
+                    if rng.random() < p_in:
+                        member = True
+                roster[v, i] &= member
 
 
 @dataclass(frozen=True)
@@ -133,7 +203,7 @@ class Partition:
     start: int = 0
     end: int = 10 ** 9
 
-    def apply(self, rng, alive, drop, delay, adj):
+    def apply(self, rng, alive, drop, delay, adj, roster):
         assert adj is not None
         h, n, _ = adj.shape
         gid = np.full(n, len(self.groups), np.int64)      # residual group
@@ -145,7 +215,8 @@ class Partition:
 
 
 FAULT_SPECS = (Straggler, CrashRecover, PermanentCrash, MessageDrop,
-               Partition)
+               Partition, Join, Rejoin, Churn)
+MEMBERSHIP_SPECS = (Join, Rejoin, Churn)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +230,9 @@ class FaultTrace:
     delay: np.ndarray                 # (horizon, n) float64
     adj: Optional[np.ndarray] = None  # (horizon, n, n) bool, partitions only
     seed: int = 0
+    # (horizon, n) bool membership; None = the full static roster
+    # (membership specs only — see the module docstring)
+    roster: Optional[np.ndarray] = None
 
     @property
     def horizon(self) -> int:
@@ -172,12 +246,26 @@ class FaultTrace:
     def base_delay(self) -> float:
         return float(np.min(self.delay)) if self.delay.size else 1.0
 
+    def member(self, version: int, agent: int) -> bool:
+        """Roster membership at ``version`` (clamped to the horizon)."""
+        if self.roster is None:
+            return True
+        return bool(self.roster[min(version, self.horizon - 1), agent])
+
+    def n_live(self, version: int) -> int:
+        """Live roster size at ``version`` (= n_agents without churn)."""
+        if self.roster is None:
+            return self.n_agents
+        return int(self.roster[min(version, self.horizon - 1)].sum())
+
     def is_trivial(self) -> bool:
         """True iff the trace can never desynchronize a quorum-n loop:
-        nobody crashes, nothing drops, and all latencies are equal."""
+        nobody crashes, nothing drops, all latencies are equal, and the
+        roster is the full static membership."""
         return (bool(self.alive.all()) and not bool(self.drop.any())
                 and bool((self.delay == self.delay.flat[0]).all())
-                and self.adj is None)
+                and self.adj is None
+                and (self.roster is None or bool(self.roster.all())))
 
 
 def compile_schedule(specs, n_agents: int, horizon: int, seed: int = 0,
@@ -194,10 +282,13 @@ def compile_schedule(specs, n_agents: int, horizon: int, seed: int = 0,
     delay = np.full((horizon, n_agents), float(base_delay))
     adj = (np.ones((horizon, n_agents, n_agents), bool)
            if any(isinstance(s, Partition) for s in specs) else None)
+    roster = (np.ones((horizon, n_agents), bool)
+              if any(isinstance(s, MEMBERSHIP_SPECS) for s in specs)
+              else None)
     for spec in specs:
-        spec.apply(rng, alive, drop, delay, adj)
+        spec.apply(rng, alive, drop, delay, adj, roster)
     return FaultTrace(alive=alive, drop=drop, delay=delay, adj=adj,
-                      seed=seed)
+                      seed=seed, roster=roster)
 
 
 def no_faults(n_agents: int, horizon: int,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core.aggregators import AggregatorSpec, make_spec
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import worker_momentum
+from repro.core.tracecount import count_trace
 from repro.core.redundancy.coding import tree_draco_aggregate
 from repro.models import loss_fn
 from repro.optim import apply_updates
@@ -144,9 +145,19 @@ def _reshard_specs(grads, mesh_sizes):
 
 
 def make_train_step(cfg, bz: ByzantineConfig, optimizer,
-                    mesh_sizes: dict | None = None):
-    """Returns train_step(params, opt_state, momentum, batch, key) ->
-    (params, opt_state, momentum, metrics)."""
+                    mesh_sizes: dict | None = None,
+                    bucket: int | None = None):
+    """Returns train_step(params, opt_state, momentum, batch, key[,
+    roster_idx, roster_valid]) -> (params, opt_state, momentum, metrics).
+
+    ``bucket`` (elastic membership): per-agent gradients are still computed
+    for the full n_agents batch, but aggregation runs over the LIVE roster
+    packed into a (bucket,)-row stack — ``roster_idx`` (bucket,) int32 are
+    the live slots (padded by repeating a live slot), ``roster_valid``
+    (bucket,) bool marks the real ones.  The spec is re-specialized to the
+    bucket's (n, f) plan; both roster operands are traced, so membership
+    churn compiles at most once per bucket.  ``bucket=None`` is exactly the
+    historical n-static step, bit-for-bit."""
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
         if bz.attack != "none" else None
     byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
@@ -161,6 +172,12 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
         # (weighted rules accumulate their statistics in fp32 regardless;
         # the pallas path, like gather, accumulates fp32 and ignores it)
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
+    if bucket is not None:
+        if bz.group_size > 1 or bz.reshard or bz.draco_r > 0:
+            raise NotImplementedError(
+                "group_size/reshard/draco_r are positional over the "
+                "static roster — not supported with elastic membership")
+        spec = spec.respecialize(bucket)
     if bz.group_size > 1:
         k = bz.n_agents // bz.group_size
         spec = spec.with_f_capped(max((k - 1) // 2, 0))
@@ -168,7 +185,9 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
 
-    def train_step(params, opt_state, momentum, batch, key):
+    def train_step(params, opt_state, momentum, batch, key,
+                   roster_idx=None, roster_valid=None):
+        count_trace("train_step")
         # (2) per-agent gradients — agent axis on the data mesh axes.
         # bz.remat = PER-LAYER activation checkpointing inside the scan
         # (whole-loss jax.checkpoint leaves the scan's stacked residuals in
@@ -202,6 +221,13 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                 grads, _reshard_specs(grads, mesh_sizes))
         if bz.draco_r > 0:
             agg = tree_draco_aggregate(grads, bz.draco_r)
+        elif bucket is not None:
+            # elastic membership: the rule sees only the live roster,
+            # packed into the bucket's fixed-shape stack (pad slots are
+            # repeated live rows, masked out under the documented masked
+            # semantics)
+            live = jax.tree.map(lambda l: l[roster_idx], grads)
+            agg = spec.aggregate(live, mask=roster_valid)
         else:
             agg = spec.aggregate(grads)
 

@@ -1,6 +1,17 @@
 import os
 import sys
 
+import pytest
+
 # src/ layout import without install; tests run on the single host CPU device
 # (the 512-device pin lives ONLY in repro.launch.dryrun / subprocess tests).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """End-to-end churn fuzz cases (seeded training runs under membership
+    schedules) are auto-marked ``slow`` so the tier-1 `-m "not slow"` lane
+    stays fast; the dedicated slow/membership CI jobs run them."""
+    for item in items:
+        if "churn_fuzz" in item.name:
+            item.add_marker(pytest.mark.slow)

@@ -1,0 +1,508 @@
+"""Membership-conformance property suite: EVERY registered aggregator,
+seeded invariants across rosters (the PR-4 elastic-membership gate).
+
+The survey's guarantees are statements about the live (n, f): Table-2
+rules tolerate f of n agents, and under elastic membership both numbers
+move.  This suite pins the properties the elastic layer rests on, for the
+whole registry (a new `register_aggregator` call fails the coverage test
+until it declares a conformance row here):
+
+  1. permutation invariance — relabeling live agents cannot change the
+     estimate (positional grouping rules are exempt and say so);
+  2. departed-content invariance — a masked-out (departed) agent's buffer
+     cannot influence the estimate AT ALL, asserted bit-for-bit against
+     adversarial garbage in the dead rows (this is what makes ghost-padded
+     bucket stacks sound);
+  3. full-roster identity — mask=all-live degenerates to the plain path;
+  4. documented masked semantics — the masked/weighted path equals the
+     impute-then-scale law (or the fused weight-folding law for
+     weight-decomposable fused impls), recomputed here from public tree
+     helpers, for impl="gather" AND the default impl (pins the fused
+     masked kernels to the tree-level reference);
+  5. monotone-f breakdown — with <= f adversaries the estimate stays
+     within a bounded neighbourhood of the honest mean INDEPENDENT of the
+     attack magnitude (and inside the per-coordinate honest hull for the
+     selection/order-statistic rules); with a beyond-f majority the
+     estimate demonstrably breaks (deviation scales with the attack);
+  6. respecialize-vs-fresh-build parity — `spec.respecialize(n)` is
+     dataclass-equal AND bit-for-bit equal to `make_spec(..., n=n)` for
+     every bucket, wrappers included.
+
+Seeded ``jax.random`` / ``numpy`` fuzz grids only — no ``hypothesis``
+(not installed; the importorskip pattern stays out of tier-1).  The
+trace-level churn fuzz is cheap host-side numpy; the training-loop churn
+fuzz cases are auto-marked ``slow`` by conftest (name contains
+``churn_fuzz``) so tier-1 stays fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (elastic, frac, list_aggregators,
+                                    make_spec, tree_weighted_sum)
+
+N, F, D = 12, 2, 48
+
+# conformance rows: how to build each registered rule, and which laws it
+# is exempt from (with the reason encoded as the flag name)
+RULES = {
+    "mean": dict(f=0),
+    "krum": dict(),
+    "multi_krum": dict(hyper={"m": 2}),
+    "m_krum": dict(hyper={"m": 2}),
+    "mda": dict(),
+    "cge": dict(),
+    "cgc": dict(),
+    "zeno": dict(hyper={"ema": 0.2, "rho": 1e-4}, stateful=True),
+    "zeno_pp": dict(stateful=True, own_masked=True),
+    "coordinate_median": dict(),
+    "trimmed_mean": dict(),
+    "phocas": dict(),
+    "mean_around_median": dict(),
+    "geometric_median": dict(),
+    "rfa": dict(),
+    "median_of_means": dict(grouping=True),
+    "bulyan": dict(f=1),                       # needs n >= 4f + 3
+    "clipped": dict(wrapper=True, hyper={"tau": 50.0}),
+    "bucketed": dict(wrapper=True, grouping=True, hyper={"group_size": 2}),
+    "staleness_discounted": dict(wrapper=True, staleness=True),
+}
+
+# rules whose estimate must stay inside the per-coordinate honest hull at
+# <= f adversaries (selection / order-statistic rules; the clipping and
+# fixed-point rules are bounded but legitimately hull-free — cgc averages
+# clipped adversarial DIRECTIONS, gm/mom are pulled an epsilon toward them)
+HULL_RULES = {"krum", "multi_krum", "m_krum", "mda", "cge", "zeno",
+              "zeno_pp", "coordinate_median", "trimmed_mean", "phocas",
+              "mean_around_median", "bulyan"}
+
+
+def build(rule, f=None, n=N, impl="auto"):
+    cfg = RULES[rule]
+    f = cfg.get("f", F) if f is None else f
+    hyper = dict(cfg.get("hyper", {}))
+    if cfg.get("wrapper"):
+        inner = make_spec("trimmed_mean", f=f, n=n, impl=impl)
+        return make_spec(rule, f=f, inner=inner, n=n, **hyper)
+    return make_spec(rule, f=f, n=n, impl=impl, **hyper)
+
+
+def data(n, d, seed, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+
+
+def state_for(spec, g):
+    """Meaningful aggregator state: the honest-mean descent direction (the
+    validation gradient Zeno assumes; zeno_pp's EMA warm start)."""
+    if not spec.stateful:
+        return None
+    st = spec.init_state(g[0])
+    if "server_grad" in st:
+        st = {**st, "server_grad": jnp.mean(g, axis=0)}
+    return st
+
+
+def drop_mask(n, k, seed):
+    gone = jax.random.choice(jax.random.PRNGKey(1000 + seed), n, shape=(k,),
+                             replace=False)
+    return jnp.ones((n,), bool).at[gone].set(False)
+
+
+# ---------------------------------------------------------------------------
+# 0. coverage: the registry and this suite must agree EXACTLY
+
+
+def test_every_registered_aggregator_is_covered():
+    # registrations named test_only_* are throwaway fixtures from other
+    # suites (test_aggregator_spec's extensibility contract) — everything
+    # else in the registry must declare a conformance row here
+    registered = {n for n in list_aggregators()
+                  if not n.startswith("test_only")}
+    assert set(RULES) == registered, (
+        "a rule was (de)registered without a conformance row — every "
+        "registered aggregator must declare its membership behaviour here")
+
+
+# ---------------------------------------------------------------------------
+# 1. permutation invariance of live rows
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_permutation_invariance(rule, seed):
+    if RULES[rule].get("grouping"):
+        pytest.skip(f"{rule} groups rows positionally (documented)")
+    spec = build(rule)
+    g = data(N, D, seed)
+    st = state_for(spec, g)
+    perm = jax.random.permutation(jax.random.PRNGKey(77 + seed), N)
+    a = np.asarray(spec.aggregate(g, state=st))
+    b = np.asarray(spec.aggregate(g[perm], state=st))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5, err_msg=rule)
+
+
+# ---------------------------------------------------------------------------
+# 2. departed agents cannot influence the estimate — bit for bit
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_departed_row_content_is_irrelevant(rule, seed):
+    spec = build(rule)
+    if not spec.caps.masked_capable:
+        pytest.skip(f"{rule} does not support masked aggregation")
+    g = data(N, D, 10 + seed)
+    mask = drop_mask(N, 3, seed)
+    st = state_for(spec, g)
+    # the departed rows turn into adversarial garbage (sign-flipped and
+    # blown up; finite so 0 * garbage stays exactly 0 in the weighted sums)
+    garbage = jnp.where(mask[:, None], g, -1e6 * (g + 3.0))
+    a = np.asarray(spec.aggregate(g, mask=mask, state=st))
+    b = np.asarray(spec.aggregate(garbage, mask=mask, state=st))
+    np.testing.assert_array_equal(a, b, err_msg=rule)
+
+
+# ---------------------------------------------------------------------------
+# 3. the full roster masked is the plain path
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_full_roster_mask_is_identity(rule):
+    spec = build(rule)
+    if not spec.caps.masked_capable:
+        pytest.skip(f"{rule} does not support masked aggregation")
+    g = data(N, D, 5)
+    st = state_for(spec, g)
+    a = np.asarray(spec.aggregate(g, state=st))
+    b = np.asarray(spec.aggregate(g, mask=jnp.ones((N,), bool), state=st))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7, err_msg=rule)
+
+
+# ---------------------------------------------------------------------------
+# 4. documented masked semantics, recomputed from public helpers
+
+
+def expected_masked(spec, g, mask, w, st):
+    """The engine's documented masked law, rebuilt outside the engine:
+    impute departed rows at the delivered weighted mean, run the plain
+    rule, scale by tot/cnt — except weight-decomposable FUSED impls, which
+    fold the per-agent weights into the rule's selection weights."""
+    mf = mask.astype(jnp.float32)
+    wv = (mf if w is None else w.astype(jnp.float32) * mf)
+    cnt = jnp.maximum(mf.sum(), 1.0)
+    tot = jnp.maximum(wv.sum(), 1e-30)
+    mean_w = tree_weighted_sum(g, wv / tot)
+    imputed = jnp.where(mask[:, None], g, mean_w[None])
+    if spec.caps.weight_decomposable and spec.impl == "fused":
+        row_w = jnp.where(mask, wv, tot / cnt)
+        rule_w = spec.weights(imputed, state=st)
+        fw = rule_w * row_w
+        fw = fw * (rule_w.sum() / jnp.maximum(fw.sum(), 1e-30))
+        return tree_weighted_sum(imputed, fw)
+    agg = spec.aggregate(imputed, state=st)
+    return (agg.astype(jnp.float32) * (tot / cnt)).astype(agg.dtype)
+
+
+@pytest.mark.parametrize("impl", ["gather", "auto"])
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_masked_semantics_match_documented_law(rule, seed, impl):
+    cfg = RULES[rule]
+    if cfg.get("wrapper") or cfg.get("own_masked") or rule == "mean":
+        pytest.skip(f"{rule} documents its own masked semantics")
+    spec = build(rule, impl=impl)
+    g = data(N, D, 20 + seed)
+    mask = drop_mask(N, 3, seed)
+    w = jax.random.uniform(jax.random.PRNGKey(30 + seed), (N,), minval=0.3,
+                           maxval=1.0)
+    st = state_for(spec, g)
+    out = np.asarray(spec.aggregate(g, mask=mask, weights=w, state=st))
+    expect = np.asarray(expected_masked(spec, g, mask, w, st))
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6,
+                               err_msg=f"{rule}/{spec.impl}")
+
+
+def test_mean_masked_is_exact_subset_mean():
+    """`mean` overrides the impute law: masked aggregation IS the weighted
+    mean of the live rows — i.e. aggregating n_live rows plain equals
+    aggregating n_max rows under the roster mask (roster-subset
+    equivalence proper, the property ghost-free elastic packing relies
+    on)."""
+    for seed in (0, 1, 2):
+        g = data(N, D, 40 + seed)
+        mask = drop_mask(N, 4, seed)
+        live = np.flatnonzero(np.asarray(mask))
+        spec = make_spec("mean", n=N)
+        out = np.asarray(spec.aggregate(g, mask=mask))
+        sub = np.asarray(make_spec("mean", n=len(live)).aggregate(g[live]))
+        np.testing.assert_allclose(out, sub, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# 5. monotone-f breakdown: bounded at f, demonstrably broken beyond f
+
+
+def attack_stack(n, a, L, seed, d=32):
+    """(stack, honest_rows): n - a honest rows clustered at a random
+    center, a colluding adversaries at magnitude L opposing it."""
+    key = jax.random.PRNGKey(500 + seed)
+    k1, k2 = jax.random.split(key)
+    center = jax.random.normal(k1, (d,))
+    center = center / jnp.linalg.norm(center) * 3.0
+    honest = center[None] + 0.1 * jax.random.normal(k2, (n - a, d))
+    adv = jnp.broadcast_to(-L * center[None] / 3.0, (a, d))
+    return jnp.concatenate([honest, adv], axis=0), honest
+
+
+def deviation(spec, n, a, L, seed):
+    g, honest = attack_stack(n, a, L, seed)
+    perm = jax.random.permutation(jax.random.PRNGKey(900 + seed), n)
+    g = g[perm]                         # adversary position is arbitrary
+    st = state_for(spec, jnp.asarray(honest))
+    agg = spec.aggregate(g, state=st)
+    hmean = jnp.mean(honest, axis=0)
+    dev = float(jnp.linalg.norm(agg.astype(jnp.float32) - hmean))
+    spread = float(jnp.max(jnp.linalg.norm(honest - hmean[None], axis=1)))
+    lo = np.asarray(honest.min(axis=0))
+    hi = np.asarray(honest.max(axis=0))
+    in_hull = bool(np.all(np.asarray(agg) >= lo - 1e-3)
+                   and np.all(np.asarray(agg) <= hi + 1e-3))
+    return dev, spread, in_hull
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("rule", sorted(r for r in RULES
+                                        if not RULES[r].get("wrapper")))
+def test_breakdown_bounded_at_f(rule, seed):
+    """<= f colluding adversaries of UNBOUNDED magnitude: the estimate
+    stays within a bounded neighbourhood of the honest mean, and the bound
+    does not grow with the attack magnitude."""
+    # (grouping rules need no special handling here: a <= f <= group
+    # count, and the permutation inside deviation() scatters adversaries)
+    spec = build(rule)
+    a = spec.f
+    dev1, spread, hull1 = deviation(spec, N, a, 1e3, seed)
+    dev2, _, _ = deviation(spec, N, a, 1e4, seed)
+    bound = 10.0 * max(spread, 1e-3)
+    assert dev1 <= bound and dev2 <= bound, (
+        f"{rule}: deviation {dev1:.3g}/{dev2:.3g} exceeds {bound:.3g} "
+        f"with a={a} <= f adversaries")
+    assert dev2 <= 2.0 * dev1 + 1e-3, (
+        f"{rule}: deviation grows with attack magnitude at a={a} <= f "
+        f"({dev1:.3g} -> {dev2:.3g})")
+    if rule in HULL_RULES:
+        assert hull1, f"{rule}: left the per-coordinate honest hull at f"
+
+
+@pytest.mark.parametrize("rule", sorted(r for r in RULES
+                                        if not RULES[r].get("wrapper")))
+def test_breakdown_beyond_f(rule):
+    """The tolerance claim is tight: a beyond-f coalition (one adversary
+    for the undefended mean, a majority for everything else) steers the
+    estimate, with deviation scaling with the attack magnitude."""
+    spec = build(rule)
+    a_bad = 1 if rule == "mean" else (N // 2 + 1)
+    dev1, _, _ = deviation(spec, N, a_bad, 1e3, 0)
+    dev2, _, _ = deviation(spec, N, a_bad, 1e4, 0)
+    assert dev2 >= 5.0 * max(dev1, 1e-6), (
+        f"{rule}: {a_bad} adversaries failed to break the rule "
+        f"({dev1:.3g} -> {dev2:.3g}) — the f bound is not tight")
+
+
+# ---------------------------------------------------------------------------
+# 6. respecialize-vs-fresh-build parity (every rule, wrappers included)
+
+BUCKETS = (6, 8, 12)
+
+
+def build_elastic(rule):
+    cfg = RULES[rule]
+    el = elastic(N, buckets=BUCKETS)
+    fp = frac(1.0 / 6.0)
+    hyper = dict(cfg.get("hyper", {}))
+    f_static = cfg.get("f")
+    if cfg.get("wrapper"):
+        inner = make_spec("trimmed_mean", f=fp, n=el)
+        return make_spec(rule, f=inner.f, inner=inner, n=N, **hyper)
+    if f_static is not None:                 # rules pinning their own f
+        return make_spec(rule, f=f_static, n=el, **hyper)
+    return make_spec(rule, f=fp, n=el, **hyper)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_respecialize_equals_fresh_build(rule):
+    cfg = RULES[rule]
+    spec = build_elastic(rule)
+    fp = frac(1.0 / 6.0)
+    for b in BUCKETS:
+        re = spec.respecialize(b)
+        assert re is spec.respecialize(b), "bucket specs must be cached"
+        if cfg.get("wrapper"):
+            fresh = make_spec(rule, f=spec.f,
+                              inner=make_spec("trimmed_mean",
+                                              f=fp.resolve(b), n=b),
+                              n=N, **dict(cfg.get("hyper", {})))
+        else:
+            f_b = cfg.get("f", fp.resolve(b)) if "f" in cfg \
+                else fp.resolve(b)
+            fresh = make_spec(rule, f=f_b, n=b,
+                              **dict(cfg.get("hyper", {})))
+        assert re == fresh, (
+            f"{rule}@{b}: respecialize() diverged from a fresh build\n"
+            f"  respecialized: {re}\n  fresh:         {fresh}")
+        g = data(b, D, b)
+        st = state_for(re, g)
+        np.testing.assert_array_equal(
+            np.asarray(re.aggregate(g, state=st)),
+            np.asarray(fresh.aggregate(g, state=st)),
+            err_msg=f"{rule}@{b}")
+    # live counts between buckets map UP to the next capacity
+    assert spec.respecialize(7) is spec.respecialize(8)
+    assert spec.respecialize(5) is spec.respecialize(6)
+    with pytest.raises(ValueError):
+        spec.respecialize(N + 1)
+
+
+def test_nested_wrappers_delegate_elasticity():
+    """Elasticity lives on the inner rule, however deep the wrapper chain:
+    elastic_n reads through every level and respecialize() re-specializes
+    the rule that actually executes."""
+    from repro.core.aggregators import clipped, staleness_discounted
+    el = elastic(N, buckets=BUCKETS)
+    inner = make_spec("trimmed_mean", f=frac(1.0 / 6.0), n=el)
+    nested = clipped(staleness_discounted(inner), tau=50.0)
+    assert nested.elastic is None and nested.elastic_n is el
+    re6 = nested.respecialize(6)
+    assert re6 is nested.respecialize(5), "same bucket -> same object"
+    assert re6.inner.inner.n == 6 and re6.inner.inner.f == 1
+    assert re6.inner.inner == make_spec("trimmed_mean", f=1, n=6)
+    # and the loops detect the elastic chain: a wrapped elastic spec under
+    # churn takes the bucketed path (per-bucket compiles, live-n plans)
+    from repro.configs import get_config
+    from repro.core.tracecount import TRACE_COUNTS
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant
+    from repro.simulator import Rejoin, SimConfig, async_train_loop
+    from repro.training import ByzantineConfig
+
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=64,
+                                                 dtype="float32")
+    ds = SyntheticLM(vocab_size=64, seq_len=8, n_agents=N,
+                     per_agent_batch=1)
+    wrapped = clipped(make_spec("trimmed_mean", f=frac(1.0 / 6.0),
+                                n=el), tau=50.0)
+    bz = ByzantineConfig(n_agents=N, f=wrapped.f, aggregator=wrapped)
+    sim = SimConfig(faults=(Rejoin(agents=(0, 1, 2, 3), leave_at=2,
+                                   rejoin_at=8),), seed=0)
+    before = TRACE_COUNTS["async_step"]
+    _, h = async_train_loop(cfg, bz, adamw(constant(1e-3)), ds, steps=10,
+                            sim=sim, log_every=10, log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"])
+    used = TRACE_COUNTS["async_step"] - before
+    assert 1 <= used <= len(BUCKETS), used
+
+
+def test_static_spec_respecialize_contract():
+    s = make_spec("trimmed_mean", f=2, n=8)
+    assert s.respecialize(8) is s
+    with pytest.raises(ValueError, match="elastic"):
+        s.respecialize(6)
+    assert make_spec("trimmed_mean", f=2).respecialize(5).f == 2
+
+
+def test_frac_policy_tracks_live_roster():
+    spec = make_spec("trimmed_mean", f=frac(0.25), n=elastic(12, (4, 8, 12)))
+    assert spec.f == 3
+    assert spec.respecialize(12).f == 3
+    assert spec.respecialize(8).f == 2
+    assert spec.respecialize(4).f == 1
+    assert spec.respecialize(3).f == 1       # pads up to bucket 4
+    # a static int f is carried unchanged
+    s2 = make_spec("trimmed_mean", f=1, n=elastic(12, (4, 8, 12)))
+    assert {s2.respecialize(b).f for b in (4, 8, 12)} == {1}
+
+
+# ---------------------------------------------------------------------------
+# 7. roster-trace churn fuzz (host-side, cheap) — the simulator keeps the
+#    membership accounting honest under composed join/leave/churn faults
+
+
+@pytest.mark.parametrize("quorum", [None, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_roster_trace_invariants(seed, quorum):
+    from repro.simulator import (Churn, Join, MessageDrop, Rejoin,
+                                 Straggler, compile_schedule,
+                                 simulate_arrivals)
+    n, steps = 8, 40
+    tr = compile_schedule(
+        (Join(agents=(6, 7), at=5),
+         Rejoin(agents=(0,), leave_at=8, rejoin_at=14),
+         Churn(rate=0.15, mean_out=2.0, agents=(1, 2, 3)),
+         Straggler(dist="lognormal", scale=0.5),
+         MessageDrop(p=0.1)),
+        n, steps + 1, seed=seed)
+    at = simulate_arrivals(tr, steps, quorum=quorum, max_staleness=3)
+    assert at.roster is not None and at.roster.shape == (steps, n)
+    # an agent absent from the roster can neither arrive ...
+    assert not at.contrib[~at.roster].any(), "non-member contributed"
+    # ... nor dispatch ...
+    assert not at.refresh[~(tr.roster[:steps] & tr.alive[:steps])].any()
+    # ... nor count toward quorum: met steps delivered >= the live-capped
+    # quorum, missed steps genuinely fell short
+    q0 = n if quorum is None else quorum
+    for t in range(steps):
+        live = int(at.roster[t].sum())
+        q_t = live if quorum is None else min(q0, live)
+        arrived = int(at.contrib[t].sum())
+        if at.quorum_met[t]:
+            assert arrived >= q_t and live > 0, (t, arrived, q_t)
+        else:
+            assert arrived < q_t or live == 0, (t, arrived, q_t)
+    assert at.staleness[at.contrib].max(initial=0) <= 3
+    # every contribution's in-flight [dispatch, arrival] window lies
+    # inside the sender's membership (a mid-flight departure kills the
+    # delivery even if the agent rejoined before the arrival instant)
+    for t, i in zip(*np.nonzero(at.contrib)):
+        v = t - at.staleness[t, i]
+        assert tr.roster[v:t + 1, i].all(), (t, i, v)
+    # determinism: the trace is a pure function of (specs, n, steps, seed)
+    at2 = simulate_arrivals(tr, steps, quorum=quorum, max_staleness=3)
+    for x, y in ((at.contrib, at2.contrib), (at.staleness, at2.staleness),
+                 (at.vclock, at2.vclock), (at.roster, at2.roster)):
+        assert np.array_equal(x, y)
+
+
+@pytest.mark.parametrize("rule", ["trimmed_mean", "krum"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_training_churn_fuzz(rule, seed):
+    """Seeded end-to-end churn fuzz (auto-marked slow by conftest): a
+    composed join/leave/churn schedule through the elastic async loop
+    stays finite, defends against the scheduled attack, and compiles at
+    most once per bucket."""
+    from repro.configs import get_config
+    from repro.core.tracecount import TRACE_COUNTS
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant
+    from repro.simulator import (Churn, Join, SimConfig, Straggler,
+                                 async_train_loop)
+    from repro.training import ByzantineConfig
+
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=64,
+                                                 dtype="float32")
+    ds = SyntheticLM(vocab_size=64, seq_len=16, n_agents=8,
+                     per_agent_batch=2)
+    el = elastic(8, buckets=(4, 6, 8))
+    spec = make_spec(rule, f=frac(0.25), n=el)
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
+                         attack="sign_flip")
+    sim = SimConfig(faults=(Join(agents=(7,), at=4),
+                            Churn(rate=0.15, mean_out=2.0,
+                                  agents=(0, 1, 2, 3)),
+                            Straggler(dist="lognormal", scale=0.5)),
+                    quorum=4, max_staleness=3, seed=seed)
+    before = TRACE_COUNTS["async_step"]
+    _, h = async_train_loop(cfg, bz, adamw(constant(3e-3)), ds, steps=40,
+                            sim=sim, log_every=20, log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"]) and h[-1]["loss"] < 2.0
+    assert TRACE_COUNTS["async_step"] - before <= len(el.buckets)

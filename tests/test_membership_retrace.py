@@ -1,0 +1,183 @@
+"""Retrace-count regression: membership churn over a bucketed elastic spec
+compiles each loop at most ``len(buckets)`` times — EVER.
+
+The elastic layer's whole point is that joins/leaves/rejoins do not pay
+XLA compiles: roster indices/masks are traced operands, and only the
+bucket (a static shape + (n, f) plan) can retrigger tracing.  A 200-step
+churn run over a 3-bucket spec therefore admits at most 3 traces per loop
+— async training, synchronous training, and replicated serving each get a
+counter (:mod:`repro.core.tracecount`, incremented by a Python side
+effect INSIDE the traced step, so it ticks exactly once per compile).
+
+This is the membership analogue of PR 3's ``test_fault_masks_do_not_
+retrace`` and runs in its own CI lane next to the kernels-interpret job.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.aggregators import elastic, frac, make_spec
+from repro.core.tracecount import TRACE_COUNTS
+from repro.data import SyntheticLM
+from repro.optim import adamw, constant
+from repro.simulator import (Churn, Join, Rejoin, SimConfig,
+                             async_train_loop, compile_schedule)
+from repro.training import ByzantineConfig
+from repro.training.step import make_train_step
+
+STEPS = 200
+BUCKETS = (4, 6, 8)
+N = 8
+
+CFG = get_config("paper-100m-smoke").replace(vocab_size=32, dtype="float32")
+CHURN = (Join(agents=(7,), at=10),
+         Rejoin(agents=(6,), leave_at=40, rejoin_at=60),
+         Churn(rate=0.2, mean_out=2.0, agents=(1, 2, 3, 4)))
+
+
+def elastic_spec(rule="trimmed_mean"):
+    return make_spec(rule, f=frac(0.25), n=elastic(N, buckets=BUCKETS))
+
+
+def churn_roster(steps, seed=0, n=N):
+    tr = compile_schedule(CHURN, n, steps + 1, seed=seed)
+    assert tr.roster is not None
+    # the schedule must actually exercise several buckets
+    lives = sorted({int(r.sum()) for r in tr.roster[:steps]})
+    assert len(lives) >= 3, f"churn schedule too tame: lives={lives}"
+    return tr
+
+
+def test_async_loop_churn_compiles_at_most_once_per_bucket():
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N,
+                     per_agent_batch=1)
+    bz = ByzantineConfig(n_agents=N, f=2, aggregator=elastic_spec())
+    sim = SimConfig(faults=CHURN, seed=0)
+    churn_roster(STEPS)                      # same schedule sanity check
+    before_async = TRACE_COUNTS["async_step"]
+    before_sync = TRACE_COUNTS["train_step"]
+    _, h = async_train_loop(CFG, bz, adamw(constant(1e-3)), ds,
+                            steps=STEPS, sim=sim, log_every=STEPS,
+                            log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"])
+    n_async = TRACE_COUNTS["async_step"] - before_async
+    n_sync = TRACE_COUNTS["train_step"] - before_sync
+    assert n_async <= len(BUCKETS), (
+        f"async loop retraced {n_async} times over {len(BUCKETS)} buckets")
+    # full-roster synchronous-timing steps ride the ONE sync fast path
+    assert n_sync <= 1, f"sync fast path retraced {n_sync} times"
+
+
+def test_sync_step_churn_compiles_at_most_once_per_bucket():
+    """training/step.py threads the roster through the jitted synchronous
+    step: 200 churn steps, one compile per bucket."""
+    from repro.models import init_params
+
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N,
+                     per_agent_batch=1)
+    spec = elastic_spec()
+    bz = ByzantineConfig(n_agents=N, f=2, aggregator=spec)
+    opt = adamw(constant(1e-3))
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    tr = churn_roster(STEPS, seed=1)
+    fns = {}
+    before = TRACE_COUNTS["train_step"]
+    key = jax.random.PRNGKey(1)
+    for t in range(STEPS):
+        live = np.flatnonzero(tr.roster[t])
+        if len(live) == 0:
+            continue
+        b, idx, valid = spec.elastic.pack(live)
+        if b not in fns:
+            fns[b] = jax.jit(make_train_step(CFG, bz, opt, bucket=b))
+        key, kd, ks = jax.random.split(key, 3)
+        params, opt_state, _, m = fns[b](params, opt_state, None,
+                                         ds.batch(kd, t), ks,
+                                         jnp.asarray(idx),
+                                         jnp.asarray(valid))
+    assert np.isfinite(float(m["loss"]))
+    n_traces = TRACE_COUNTS["train_step"] - before
+    assert n_traces <= len(BUCKETS), (
+        f"sync step retraced {n_traces} times over {len(BUCKETS)} buckets")
+
+
+def test_serving_churn_compiles_at_most_once_per_bucket():
+    """generate_replicated under replica churn: the agreement step
+    compiles once per bucket across a 200-token decode."""
+    from repro.models import init_params
+    from repro.serving import generate_replicated
+
+    r = 5
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    stack = jax.tree.map(lambda l: jnp.stack([l] * r), params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                          CFG.vocab_size)}
+    # replicas 3, 4 pinned live so the roster never empties
+    tr = compile_schedule((Churn(rate=0.25, mean_out=2.0, agents=(0, 1, 2)),),
+                          r, STEPS, seed=2)
+    lives = sorted({int(row.sum()) for row in tr.roster})
+    assert len(lives) >= 3, f"churn schedule too tame: lives={lives}"
+    spec = make_spec("coordinate_median", f=frac(0.4),
+                     n=elastic(r, buckets=(3, 4, 5)))
+    before = TRACE_COUNTS["serving_agree"]
+    out = generate_replicated(CFG, stack, batch, STEPS, spec,
+                              roster=tr.roster)
+    assert out.shape == (1, STEPS)
+    n_traces = TRACE_COUNTS["serving_agree"] - before
+    assert n_traces <= 3, (
+        f"serving agreement retraced {n_traces} times over 3 buckets")
+
+
+def test_mask_only_roster_never_retraces():
+    """A non-elastic spec under churn takes the masked path: the roster
+    mask is a traced operand, ONE compile total."""
+    from repro.models import init_params
+    from repro.serving import generate_replicated
+
+    r = 5
+    params = init_params(CFG, jax.random.PRNGKey(3))
+    stack = jax.tree.map(lambda l: jnp.stack([l] * r), params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                                          CFG.vocab_size)}
+    tr = compile_schedule((Churn(rate=0.25, mean_out=2.0, agents=(0, 1)),),
+                          r, 50, seed=3)
+    before = TRACE_COUNTS["serving_agree"]
+    generate_replicated(CFG, stack, batch, 50,
+                        make_spec("coordinate_median", f=1, n=r),
+                        roster=tr.roster)
+    assert TRACE_COUNTS["serving_agree"] - before == 1
+
+
+def test_within_bucket_churn_reuses_the_compilation():
+    """Different rosters with the same live count (same bucket) must hit
+    the jit cache — the roster indices are traced, not baked in."""
+    spec = elastic_spec()
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N,
+                     per_agent_batch=1)
+    bz = ByzantineConfig(n_agents=N, f=2, aggregator=spec)
+    fn = jax.jit(make_train_step(CFG, bz, adamw(constant(1e-3)),
+                                 bucket=6))
+    from repro.models import init_params
+    params = init_params(CFG, jax.random.PRNGKey(5))
+    opt = adamw(constant(1e-3))
+    opt_state = opt.init(params)
+    before = TRACE_COUNTS["train_step"]
+    key = jax.random.PRNGKey(6)
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        live = np.sort(rng.choice(N, 5, replace=False)).astype(np.int32)
+        idx = np.concatenate([live, live[:1]]).astype(np.int32)
+        valid = np.arange(6) < 5
+        key, kd, ks = jax.random.split(key, 3)
+        params, opt_state, _, _ = fn(params, opt_state, None,
+                                     ds.batch(kd, t), ks,
+                                     jnp.asarray(idx), jnp.asarray(valid))
+    assert TRACE_COUNTS["train_step"] - before == 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -20,10 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.aggregators import make_spec
+from repro.core.aggregators import elastic, frac, make_spec
 from repro.models import init_params
 from repro.serving import generate, generate_replicated
-from repro.simulator.faults import CrashRecover, MessageDrop, compile_schedule
+from repro.simulator.faults import (CrashRecover, Join, MessageDrop, Rejoin,
+                                    compile_schedule)
 
 R, F_REP = 5, 2                      # replicas / tolerated corruptions
 STEPS = 6
@@ -72,6 +73,82 @@ def test_replicated_decoding_survives_fault_schedule():
                               fault_hook=fault_hook)
     assert hits == faulty_steps              # every scheduled fault fired
     np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+
+
+def _membership_roster(steps):
+    """Replica 3 JOINS at step 2; replica 4 crashes out of the roster at
+    step 1 and REJOINS at step 3.  Live counts hit 3, 4 and 5 — every
+    bucket of the elastic spec, with no ghost padding (live == bucket)."""
+    tr = compile_schedule((Join(agents=(3,), at=2),
+                           Rejoin(agents=(4,), leave_at=1, rejoin_at=3)),
+                          n_agents=R, horizon=steps, seed=0)
+    lives = [int(r.sum()) for r in tr.roster]
+    assert sorted(set(lives)) == [3, 4, 5], lives
+    return tr.roster
+
+
+def test_join_and_rejoin_mid_decode_fold_into_vote():
+    """Elastic membership mid-decode: a replica that joins and one that
+    rejoins after a crash are folded into f-of-r decoding the moment they
+    enter the roster, while ONE live replica stays Byzantine throughout —
+    the output equals the clean stream at every step, and the Byzantine
+    budget tracks the LIVE replica count (f = frac(0.4): 1-of-3, 1-of-4,
+    2-of-5)."""
+    cfg = get_config("paper-100m-smoke")
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 10), 0, cfg.vocab_size)}
+    clean = generate(cfg, params, batch, STEPS)
+    roster = _membership_roster(STEPS)
+
+    hook_steps = []
+
+    def fault_hook(step, logits):
+        # non-members emit garbage (they are gone — their output must be
+        # bit-irrelevant) and live replica 0 is confidently hostile
+        rows = (~roster[step]).copy()
+        rows[0] = True
+        hook_steps.append(step)
+        bad = -7.0 * logits + 3.0
+        return jnp.where(jnp.asarray(rows)[:, None, None], bad, logits)
+
+    spec = make_spec("coordinate_median", f=frac(0.4),
+                     n=elastic(R, buckets=(3, 4, 5)))
+    assert [spec.respecialize(b).f for b in (3, 4, 5)] == [1, 1, 2]
+    stack = jax.tree.map(lambda l: jnp.stack([l] * R), params)
+    out = generate_replicated(cfg, stack, batch, STEPS, spec,
+                              fault_hook=fault_hook, roster=roster)
+    assert hook_steps == list(range(STEPS))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+
+
+def test_join_schedule_breaks_beyond_live_f():
+    """Tightness under a shrunken roster: 2 corrupted replicas exceed the
+    live budget (f=1 when only 3 replicas are members) and CAN steer the
+    stream — the same corruption the full 5-replica roster absorbs."""
+    cfg = get_config("paper-100m-smoke")
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    clean = generate(cfg, params, batch, STEPS)
+    roster = _membership_roster(STEPS)
+    spec = make_spec("coordinate_median", f=frac(0.4),
+                     n=elastic(R, buckets=(3, 4, 5)))
+    stack = jax.tree.map(lambda l: jnp.stack([l] * R), params)
+
+    def corrupt2(step, logits):
+        rows = np.zeros(R, bool)
+        rows[:2] = True                       # 2 corrupted live replicas
+        bad = -7.0 * logits + 3.0
+        return jnp.where(jnp.asarray(rows)[:, None, None], bad, logits)
+
+    out_churn = generate_replicated(cfg, stack, batch, STEPS, spec,
+                                    fault_hook=corrupt2, roster=roster)
+    assert not np.array_equal(np.asarray(out_churn), np.asarray(clean))
+    # the full static roster tolerates the same corruption (f=2 of 5)
+    out_full = generate_replicated(cfg, stack, batch, STEPS, spec,
+                                   fault_hook=corrupt2)
+    np.testing.assert_array_equal(np.asarray(out_full), np.asarray(clean))
 
 
 def test_replicated_decoding_breaks_beyond_f():

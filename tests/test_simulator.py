@@ -8,10 +8,10 @@ from repro.core.p2p.graph import complete_graph, ring_graph
 from repro.core.redundancy.coding import tree_draco_aggregate
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
-from repro.simulator import (CrashRecover, MessageDrop, Partition,
-                             PermanentCrash, SimConfig, Straggler,
-                             async_train_loop, compile_schedule, no_faults,
-                             simulate_arrivals)
+from repro.simulator import (Churn, CrashRecover, FaultTrace, Join,
+                             MessageDrop, Partition, PermanentCrash, Rejoin,
+                             SimConfig, Straggler, async_train_loop,
+                             compile_schedule, no_faults, simulate_arrivals)
 from repro.training import ByzantineConfig, train_loop
 
 SILENT = {"log_fn": lambda *_: None}
@@ -52,6 +52,28 @@ def test_schedule_composition_and_shapes():
     assert no_faults(6, 25).is_trivial()
 
 
+def test_membership_schedule_composition_and_shapes():
+    specs = (Join(agents=(4, 5), at=6),
+             Rejoin(agents=(0,), leave_at=3, rejoin_at=9),
+             Churn(rate=0.2, mean_out=2.0, agents=(1,)))
+    tr = compile_schedule(specs, 6, 25, seed=1)
+    assert tr.roster is not None and tr.roster.shape == (25, 6)
+    assert not tr.roster[:6, 4].any() and tr.roster[6:, 4].all()   # Join
+    assert tr.roster[:3, 0].all() and not tr.roster[3:9, 0].any()
+    assert tr.roster[9:, 0].all()                                  # Rejoin
+    assert tr.roster[:, (2, 3)].all()           # untouched agents stay in
+    assert not tr.is_trivial()
+    assert tr.n_live(0) == 4 and tr.n_live(10) >= 5
+    # determinism in the seed, like every other spec family
+    tr2 = compile_schedule(specs, 6, 25, seed=1)
+    assert np.array_equal(tr.roster, tr2.roster)
+    assert not np.array_equal(
+        tr.roster, compile_schedule(specs, 6, 25, seed=2).roster)
+    # no membership specs -> no roster allocated (and member() is True)
+    assert compile_schedule(SPECS, 6, 25, seed=0).roster is None
+    assert compile_schedule(SPECS, 6, 25, seed=0).member(3, 2)
+
+
 # ---------------------------------------------------------------------------
 # event queue / arrival simulation
 
@@ -78,6 +100,83 @@ def test_bounded_staleness_is_bounded():
     at = simulate_arrivals(tr, 40, quorum=5, max_staleness=2)
     assert at.staleness[at.contrib].max(initial=0) <= 2
     assert (at.contrib.sum(1) >= 1).all()
+
+
+def test_same_instant_ties_join_the_same_update():
+    """Deflake regression: arrivals sharing the quorum instant ALL join
+    the update (the sweep), so which of them pops first can never change
+    the accepted set — with uniform integer delays every step is a full
+    barrier even at quorum=2."""
+    at = simulate_arrivals(no_faults(6, 21), 20, quorum=2)
+    assert at.contrib.all() and at.quorum_met.all()
+    assert (at.vclock == np.arange(1, 21)).all()
+
+
+def test_virtual_clock_is_agent_relabeling_equivariant():
+    """Deflake regression for the pinned (vtime, agent) heap tie-break:
+    relabeling agents commutes with the simulation.  Integer delays force
+    exact same-instant collisions every step; crashes, drops and a
+    staleness bound exercise every rejection path — if any tie were
+    resolved by internal dispatch order, the permuted run would diverge."""
+    n, steps = 5, 24
+    rng = np.random.default_rng(0)
+    delay = rng.integers(1, 4, size=(steps + 1, n)).astype(float)
+    alive = np.ones((steps + 1, n), bool)
+    alive[4:9, 2] = False                       # crash/recover window
+    drop = rng.random((steps + 1, n)) < 0.2
+    base = FaultTrace(alive=alive, drop=drop, delay=delay)
+    at = simulate_arrivals(base, steps, quorum=3, max_staleness=2)
+
+    perm = np.asarray([3, 0, 4, 1, 2])
+    permuted = FaultTrace(alive=alive[:, perm], drop=drop[:, perm],
+                          delay=delay[:, perm])
+    atp = simulate_arrivals(permuted, steps, quorum=3, max_staleness=2)
+    # column j of the permuted run is original agent perm[j]
+    assert np.array_equal(atp.contrib, at.contrib[:, perm])
+    assert np.array_equal(atp.staleness, at.staleness[:, perm])
+    assert np.array_equal(atp.refresh, at.refresh[:, perm])
+    assert np.array_equal(atp.vclock, at.vclock)
+    assert np.array_equal(atp.quorum_met, at.quorum_met)
+
+
+def test_inflight_gradient_dies_with_midflight_departure():
+    """A gradient in flight when its sender leaves the roster is discarded
+    even if the sender has already REJOINED by the arrival instant — the
+    agent's state died with it; it re-dispatches fresh."""
+    tr = compile_schedule(
+        (Rejoin(agents=(0,), leave_at=5, rejoin_at=6),
+         Straggler(dist="constant", scale=3.0, agents=(0,))), 4, 31, seed=0)
+    at = simulate_arrivals(tr, 30, quorum=3)
+    # every contribution's in-flight window [dispatch, arrival] lies
+    # entirely inside the agent's membership
+    for t, i in zip(*np.nonzero(at.contrib)):
+        v = t - at.staleness[t, i]
+        assert tr.roster[v:t + 1, i].all(), (t, i, v)
+    # agent 0 still participates after rejoining (fresh dispatch)
+    assert at.contrib[10:, 0].any()
+
+
+def test_p2p_rejects_membership_schedules():
+    import pytest
+    adj = complete_graph(4)
+    with pytest.raises(NotImplementedError, match="membership"):
+        p2p_dgd_run(adj, lambda i, x: x, jnp.ones((4, 2)), steps=3,
+                    fault_schedule=(Churn(rate=0.3),))
+
+
+def test_roster_aware_quorum_accounting():
+    """An agent outside the roster can neither arrive nor count toward
+    quorum: the effective quorum is capped at the live roster, so a
+    shrunken cluster keeps meeting it."""
+    tr = compile_schedule((Rejoin(agents=(0, 1, 2), leave_at=5,
+                                  rejoin_at=15),), 6, 31, seed=0)
+    at = simulate_arrivals(tr, 30, quorum=5)
+    assert not at.contrib[5:15, :3].any()       # gone from every update
+    assert at.quorum_met.all()                  # q capped at 3 live agents
+    assert at.contrib[6:14, 3:].all()
+    assert at.contrib[16:].all()                # whole roster back
+    # non-members never dispatch (refresh is roster-gated)
+    assert not at.refresh[5:14, :3].any()
 
 
 def test_straggler_induces_staleness_not_starvation():
