@@ -2,6 +2,8 @@
 
 - aggregators:  the unified AggregatorSpec API — typed, stateful,
                 composable robust aggregation (registry + caps + engine)
+- flat:         FlatPlan — the zero-copy (n, P) arena ravel/unravel plan
+                behind spec.aggregate_flat and the loops' flat pipeline
 - filters:      dense reference implementations (Table 2) — the oracle
 - attacks:      Byzantine behaviours (§3.1, §4.1)
 - aggregation:  DEPRECATED string-dispatch shims over aggregators
@@ -17,10 +19,12 @@ from repro.core.aggregators import (AggregatorCaps, AggregatorSpec,
                                     staleness_discounted)
 from repro.core.attacks import apply_attack, get_attack, make_byzantine_mask
 from repro.core.filters import FILTERS, get_filter
+from repro.core.flat import FlatPlan
 from repro.core.momentum import init_momentum, worker_momentum
 
 __all__ = [
-    "AggregatorCaps", "AggregatorSpec", "make_spec", "register_aggregator",
+    "AggregatorCaps", "AggregatorSpec", "FlatPlan", "make_spec",
+    "register_aggregator",
     "list_aggregators", "clipped", "bucketed", "staleness_discounted",
     "tree_aggregate", "apply_attack", "get_attack", "make_byzantine_mask",
     "FILTERS", "get_filter", "init_momentum", "worker_momentum",

@@ -22,13 +22,12 @@ when a rule is added."""
 from __future__ import annotations
 
 import sys
-import warnings
 
 from repro.core.aggregators import (                       # noqa: F401
     AggregatorDeprecationWarning, REGISTRY, get_aggregator_def, make_spec,
     tree_bulyan, tree_dot, tree_geometric_median, tree_gram,
     tree_median_of_means, tree_sqnorms, tree_stack_ravel,
-    tree_unravel_like, tree_weighted_sum, tree_where_agents)
+    tree_unravel_like, tree_weighted_sum, tree_where_agents, warn_once)
 
 # legacy capability sets — now derived, kept only for external importers
 COORDWISE = {n for n, d in REGISTRY.items() if d.caps.coordwise}
@@ -38,23 +37,17 @@ ITERATIVE = {n for n, d in REGISTRY.items()
              if d.caps.iterative and "meta" not in d.tags}
 
 
-# call sites already warned, keyed by the CALLER's (filename, lineno) —
-# stdlib location-dedup is version-gated on the global warning filters,
-# which jax mutates on ordinary dispatches, so without this set a shim in
-# a training loop would re-warn every single step
-_WARNED_SITES: set = set()
-
-
 def _shim_spec(fn_name, name, f, impl, hyper):
+    # one warning per CALLER call site (filename, lineno) — the dedup set
+    # lives in aggregators.warn_once, shared with the kernel-fallback
+    # notices (stdlib location-dedup breaks under jax's filter churn)
     caller = sys._getframe(2)
-    site = (caller.f_code.co_filename, caller.f_lineno)
-    if site not in _WARNED_SITES:
-        _WARNED_SITES.add(site)
-        warnings.warn(
-            f"{fn_name}(name, ...) is deprecated: build an AggregatorSpec "
-            f"with repro.core.aggregators.make_spec({name!r}, f={f}, ...) "
-            f"and call spec.aggregate(...)",
-            AggregatorDeprecationWarning, stacklevel=3)
+    warn_once(
+        ("shim", caller.f_code.co_filename, caller.f_lineno),
+        f"{fn_name}(name, ...) is deprecated: build an AggregatorSpec "
+        f"with repro.core.aggregators.make_spec({name!r}, f={f}, ...) "
+        f"and call spec.aggregate(...)",
+        AggregatorDeprecationWarning, stacklevel=4)
     hyper = dict(hyper)
     state = None
     if "server_grad" in hyper:

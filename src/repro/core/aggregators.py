@@ -26,31 +26,31 @@ through ``**hyper``.  This module replaces all of that with one object:
     available kernel and proven against the gather path by
     tests/test_kernels_parity.py.
 
-Registered rules — capabilities, available impls, elastic-n plans
-    ==================  =========================  ===================  =======
-    rule                caps                       impls                elastic
-    ==================  =========================  ===================  =======
-    mean                weight_decomposable        fused, gather        yes
-    krum                weight_decomp, pairwise    fused, gather, pls   yes (nbr counts)
-    multi_krum          weight_decomp, pairwise    fused, gather        yes (nbr counts)
-    m_krum              weight_decomp, pairwise    fused, gather        yes (nbr counts)
-    mda                 weight_decomp, pairwise    fused, gather        yes (subset tables)
-    cge                 weight_decomp, pairwise    fused, gather, pls   yes (keep counts)
-    cgc                 weight_decomposable        fused, gather        yes
-    zeno                weight_decomp, stateful    fused, gather        yes (state n-free)
-    zeno_pp             weight_decomp, stateful    custom (fused)       yes (state n-free)
-    coordinate_median   coordwise                  fused, gather, pls*  yes
-    trimmed_mean        coordwise                  fused, gather, pls*  yes (trim counts)
-    phocas              coordwise                  fused, gather        yes
-    mean_around_median  coordwise                  fused, gather        yes
-    geometric_median    iterative                  fused, gather        yes
-    rfa                 iterative                  fused, gather        yes
-    median_of_means     iterative                  fused, gather        yes (group counts)
-    bulyan              iterative, pairwise        fused, gather        yes (theta/beta)
-    clipped             wrapper                    delegates to inner   via inner
-    bucketed            wrapper                    delegates to inner   via inner
-    staleness_disc.     wrapper                    delegates to inner   via inner
-    ==================  =========================  ===================  =======
+Registered rules — capabilities, available impls, masked kernels, elastic
+    ==================  =========================  ==================  ======  =======
+    rule                caps                       impls               m-pls   elastic
+    ==================  =========================  ==================  ======  =======
+    mean                weight_decomposable        fused, gather       --      yes
+    krum                weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
+    multi_krum          weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
+    m_krum              weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
+    mda                 weight_decomp, pairwise    fused, gather, pls  yes     yes (subset tables)
+    cge                 weight_decomp, pairwise    fused, gather, pls  yes     yes (keep counts)
+    cgc                 weight_decomposable        fused, gather       --      yes
+    zeno                weight_decomp, stateful    fused, gather       --      yes (state n-free)
+    zeno_pp             weight_decomp, stateful    custom (fused)      --      yes (state n-free)
+    coordinate_median   coordwise                  fused, gather, pls  yes     yes
+    trimmed_mean        coordwise                  fused, gather, pls  yes     yes (trim counts)
+    phocas              coordwise                  fused, gather       --      yes
+    mean_around_median  coordwise                  fused, gather       --      yes
+    geometric_median    iterative                  fused, gather       --      yes
+    rfa                 iterative                  fused, gather       --      yes
+    median_of_means     iterative                  fused, gather       --      yes (group counts)
+    bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)
+    clipped             wrapper                    delegates to inner  --      via inner
+    bucketed            wrapper                    delegates to inner  --      via inner
+    staleness_disc.     wrapper                    delegates to inner  --      via inner
+    ==================  =========================  ==================  ======  =======
 
     ``elastic``: every rule supports elastic-n specs — build with
     ``make_spec(name, n=elastic(n_max, buckets=...), f=frac(0.2))`` and
@@ -62,12 +62,31 @@ Registered rules — capabilities, available impls, elastic-n plans
     the Byzantine budget per bucket so breakdown bounds track the live
     roster; a static int ``f`` is carried unchanged across buckets.
 
-    ``pallas*``: also has a FUSED masked/weighted kernel (mean-imputation
-    inside the sort tile — repro.kernels.masked) used by the async loop's
-    quorum masks; other pallas rules impute at tree level first.  All
-    pallas entries run in interpret mode off-TPU (same code path).
+    ``m-pls`` (masked-selection column): the rule's masked/weighted
+    pallas path is a FUSED imputation-free kernel — mean-imputation
+    happens inside the sort tile (repro.kernels.masked) for the
+    coordinate rules and inside the Gram / application tiles
+    (repro.kernels.pairwise.masked_gram + repro.kernels.wsum) for the
+    selection family, so the imputed (n, d) stack is NEVER materialized
+    and quorum masks / staleness weights stay traced operands (fault
+    schedules and rosters never recompile, never allocate).  Rules
+    without a masked kernel impute at tree level (a one-time warning
+    fires if a pallas spec falls back there on mixed-dtype leaves).
+    All pallas entries run in interpret mode off-TPU (same code path);
     ``impl="auto"`` (the ``make_spec`` default) picks pallas exactly for
-    the rules marked above; :func:`pallas_available` is the predicate.
+    the rules marked above (bulyan: only for its classic ``base="krum"``)
+    and :func:`pallas_available` is the predicate.
+
+Zero-copy flat pipeline
+    Dense-stack impls (gather / pallas, stateless non-wrapper rules —
+    ``spec.flat_capable``) also expose ``spec.aggregate_flat(arena,
+    mask=..., weights=...)`` over a pre-raveled (n, P) gradient arena
+    (:class:`repro.core.flat.FlatPlan`): the training loops ravel ONCE
+    per step at gradient production, the serving engine reshapes the
+    logits stack for free, and the single unravel happens at
+    optimizer-apply — the aggregation dispatch itself never touches a
+    pytree and never re-concatenates the model-sized stack.  Bit-for-bit
+    with the tree engine for uniform-dtype trees.
 
 Capability flags (:class:`AggregatorCaps`)
     coordwise / weight-decomposable / iterative / masked-capable /
@@ -100,6 +119,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -108,6 +128,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.filters import dense as D
+from repro.core.flat import FlatPlan
 
 
 class AggregatorDeprecationWarning(DeprecationWarning):
@@ -115,26 +136,43 @@ class AggregatorDeprecationWarning(DeprecationWarning):
     :mod:`repro.core.aggregation` — internal code must use specs."""
 
 
+_WARNED_ONCE: set = set()
+
+
+def warn_once(key, message, category=UserWarning, stacklevel=3):
+    """Warn exactly once per ``key`` across the process.
+
+    stdlib location-dedup ("default" action) is version-gated on the
+    global warning filters, which jax mutates on ordinary dispatches —
+    without manual dedup a warning inside a training loop would re-fire
+    every single step.  THE one dedup mechanism: the deprecation shims
+    (:mod:`repro.core.aggregation`) and the kernel-fallback notices below
+    both key into this set."""
+    if key in _WARNED_ONCE:
+        return
+    _WARNED_ONCE.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel)
+
+
 # ---------------------------------------------------------------------------
 # tree helpers (agent axis = leading axis of every leaf)
 
 
 def tree_stack_ravel(grads):
-    """(pytree with leading n) -> (n, P) dense stack."""
+    """(pytree with leading n) -> (n, P) dense stack (one concatenate;
+    leaf dtypes preserved — mixed-dtype trees promote like concatenate)."""
     leaves = jax.tree.leaves(grads)
     n = leaves[0].shape[0]
     return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
 
 
 def tree_unravel_like(vec, proto):
-    """(P,) -> pytree shaped like one agent's grads (proto has leading n)."""
-    leaves, treedef = jax.tree.flatten(proto)
-    out, off = [], 0
-    for l in leaves:
-        size = int(np.prod(l.shape[1:], dtype=np.int64))
-        out.append(vec[off:off + size].reshape(l.shape[1:]).astype(l.dtype))
-        off += size
-    return jax.tree.unflatten(treedef, out)
+    """(P,) -> pytree shaped like one agent's grads (proto has leading n).
+
+    Offsets/sizes come from the proto's cached :class:`FlatPlan` — computed
+    once per tree structure, never per call (the legacy version re-derived
+    ``np.prod`` sizes inside every trace)."""
+    return FlatPlan.for_tree(proto).unravel(vec)
 
 
 def tree_sqnorms(grads):
@@ -513,7 +551,7 @@ class AggregatorSpec:
 
     def with_impl(self, impl: str) -> "AggregatorSpec":
         return dataclasses.replace(
-            self, impl=_resolve_impl(self.name, impl))
+            self, impl=_resolve_impl(self.name, impl, self.hyper_dict))
 
     def respecialize(self, n_live: int) -> "AggregatorSpec":
         """The concrete spec serving a live roster of ``n_live`` agents.
@@ -624,6 +662,46 @@ class AggregatorSpec:
                 f"{self.name} is stateful: pass state=spec.init_state(...)")
         return d.weights_fn(self, grads, state)
 
+    # -- the zero-copy flat path ------------------------------------------
+    @property
+    def flat_capable(self) -> bool:
+        """True iff this spec can aggregate a pre-raveled (n, P) arena via
+        :meth:`aggregate_flat` — the dense-stack impls (gather / pallas)
+        of plain, stateless rules.  Composition wrappers, custom-path
+        rules and the fused (leaf-wise, sharding-aware) impl keep the
+        tree engine: their arithmetic is defined on leaves, and flattening
+        would silently change reduce orders."""
+        d = get_aggregator_def(self.name)
+        return (not d.is_wrapper and d.custom_fn is None
+                and d.masked_fn is None and not self.stateful
+                and self.impl in ("gather", "pallas"))
+
+    def aggregate_flat(self, stack, mask=None, weights=None, state=None):
+        """Aggregate a pre-raveled (n, P) gradient arena -> (P,) fp32.
+
+        The flat-pipeline twin of :meth:`aggregate`: the caller raveled
+        the per-agent gradients ONCE at production time
+        (:meth:`repro.core.flat.FlatPlan.ravel`) and unravels the result
+        once at optimizer-apply, so the aggregation dispatch itself moves
+        no model-sized memory.  Masked/weighted semantics are the gather
+        path's impute-then-scale law, bit-for-bit with the tree engine
+        for uniform-dtype trees; ``impl="pallas"`` runs the fused masked
+        kernels (imputation inside the tile — the (n, P) imputed copy is
+        never materialized)."""
+        d = get_aggregator_def(self.name)
+        if not self.flat_capable:
+            raise ValueError(
+                f"{self.describe()} (impl={self.impl}) has no flat path — "
+                "check spec.flat_capable before routing the arena")
+        if mask is None and weights is None:
+            return _flat_sync_vec(self, d, stack, state)
+        if not d.caps.masked_capable:
+            raise ValueError(f"{self.name} does not support masked "
+                             f"aggregation")
+        if mask is None:
+            mask = jnp.ones((stack.shape[0],), bool)
+        return _flat_masked_vec(self, d, stack, mask, weights, state)
+
 
 @functools.lru_cache(maxsize=None)
 def _respecialize(spec: AggregatorSpec, n_live: int) -> AggregatorSpec:
@@ -676,20 +754,35 @@ def pallas_available(name: str) -> bool:
     return pallas_supported(name)
 
 
-def _resolve_impl(name: str, impl: str) -> str:
-    """``auto`` -> ``pallas`` where caps + kernel availability allow, else
-    ``fused``; explicit ``pallas`` on an unsupported rule raises HERE (at
-    build time), not deep inside jit."""
+def _pallas_supports_hyper(name: str, hyper: dict | None) -> bool:
+    """Hyper-level kernel gate: bulyan's kernels implement only the
+    classic krum base (the generic-base path calls an arbitrary inner
+    filter per selection round — not Gram-derivable)."""
+    if name == "bulyan":
+        return (hyper or {}).get("base", "krum") == "krum"
+    return True
+
+
+def _resolve_impl(name: str, impl: str, hyper: dict | None = None) -> str:
+    """``auto`` -> ``pallas`` where caps + kernel availability (and the
+    rule's hyper, e.g. bulyan's base) allow, else ``fused``; explicit
+    ``pallas`` on an unsupported rule raises HERE (at build time), not
+    deep inside jit."""
     if impl not in ("auto", "fused", "gather", "pallas"):
         raise ValueError(
             f"impl must be auto|fused|gather|pallas, got {impl!r}")
+    supported = pallas_available(name) and _pallas_supports_hyper(name,
+                                                                 hyper)
     if impl == "auto":
-        return "pallas" if pallas_available(name) else "fused"
-    if impl == "pallas" and not pallas_available(name):
+        return "pallas" if supported else "fused"
+    if impl == "pallas" and not supported:
         from repro.kernels import pallas_supported
-        reason = ("no Pallas kernel registered for it"
-                  if not pallas_supported(name) else
-                  "its caps are neither coordwise nor pairwise")
+        if not pallas_supported(name):
+            reason = "no Pallas kernel registered for it"
+        elif not _pallas_supports_hyper(name, hyper):
+            reason = "its hyper-parameters select a non-kernelized variant"
+        else:
+            reason = "its caps are neither coordwise nor pairwise"
         raise ValueError(
             f"{name}: impl='pallas' requested but {reason} "
             "(see repro.kernels.dispatch.PALLAS_RULES)")
@@ -731,7 +824,6 @@ def make_spec(name: str, f: "int | FracF" = 0, impl: str = "auto",
     historical masked semantics (``ByzantineConfig.impl`` still defaults
     to it).  tests/test_kernels_parity.py pins all three."""
     d = get_aggregator_def(name)
-    impl = _resolve_impl(name, impl)
     el = n if isinstance(n, ElasticN) else None
     n_int = el.n_max if el is not None else n
     f_policy = f if isinstance(f, FracF) else None
@@ -763,6 +855,7 @@ def make_spec(name: str, f: "int | FracF" = 0, impl: str = "auto",
             raise ValueError(
                 f"{name}: unknown hyper-parameter {k!r} "
                 f"(allowed: {sorted(d.hyper_keys | d.impl_keys)})")
+    impl = _resolve_impl(name, impl, plain)
     spec = AggregatorSpec(name=name, f=f,
                           hyper=tuple(sorted(plain.items())), impl=impl,
                           impl_hyper=tuple(sorted(impl_only.items())),
@@ -846,20 +939,23 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
     With mask all-True and weights all-one this reduces to the synchronous
     path up to exact-arithmetic no-ops.
 
-    ``impl="pallas"`` + a coordinate-wise rule takes the FUSED masked
-    kernel (repro.kernels.masked): imputation happens inside the sort
-    tile, so no imputed (n, d) copy is materialized and the mask/weights
-    stay traced operands (fault schedules never recompile).  Arithmetic is
-    identical to the imputation below, bit-for-bit in fp32.  Other pallas
-    rules (Krum/CGE) impute here and run their sync kernels on the imputed
-    stack — the gather path's masked semantics exactly."""
+    ``impl="pallas"`` + a registered masked kernel (every coordinate-wise
+    AND pairwise kernelized rule — see kernels.dispatch.PALLAS_MASKED_
+    RULES) takes the FUSED imputation-free path: imputation happens
+    inside the sort / Gram / application tiles, so no imputed (n, d)
+    copy is ever materialized and the mask/weights stay traced operands
+    (fault schedules never recompile).  Arithmetic is identical to the
+    imputation below, bit-for-bit in fp32 — the gather path's masked
+    semantics exactly.  A pallas spec over MIXED-dtype leaves cannot take
+    the fused kernel (one exchange dtype per stack) and falls back to the
+    imputed path below with a one-time warning."""
     mask, w, cnt, tot = _masked_prelude(grads, mask, weights)
-    if spec.impl == "pallas" and d.caps.coordwise:
+    if spec.impl == "pallas":
         from repro.kernels import (pallas_masked_aggregate,
                                    pallas_masked_supported)
         leaves = jax.tree.leaves(grads)
-        if (pallas_masked_supported(spec.name)
-                and all(l.dtype == leaves[0].dtype for l in leaves)):
+        uniform = all(l.dtype == leaves[0].dtype for l in leaves)
+        if pallas_masked_supported(spec.name) and uniform:
             stack = tree_stack_ravel(grads)        # native dtype, no cast
             vec = pallas_masked_aggregate(
                 spec.name, stack, mask.astype(jnp.float32), w / tot,
@@ -869,6 +965,18 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
             return jax.tree.map(
                 lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
                 agg)
+        if pallas_masked_supported(spec.name):
+            # the fused masked kernel needs one exchange dtype; a mixed
+            # tree silently paid the imputed (n, d) copy before this
+            # notice existed — same estimator, just the slow path
+            dts = tuple(sorted({jnp.dtype(l.dtype).name for l in leaves}))
+            warn_once(
+                ("masked-pallas-mixed-dtype", spec.name, dts),
+                f"{spec.name}: masked pallas kernel skipped — gradient "
+                f"leaves carry mixed dtypes {dts}; falling back to the "
+                "tree-level imputed path (materializes the imputed "
+                "(n, d) stack).  Cast the leaves to one exchange dtype "
+                "to restore the fused kernel.")
     wn = w / tot
     mean_sel = tree_weighted_sum(grads, wn)
     imputed = tree_where_agents(
@@ -892,6 +1000,61 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
     scale = tot / cnt                      # <= 1, == 1 when all fresh
     return jax.tree.map(
         lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), agg)
+
+
+# ---------------------------------------------------------------------------
+# engine: flat-arena path (zero-copy pipeline — the loops ravel once at
+# gradient production, this engine never touches a pytree, and the caller
+# unravels exactly once at optimizer-apply)
+
+
+def _flat_f32(stack):
+    return stack if stack.dtype == jnp.float32 else stack.astype(jnp.float32)
+
+
+def _flat_sync_vec(spec, d, stack, state):
+    """(n, P) arena -> (P,) fp32: the dense sync engine without the
+    per-call ravel/unravel (bit-for-bit with `_sync_aggregate` on the
+    equivalent tree — the cast-then-concat and concat-then-cast orders
+    produce identical fp32 bits)."""
+    if spec.impl == "pallas":
+        from repro.kernels import pallas_aggregate
+        return pallas_aggregate(spec.name, _flat_f32(stack), spec.f,
+                                spec.hyper)
+    hyper = {k: v for k, v in spec.hyper if k in d.gather_keys}
+    return d.dense_fn(_flat_f32(stack), spec.f, **hyper)
+
+
+def _flat_masked_vec(spec, d, stack, mask, weights, state):
+    """Masked/weighted flat path: the gather law (impute at the delivered
+    weighted mean, run the plain rule, scale by tot/cnt) on the arena.
+    ``impl="pallas"`` + a registered masked kernel fuses the imputation
+    into the kernel tiles — the imputed (n, P) copy is never
+    materialized and mask/weights stay traced operands."""
+    mask, w, cnt, tot = _masked_prelude(stack, mask, weights)
+    scale = tot / cnt
+
+    def scaled(vec):
+        # the tree engine rounds the fp32 aggregate to the LEAF dtype
+        # before applying the scale (unravel, then per-leaf
+        # (l.astype(f32) * scale).astype(l.dtype)); replicate that
+        # double rounding through the arena dtype so non-f32 uniform
+        # trees stay bit-for-bit (a no-op round trip for f32 arenas)
+        return vec.astype(stack.dtype).astype(jnp.float32) * scale
+
+    if spec.impl == "pallas":
+        from repro.kernels import (pallas_masked_aggregate,
+                                   pallas_masked_supported)
+        if pallas_masked_supported(spec.name):
+            vec = pallas_masked_aggregate(
+                spec.name, stack, mask.astype(jnp.float32), w / tot,
+                spec.f, spec.hyper)
+            return scaled(vec)
+    wn = w / tot
+    xf = _flat_f32(stack)
+    mean_sel = jnp.sum(xf * wn[:, None], axis=0).astype(stack.dtype)
+    imputed = jnp.where(mask[:, None], stack, mean_sel[None])
+    return scaled(_flat_sync_vec(spec, d, imputed, state))
 
 
 # ---------------------------------------------------------------------------
@@ -1475,8 +1638,8 @@ def staleness_discounted(inner: AggregatorSpec, weighting: str = "poly",
 __all__ = [
     "AggregatorCaps", "AggregatorDef", "AggregatorSpec",
     "AggregatorDeprecationWarning", "REGISTRY", "register_aggregator",
-    "get_aggregator_def", "list_aggregators", "make_spec",
-    "pallas_available", "ElasticN", "FracF", "elastic", "frac",
+    "get_aggregator_def", "list_aggregators", "make_spec", "warn_once",
+    "pallas_available", "ElasticN", "FlatPlan", "FracF", "elastic", "frac",
     "clipped", "bucketed", "staleness_discounted",
     "tree_stack_ravel", "tree_unravel_like", "tree_sqnorms", "tree_gram",
     "tree_dot", "tree_weighted_sum", "tree_where_agents",

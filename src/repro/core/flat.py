@@ -1,0 +1,116 @@
+"""FlatPlan: the precomputed ravel/unravel plan of the zero-copy flat
+aggregation pipeline.
+
+Every dense aggregation path (``impl="gather"``, ``impl="pallas"``) works on
+the raveled (n, P) gradient stack, but the legacy engine rebuilt the
+flattening *inside every aggregation call*: ``tree_stack_ravel`` re-derived
+each leaf's size and re-concatenated the model-sized stack per call, and
+``tree_unravel_like`` recomputed ``np.prod`` offsets per call inside traced
+code.  At model scale that is pure memory traffic and trace-time overhead on
+the hottest path in the system (the survey's per-step aggregation tax).
+
+A :class:`FlatPlan` hoists all of that to plan time:
+
+* leaf offsets / trailing shapes / dtypes are computed ONCE per tree
+  structure (cached on ``(treedef, shapes, dtypes)`` — a dict probe on
+  every later call, including calls inside jit traces);
+* :meth:`FlatPlan.ravel` builds the (n, P) arena with one concatenate —
+  the training loops call it once per step at gradient-production time and
+  thread the arena through the jitted step (donated on TPU backends);
+* :meth:`FlatPlan.unravel` splits the aggregate back into the parameter
+  tree exactly once, at optimizer-apply — never inside the aggregation
+  dispatch.
+
+The arena dtype is the tree's uniform leaf dtype when one exists (so
+``agg_dtype`` exchange-compression survives the flattening) and fp32
+otherwise; per-coordinate arithmetic is unchanged either way, so the flat
+pipeline is bit-for-bit with the per-call ravel it replaces.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FlatPlan:
+    """Ravel/unravel plan for a pytree with a leading agent axis.
+
+    ``shapes``/``dtypes`` describe the per-leaf TRAILING dims (agent axis
+    stripped); ``offsets[i]:offsets[i] + sizes[i]`` is leaf i's slice of
+    the (n, P) arena; ``total`` is P.  Frozen and hashable, so plans pass
+    freely through jit closures as statics."""
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    offsets: tuple
+    sizes: tuple
+    total: int
+    uniform_dtype: Optional[Any]
+
+    @staticmethod
+    def for_tree(tree) -> "FlatPlan":
+        """The (cached) plan of ``tree``, whose leaves carry a leading
+        agent axis.  Works on tracers — only shapes/dtypes are read."""
+        leaves, treedef = jax.tree.flatten(tree)
+        return _plan(treedef,
+                     tuple(tuple(l.shape[1:]) for l in leaves),
+                     tuple(jnp.dtype(l.dtype).name for l in leaves))
+
+    @staticmethod
+    def for_proto(proto) -> "FlatPlan":
+        """The plan of a SINGLE-AGENT prototype (no leading agent axis)."""
+        leaves, treedef = jax.tree.flatten(proto)
+        return _plan(treedef,
+                     tuple(tuple(l.shape) for l in leaves),
+                     tuple(jnp.dtype(l.dtype).name for l in leaves))
+
+    @property
+    def arena_dtype(self):
+        """Dtype of the (n, P) arena :meth:`ravel` builds: the uniform
+        leaf dtype when there is one (exchange compression survives),
+        fp32 otherwise (the dense engine contract)."""
+        return (jnp.dtype(self.uniform_dtype) if self.uniform_dtype
+                else jnp.float32)
+
+    def ravel(self, tree, dtype=None):
+        """(pytree with leading n) -> one (n, P) arena (ONE concatenate)."""
+        leaves = jax.tree.leaves(tree)
+        n = leaves[0].shape[0]
+        dt = jnp.dtype(dtype) if dtype is not None else self.arena_dtype
+        return jnp.concatenate(
+            [l.reshape(n, -1).astype(dt) for l in leaves], axis=1)
+
+    def unravel(self, vec):
+        """(P,) -> single-agent pytree (leaf dtypes restored)."""
+        out = [jax.lax.slice(vec, (o,), (o + s,)).reshape(shp).astype(dt)
+               for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, out)
+
+    def unravel_stack(self, arena):
+        """(n, P) -> pytree with leading n (leaf dtypes restored)."""
+        n = arena.shape[0]
+        out = [jax.lax.slice(arena, (0, o), (n, o + s))
+               .reshape((n,) + shp).astype(dt)
+               for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, out)
+
+
+@functools.lru_cache(maxsize=None)
+def _plan(treedef, shapes, dtypes) -> FlatPlan:
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    uniform = dtypes[0] if len(set(dtypes)) == 1 else None
+    return FlatPlan(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes,
+                    total=int(sum(sizes)), uniform_dtype=uniform)
+
+
+__all__ = ["FlatPlan"]

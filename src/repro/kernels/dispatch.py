@@ -30,7 +30,12 @@ import jax
 
 from repro.kernels.coord_stats import coord_stat
 from repro.kernels.masked import masked_coord_stat
-from repro.kernels.ops import _pad_d, kernel_cge, kernel_krum
+from repro.kernels.ops import (_pad_d, kernel_bulyan, kernel_bulyan_masked,
+                               kernel_cge, kernel_cge_masked, kernel_krum,
+                               kernel_krum_masked, kernel_m_krum,
+                               kernel_m_krum_masked, kernel_mda,
+                               kernel_mda_masked, kernel_multi_krum,
+                               kernel_multi_krum_masked)
 
 _INTERPRET = None
 
@@ -74,16 +79,43 @@ def _cge(stack, f, hyper, interpret):
                       interpret=interpret)
 
 
+def _multi_krum(stack, f, hyper, interpret):
+    return kernel_multi_krum(stack, f, m=hyper.get("m", 2),
+                             interpret=interpret)
+
+
+def _m_krum(stack, f, hyper, interpret):
+    return kernel_m_krum(stack, f, m=hyper.get("m", 2), interpret=interpret)
+
+
+def _mda(stack, f, hyper, interpret):
+    return kernel_mda(stack, f, interpret=interpret)
+
+
+def _bulyan(stack, f, hyper, interpret):
+    # only the classic krum base is Gram-derivable; make_spec gates the
+    # pallas impl on hyper, so a non-krum base never reaches this table
+    assert hyper.get("base", "krum") == "krum", hyper
+    return kernel_bulyan(stack, f, interpret=interpret)
+
+
 PALLAS_RULES = {
     "coordinate_median": _median,
     "trimmed_mean": _trimmed_mean,
     "krum": _krum,
     "cge": _cge,
+    "multi_krum": _multi_krum,
+    "m_krum": _m_krum,
+    "mda": _mda,
+    "bulyan": _bulyan,
 }
 
 
 # ---------------------------------------------------------------------------
-# masked / weighted rules: fused mean-imputation variants (async quorums)
+# masked / weighted rules: fused mean-imputation variants (async quorums) —
+# the coordinate statistics impute inside the sort tile, the selection
+# family inside the Gram/application tiles (imputation-free: the imputed
+# (n, d) stack is never materialized anywhere)
 
 
 def _masked_median(stack, mask, wn, f, hyper, interpret):
@@ -99,9 +131,45 @@ def _masked_trimmed_mean(stack, mask, wn, f, hyper, interpret):
                              interpret=interpret)[:d]
 
 
+def _masked_krum(stack, mask, wn, f, hyper, interpret):
+    return kernel_krum_masked(stack, mask, wn, f, interpret=interpret)
+
+
+def _masked_cge(stack, mask, wn, f, hyper, interpret):
+    return kernel_cge_masked(stack, mask, wn, f,
+                             normalize=hyper.get("normalize", True),
+                             interpret=interpret)
+
+
+def _masked_multi_krum(stack, mask, wn, f, hyper, interpret):
+    return kernel_multi_krum_masked(stack, mask, wn, f,
+                                    m=hyper.get("m", 2),
+                                    interpret=interpret)
+
+
+def _masked_m_krum(stack, mask, wn, f, hyper, interpret):
+    return kernel_m_krum_masked(stack, mask, wn, f, m=hyper.get("m", 2),
+                                interpret=interpret)
+
+
+def _masked_mda(stack, mask, wn, f, hyper, interpret):
+    return kernel_mda_masked(stack, mask, wn, f, interpret=interpret)
+
+
+def _masked_bulyan(stack, mask, wn, f, hyper, interpret):
+    assert hyper.get("base", "krum") == "krum", hyper
+    return kernel_bulyan_masked(stack, mask, wn, f, interpret=interpret)
+
+
 PALLAS_MASKED_RULES = {
     "coordinate_median": _masked_median,
     "trimmed_mean": _masked_trimmed_mean,
+    "krum": _masked_krum,
+    "cge": _masked_cge,
+    "multi_krum": _masked_multi_krum,
+    "m_krum": _masked_m_krum,
+    "mda": _masked_mda,
+    "bulyan": _masked_bulyan,
 }
 
 

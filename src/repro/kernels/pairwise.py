@@ -48,3 +48,64 @@ def gram(g, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
     )(g)
+
+
+def imputed_mean(g, wn):
+    """(d,) imputation value of the masked pairwise family: fp32 weighted
+    mean of the arrived rows (wn zero elsewhere), round-tripped through
+    the stack's native dtype — THE one copy of the arithmetic, identical
+    to the tree-level engine's.  Output-sized (d,), so sharing it across
+    the Gram / selection / application kernels keeps the path
+    imputation-free (no (n, d) copy) while computing the mean once."""
+    return jnp.sum(g.astype(jnp.float32) * wn.astype(jnp.float32)[:, None],
+                   axis=0).astype(g.dtype)
+
+
+def _masked_gram_kernel(g_ref, mask_ref, mean_ref, out_ref):
+    """Gram of the MEAN-IMPUTED stack, imputation fused into the tile
+    (the kernels/masked.py trick applied to the pairwise path): absent
+    rows are replaced inside the tile by the precomputed (T,) mean slice,
+    so the (n, d) imputed copy never exists and mask/weights stay traced
+    operands (fault schedules never recompile)."""
+    i = pl.program_id(0)
+    x = g_ref[...]                                   # (n, T) native dtype
+    m = mask_ref[...][0]                             # (n,) f32, 1 = arrived
+    mean = mean_ref[...][0]                          # (T,) native dtype
+    xi = jnp.where(m[:, None] > 0.5, x, mean[None]).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        xi, xi, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (n, n) on the MXU
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_gram(g, mask, wn, mean=None, *, interpret: bool = True):
+    """g: (n, d) any dtype, mask: (n,) {0,1} f32, wn: (n,) f32 normalized
+    weights -> (n, n) fp32 Gram of the mean-imputed stack.  ``mean``: the
+    (d,) :func:`imputed_mean` (computed here when None — pass it in to
+    share one mean across a kernel pipeline).  d must be a multiple of
+    TILE_D (the dispatch layer pads)."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    if mean is None:
+        mean = imputed_mean(g, wn)
+    w = block_d(d, interpret)
+    return pl.pallas_call(
+        _masked_gram_kernel,
+        grid=(d // w,),
+        in_specs=[
+            pl.BlockSpec((n, w), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(g, mask.astype(jnp.float32).reshape(1, n), mean.reshape(1, d))

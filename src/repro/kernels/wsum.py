@@ -1,9 +1,26 @@
-"""Pallas TPU kernel: weighted sum of agent gradients, out = w^T G.
+"""Pallas TPU kernels: the application stage of the selection filters.
 
-The application stage of every weights-decomposable filter (Krum selection,
-CGE mask, CGC clip scales, MDA subset, Draco votes): given per-agent weights
-w (n,), produce sum_i w_i g_i without materializing a gathered copy — fused
-per VMEM tile.
+:func:`weighted_sum` is the classic out = w^T G (Krum's one-hot, CGC clip
+scales, Draco votes): given per-agent weights w (n,), produce sum_i w_i g_i
+without materializing a gathered copy — fused per VMEM tile.
+
+:func:`ordered_apply` replays a selection ORDER (from
+:mod:`repro.kernels.select`): rows are one-hot-extracted and summed in the
+order the rule picked them — ``chain=False`` stacks the k rows and reduces
+(bit-for-bit with the dense reference's ``jnp.mean(g[top_k_idx], axis=0)``
+— the optimization_barrier pins the reduce against reassociation through
+the stack), ``chain=True`` adds them sequentially (bit-for-bit with
+m-Krum's unrolled ``acc = acc + g[i]`` loop).  The one-hot extraction also
+where-zeroes every non-selected row, so a rejected Byzantine row carrying
++-inf/NaN coordinates cannot leak 0*inf = NaN into the aggregate.
+
+:func:`masked_weighted_sum` / :func:`masked_ordered_apply` are the
+imputation-FREE variants: the stack stays native dtype and absent rows
+are never even built — live selections read the raw rows, ghost
+selections contribute the precomputed (d,) imputed mean
+(repro.kernels.pairwise.imputed_mean) — algebraically and bitwise the
+weighted sum over the imputed stack, without the (n, d) copy the
+historical masked path materialized.
 """
 from __future__ import annotations
 
@@ -41,4 +58,178 @@ def weighted_sum(w, g, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
         interpret=interpret,
     )(w.reshape(1, n), g)
+    return out[0]
+
+
+def _masked_wsum_kernel(w_ref, g_ref, mask_ref, mean_ref, out_ref):
+    """Imputation-free w^T over the VIRTUALLY imputed stack: instead of
+    materializing imputed rows even tile-locally, live selected rows are
+    dotted raw (drop-unselected like the plain kernel) and ghost
+    selections contribute their total weight times the precomputed mean —
+    algebraically the same sum, and exactly the selected imputed row's
+    bits for a one-hot w (0-terms are literal zeros, the ghost term is
+    where-gated so 0 * inf cannot leak)."""
+    w = w_ref[...][0].astype(jnp.float32)            # (n,)
+    x = g_ref[...]
+    live = mask_ref[...][0] > 0.5
+    mean = mean_ref[...][0].astype(jnp.float32)      # (T,)
+    w_live = jnp.where(live, w, 0.0)
+    xf = jnp.where((w_live > 0.0)[:, None], x.astype(jnp.float32), 0.0)
+    out = jax.lax.dot_general(
+        w_live[None], xf, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]        # (T,)
+    ghost_w = jnp.sum(jnp.where(live, 0.0, w))
+    out_ref[...] = (out + jnp.where(ghost_w > 0.0, ghost_w * mean,
+                                    0.0))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_weighted_sum(w, g, mask, mean, *, interpret: bool = True):
+    """w: (n,) NON-NEGATIVE selection weights, g: (n, d) native dtype,
+    mean: (d,) imputation value (repro.kernels.pairwise.imputed_mean) ->
+    (d,) fp32 weighted sum over the MEAN-IMPUTED stack (imputation fused
+    per tile; mask/mean traced).  d multiple of TILE_D.
+
+    PRECONDITION: w >= 0 — the 0*inf guards gate rows on w > 0, so a
+    negative weight would be silently dropped, not subtracted (the
+    selection callers pass one-hot / {0,1} sets; signed weight vectors
+    need the plain :func:`weighted_sum` on an imputed stack instead)."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        _masked_wsum_kernel,
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(w.reshape(1, n), g, mask.astype(jnp.float32).reshape(1, n),
+      mean.reshape(1, d))
+    return out[0]
+
+
+def _accumulate_rows(rows, *, chain, div, true_div, exact):
+    """Summation + division stage shared by the ordered applications.
+
+    ``chain`` picks between the dense references' two summation shapes
+    (reduce over a gather vs an unrolled add loop).  ``true_div`` mirrors
+    the reference's DIVISION compilation: XLA strength-reduces division
+    by a compile-time constant into a reciprocal multiply (~1 ulp off for
+    non-power-of-2 divisors).  A ``jnp.mean``-based reference compiles
+    sum+div as one composite and GETS that rewrite — leave the constant
+    visible (true_div=False) so the kernel gets it too; an explicit
+    ``out / m`` reference dispatches a standalone true division — pin the
+    divisor behind a barrier (true_div=True) so the rewrite cannot see
+    the constant."""
+    if chain:
+        acc = jnp.zeros_like(rows[0])
+        for row in rows:
+            acc = acc + row
+        out = acc
+    else:
+        stk = jnp.stack(rows, axis=0)
+        if exact:
+            stk = jax.lax.optimization_barrier(stk)
+        out = jnp.sum(stk, axis=0)
+    if div is not None:
+        den = jnp.float32(div)
+        if true_div and exact:
+            den = jax.lax.optimization_barrier(den)
+        out = out / den
+    return out
+
+
+def _ordered_apply_kernel(ord_ref, g_ref, out_ref, *, k, chain, div,
+                          true_div, exact):
+    order = ord_ref[...][0]                        # (n,) int32
+    x = g_ref[...].astype(jnp.float32)             # (n, T)
+    rows = [jnp.sum(jnp.where((order == r)[:, None], x, 0.0), axis=0)
+            for r in range(k)]
+    out_ref[...] = _accumulate_rows(rows, chain=chain, div=div,
+                                    true_div=true_div, exact=exact)[None]
+
+
+def _masked_ordered_apply_kernel(ord_ref, g_ref, mask_ref, mean_ref,
+                                 out_ref, *, k, chain, div, true_div,
+                                 exact):
+    """Ordered application over the VIRTUALLY imputed stack: each rank is
+    at most one row — a live rank contributes its raw row (exact one-hot
+    extract + literal-zero mean term), a ghost rank contributes exactly
+    the precomputed mean's bits — so no imputed tile is ever built and
+    parity with the impute-then-extract arithmetic is bitwise."""
+    order = ord_ref[...][0]
+    x = g_ref[...].astype(jnp.float32)
+    live = mask_ref[...][0] > 0.5
+    mean = mean_ref[...][0].astype(jnp.float32)
+    rows = []
+    for r in range(k):
+        sel = order == r
+        row = jnp.sum(jnp.where((sel & live)[:, None], x, 0.0), axis=0)
+        ghost = jnp.sum((sel & ~live).astype(jnp.float32)) > 0.0
+        rows.append(row + jnp.where(ghost, mean, 0.0))
+    out_ref[...] = _accumulate_rows(rows, chain=chain, div=div,
+                                    true_div=true_div, exact=exact)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chain", "div", "true_div",
+                                    "interpret"))
+def ordered_apply(order, g, k: int, *, chain: bool = False,
+                  div: float | None = None, true_div: bool = True,
+                  interpret: bool = True):
+    """order: (n,) int32 pick order (sentinel >= k ignored), g: (n, d) ->
+    (d,) fp32: the k picked rows summed in pick order, divided by ``div``
+    (None = no division; ``true_div`` picks the reference's division
+    compilation — see _ordered_accumulate).  d multiple of TILE_D."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        functools.partial(_ordered_apply_kernel, k=k, chain=chain, div=div,
+                          true_div=true_div, exact=interpret),
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(order.reshape(1, n).astype(jnp.int32), g)
+    return out[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chain", "div", "true_div",
+                                    "interpret"))
+def masked_ordered_apply(order, g, mask, mean, k: int, *,
+                         chain: bool = False, div: float | None = None,
+                         true_div: bool = True, interpret: bool = True):
+    """Imputation-fused :func:`ordered_apply`: g stays native dtype and
+    absent rows are imputed inside the tile from the precomputed (d,)
+    ``mean`` (mask/mean are traced operands)."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        functools.partial(_masked_ordered_apply_kernel, k=k, chain=chain,
+                          div=div, true_div=true_div, exact=interpret),
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(order.reshape(1, n).astype(jnp.int32), g,
+      mask.astype(jnp.float32).reshape(1, n), mean.reshape(1, d))
     return out[0]

@@ -118,32 +118,43 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     vpre = jax.vmap(rep_prefill)
     vdec = jax.vmap(rep_decode, in_axes=(0, None, 0))
 
-    def agree(logits_stack):                       # (r, B, V) -> (B,) token
-        count_trace("serving_agree")
-        agg = aggregator.aggregate(logits_stack.astype(jnp.float32))
-        return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+    # zero-copy agreement: a logits stack is already one dense leaf, so
+    # the flat path is a free (r, B*V) reshape into the arena the kernels
+    # consume — no tree plumbing per decode step.  Specs without a flat
+    # path (fused / wrapper / stateful) keep the tree engine.
+    def _flat_agree(spec, logits_stack, mask=None):
+        r, B, V = logits_stack.shape
+        vec = spec.aggregate_flat(
+            logits_stack.astype(jnp.float32).reshape(r, B * V), mask=mask)
+        return vec.reshape(B, V)
 
-    def agree_masked(logits_stack, member):        # member: (r,) bool traced
-        count_trace("serving_agree")
-        agg = aggregator.aggregate(logits_stack.astype(jnp.float32),
-                                   mask=member)
-        return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+    def _agree_of(spec):
+        use_flat = getattr(spec, "flat_capable", False)
+
+        def agree(logits_stack, member=None):      # member: (r,) bool traced
+            count_trace("serving_agree")
+            if use_flat:
+                agg = _flat_agree(spec, logits_stack, mask=member)
+            else:
+                agg = spec.aggregate(logits_stack.astype(jnp.float32),
+                                     mask=member)
+            return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+        return agree
+
+    agree_full = _agree_of(aggregator)
 
     def make_agree_bucket(b: int):
         spec_b = aggregator.respecialize(b)
+        agree_packed = _agree_of(spec_b)
 
         def agree_b(logits_stack, idx, valid):     # idx (b,) i32, valid (b,)
-            count_trace("serving_agree")
-            agg = spec_b.aggregate(logits_stack[idx].astype(jnp.float32),
-                                   mask=valid)
-            return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+            return agree_packed(logits_stack[idx], valid)
         return jax.jit(agree_b) if jit else agree_b
 
     if jit:
         vpre = jax.jit(vpre)
         vdec = jax.jit(vdec)
-        agree = jax.jit(agree)
-        agree_masked = jax.jit(agree_masked)
+        agree_full = jax.jit(agree_full)
 
     el = getattr(aggregator, "elastic_n", None)   # wrapper chains delegate
     r = jax.tree.leaves(params_stack)[0].shape[0]
@@ -155,13 +166,13 @@ def generate_replicated(cfg, params_stack, prompt_batch,
 
     def agree_step(step, logits):
         if roster is None:
-            return agree(logits)
+            return agree_full(logits)
         member = np.asarray(roster[min(step, len(roster) - 1)], bool)
         live = np.flatnonzero(member)
         if len(live) == 0:
             raise ValueError(f"roster at step {step} has no live replicas")
         if el is None:
-            return agree_masked(logits, jnp.asarray(member))
+            return agree_full(logits, jnp.asarray(member))
         b, idx, valid = el.pack(live)
         if b not in bucket_agree:
             bucket_agree[b] = make_agree_bucket(b)

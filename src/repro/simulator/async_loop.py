@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.core.aggregators import tree_where_agents
+from repro.core.flat import FlatPlan
 from repro.core.tracecount import count_trace
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
@@ -150,6 +151,11 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             "draco_r/coded_fallback_r are not supported with elastic "
             "membership buckets")
     stateful = spec.stateful
+    # zero-copy flat pipeline: dense-stack impls ravel the delivered
+    # gradients ONCE per step into an (n, P) arena at the communication
+    # boundary and unravel once at optimizer-apply; the coded paths stay
+    # on trees (the repetition code votes leaf-wise over groups)
+    use_flat = (spec.flat_capable and bz.draco_r == 0 and fallback_r == 0)
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
@@ -179,10 +185,27 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), sent)
 
         mask = contrib_w > 0.0
+        plan = FlatPlan.for_tree(sent)
         if bz.draco_r > 0:
             # coded regime: the repetition code already handles partial
             # delivery (vote among delivered group members)
             agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask)
+        elif use_flat and plan.uniform_dtype is not None:
+            # ONE ravel into the (n, P) arena at the communication
+            # boundary; the quorum mask and staleness discounts enter the
+            # masked kernels as traced operands and the single unravel
+            # happens below, at optimizer-apply.  Mixed-dtype trees keep
+            # the tree path: a fp32 arena would impute masked rows
+            # without each leaf's native rounding (not bitwise).
+            arena = plan.ravel(sent)
+            if bucket is not None:
+                w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
+                vec = spec.aggregate_flat(arena[roster_idx],
+                                          mask=w_b > 0.0, weights=w_b)
+            else:
+                vec = spec.aggregate_flat(arena, mask=mask,
+                                          weights=contrib_w)
+            agg = plan.unravel(vec)
         elif bucket is not None:
             # elastic membership: pack the live rows into the bucket's
             # fixed-shape stack; pad slots (repeated live rows) are masked
@@ -282,11 +305,16 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     # step, so they always run the general path; the synchronous train
     # step stays the stateless fast path
     step_fn = None if stateful else make_train_step(cfg, bz, optimizer)
+    # donate the in-flight gradient buffer (the step returns its updated
+    # twin): on accelerator backends the buffer-sized HBM block is reused
+    # in place — the flat pipeline's "donated arena"; CPU ignores
+    # donation, so skip it there to keep logs clean
+    donate = () if jax.default_backend() == "cpu" else (3,)
     async_fn = make_async_step(cfg, bz, optimizer,
                                fallback_r=sim.coded_fallback_r)
     if jit:
         step_fn = jax.jit(step_fn) if step_fn is not None else None
-        async_fn = jax.jit(async_fn)
+        async_fn = jax.jit(async_fn, donate_argnums=donate)
 
     # elastic membership: one step function per roster BUCKET (built
     # lazily, compiled at most len(el.buckets) times over the whole run —
@@ -297,7 +325,8 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     def bucket_fn(b: int):
         if b not in bucket_fns:
             fn = make_async_step(cfg, bz, optimizer, bucket=b)
-            bucket_fns[b] = jax.jit(fn) if jit else fn
+            bucket_fns[b] = (jax.jit(fn, donate_argnums=donate) if jit
+                             else fn)
         return bucket_fns[b]
     byz_mask = make_byzantine_mask(n, bz.f)
     agg_state = (spec.init_state(jax.tree.map(

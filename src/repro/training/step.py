@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.aggregators import AggregatorSpec, make_spec
 from repro.core.attacks import get_attack, make_byzantine_mask
+from repro.core.flat import FlatPlan
 from repro.core.momentum import worker_momentum
 from repro.core.tracecount import count_trace
 from repro.core.redundancy.coding import tree_draco_aggregate
@@ -181,6 +182,12 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
     if bz.group_size > 1:
         k = bz.n_agents // bz.group_size
         spec = spec.with_f_capped(max((k - 1) // 2, 0))
+    # zero-copy flat pipeline: dense-stack impls ravel the gradients ONCE
+    # into an (n, P) arena right after the communication boundary and
+    # unravel ONCE at optimizer-apply — the aggregation dispatch never
+    # touches a pytree.  reshard stays on the tree path: its whole point
+    # is a leaf-wise sharding constraint the flattening would erase.
+    use_flat = spec.flat_capable and bz.draco_r == 0 and not bz.reshard
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
@@ -219,8 +226,24 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
         if bz.reshard and mesh_sizes:
             grads = jax.lax.with_sharding_constraint(
                 grads, _reshard_specs(grads, mesh_sizes))
+        plan = FlatPlan.for_tree(grads)
         if bz.draco_r > 0:
             agg = tree_draco_aggregate(grads, bz.draco_r)
+        elif use_flat and plan.uniform_dtype is not None:
+            # zero-copy: ONE ravel into the (n, P) arena here, the
+            # aggregation runs on the arena, and the single unravel below
+            # happens at optimizer-apply — plan offsets are precomputed
+            # (FlatPlan is cached per tree structure), so the dispatch
+            # itself moves no model-sized memory.  Mixed-dtype trees keep
+            # the tree path: flattening them would impute masked rows at
+            # fp32 instead of each leaf's native rounding (not bitwise).
+            arena = plan.ravel(grads)
+            if bucket is not None:
+                vec = spec.aggregate_flat(arena[roster_idx],
+                                          mask=roster_valid)
+            else:
+                vec = spec.aggregate_flat(arena)
+            agg = plan.unravel(vec)
         elif bucket is not None:
             # elastic membership: the rule sees only the live roster,
             # packed into the bucket's fixed-shape stack (pad slots are
