@@ -164,10 +164,12 @@ def main(out: str = "BENCH_async.json", steps: int = 40):
     results = {name: bench_profile(name, sim, steps, aggregator=agg)
                for name, sim, agg in runs}
     results["churn"] = churn_series(steps)
+    from repro.obs.provenance import provenance
+    results["provenance"] = provenance()
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     for name, r in results.items():
-        if name == "churn":
+        if name in ("churn", "provenance"):
             continue
         print(f"{name:12s} {r['steps_per_sec']:8.2f} steps/s  "
               f"vtime/step {r['virtual_time_per_step']:6.2f}  "

@@ -228,7 +228,9 @@ def main(out: str = "BENCH_filters.json", full: bool = False,
     masked = masked_comparison(ns=ns, ds=ds,
                                iters=iters if smoke else max(iters, 20),
                                extra_points=extra)
+    from repro.obs.provenance import provenance
     payload = {"bench": "filters_impl_comparison",
+               "provenance": provenance(),
                "unit": "us_per_call",
                "impls": list(IMPLS),
                "rules": comp,

@@ -18,12 +18,22 @@ SAME fault schedule (same seed -> identical latency samples):
                    descent-direction EMA is threaded through the jitted
                    step) additionally screens what the quorum delivers.
 
-Run:  PYTHONPATH=src python examples/async_stragglers.py
+The last run records a flight-recorder trace (repro.obs): the JSONL +
+Chrome-trace/Perfetto exports land next to this script (or under
+``--trace-dir``) and the per-agent suspicion report is pretty-printed —
+the two Pareto stragglers surface at the top of the table.
+
+Run:  PYTHONPATH=src python examples/async_stragglers.py [--trace-dir DIR]
 """
+import argparse
+import os
+
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.aggregators import make_spec
+from repro.obs import Recorder
+from repro.obs.report import render_report
 from repro.data import SyntheticLM
 from repro.optim import adamw, constant
 from repro.simulator import SimConfig, Straggler, async_train_loop
@@ -55,16 +65,36 @@ RUNS = {
         sim=SimConfig(faults=FAULTS, quorum=6, max_staleness=3, seed=0)),
 }
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-dir", default=os.path.dirname(__file__) or ".",
+                help="where the recorded trace JSONL/Perfetto land")
+args = ap.parse_args()
+
 print(f"{'strategy':32s} {'final loss':>10s} {'virtual time':>13s} "
       f"{'mean staleness':>15s}")
+last_name = list(RUNS)[-1]
+os.makedirs(args.trace_dir, exist_ok=True)
+trace_path = os.path.join(args.trace_dir, "async_stragglers_trace.jsonl")
 for name, kw in RUNS.items():
+    recorder = None
+    if name == last_name:                  # flight-record the final run
+        recorder = Recorder(trace_path, meta={"example": "async_stragglers",
+                                              "strategy": name})
     _, hist = async_train_loop(cfg, kw["bz"], adamw(constant(3e-3)),
                                kw["ds"], STEPS, sim=kw["sim"],
-                               log_every=STEPS, log_fn=lambda *_: None)
+                               log_every=STEPS, log_fn=lambda *_: None,
+                               recorder=recorder)
     last = hist[-1]
     stal = float(jnp.mean(jnp.asarray([m["staleness_mean"] for m in hist])))
     print(f"{name:32s} {last['loss']:10.4f} {last['vclock']:13.1f} "
           f"{stal:15.2f}")
+    if recorder is not None:
+        perfetto = recorder.dump_chrome_trace(
+            os.path.join(args.trace_dir, "async_stragglers_trace.json"))
+        recorder.close()
+        print(f"\nflight-recorder trace -> {trace_path}"
+              f"\nperfetto export       -> {perfetto}\n")
+        print(render_report(recorder.events))
 
 print("\nsame loss target, but the async strategies finish in a fraction of "
       "the barrier's virtual time; coding additionally recovers the exact "

@@ -26,31 +26,43 @@ through ``**hyper``.  This module replaces all of that with one object:
     available kernel and proven against the gather path by
     tests/test_kernels_parity.py.
 
-Registered rules — capabilities, available impls, masked kernels, elastic
-    ==================  =========================  ==================  ======  =======
-    rule                caps                       impls               m-pls   elastic
-    ==================  =========================  ==================  ======  =======
-    mean                weight_decomposable        fused, gather       --      yes
-    krum                weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
-    multi_krum          weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
-    m_krum              weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)
-    mda                 weight_decomp, pairwise    fused, gather, pls  yes     yes (subset tables)
-    cge                 weight_decomp, pairwise    fused, gather, pls  yes     yes (keep counts)
-    cgc                 weight_decomposable        fused, gather       --      yes
-    zeno                weight_decomp, stateful    fused, gather       --      yes (state n-free)
-    zeno_pp             weight_decomp, stateful    custom (fused)      --      yes (state n-free)
-    coordinate_median   coordwise                  fused, gather, pls  yes     yes
-    trimmed_mean        coordwise                  fused, gather, pls  yes     yes (trim counts)
-    phocas              coordwise                  fused, gather       --      yes
-    mean_around_median  coordwise                  fused, gather       --      yes
-    geometric_median    iterative                  fused, gather       --      yes
-    rfa                 iterative                  fused, gather       --      yes
-    median_of_means     iterative                  fused, gather       --      yes (group counts)
-    bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)
-    clipped             wrapper                    delegates to inner  --      via inner
-    bucketed            wrapper                    delegates to inner  --      via inner
-    staleness_disc.     wrapper                    delegates to inner  --      via inner
-    ==================  =========================  ==================  ======  =======
+Registered rules — capabilities, impls, masked kernels, elastic, telemetry
+    ==================  =========================  ==================  ======  ==================  =========
+    rule                caps                       impls               m-pls   elastic             telemetry
+    ==================  =========================  ==================  ======  ==================  =========
+    mean                weight_decomposable        fused, gather       --      yes                 exact w
+    krum                weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
+    multi_krum          weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
+    m_krum              weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
+    mda                 weight_decomp, pairwise    fused, gather, pls  yes     yes (subset tables) exact w
+    cge                 weight_decomp, pairwise    fused, gather, pls  yes     yes (keep counts)   exact w
+    cgc                 weight_decomposable        fused, gather       --      yes                 exact w
+    zeno                weight_decomp, stateful    fused, gather       --      yes (state n-free)  exact w
+    zeno_pp             weight_decomp, stateful    custom (fused)      --      yes (state n-free)  exact w
+    coordinate_median   coordwise                  fused, gather, pls  yes     yes                 particip.
+    trimmed_mean        coordwise                  fused, gather, pls  yes     yes (trim counts)   particip.
+    phocas              coordwise                  fused, gather       --      yes                 particip.
+    mean_around_median  coordwise                  fused, gather       --      yes                 particip.
+    geometric_median    iterative                  fused, gather       --      yes                 particip.
+    rfa                 iterative                  fused, gather       --      yes                 particip.
+    median_of_means     iterative                  fused, gather       --      yes                 particip.
+    bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)    theta sel
+    clipped             wrapper                    delegates to inner  --      via inner           via inner
+    bucketed            wrapper                    delegates to inner  --      via inner           particip.
+    staleness_disc.     wrapper                    delegates to inner  --      via inner           via inner
+    ==================  =========================  ==================  ======  ==================  =========
+
+    ``telemetry`` (:meth:`AggregatorSpec.selection_weights`, consumed by
+    :mod:`repro.obs`): *exact w* — the rule's own (n,) application
+    weights (synchronous fused path reconstructs the aggregate exactly
+    via ``tree_weighted_sum``); *theta sel* — bulyan's krum-stage
+    selection, 1/theta on chosen rows; *particip.* — normalized delivery
+    weights (every arrived row enters the order statistics); *via
+    inner* — the wrapper applies its row transform, then reads the inner
+    rule's telemetry.  ``spec.aggregate_with_telemetry`` /
+    ``aggregate_flat_with_telemetry`` bundle the aggregate with the
+    fixed-shape ``{sel_w, mask, contrib_w}`` struct the flight recorder
+    accumulates into per-agent suspicion scores.
 
     ``elastic``: every rule supports elastic-n specs — build with
     ``make_spec(name, n=elastic(n_max, buckets=...), f=frac(0.2))`` and
@@ -702,6 +714,61 @@ class AggregatorSpec:
             mask = jnp.ones((stack.shape[0],), bool)
         return _flat_masked_vec(self, d, stack, mask, weights, state)
 
+    # -- aggregation telemetry (repro.obs) --------------------------------
+    def selection_weights(self, grads, mask=None, weights=None, state=None):
+        """(n,) fp32 per-agent selection/application weights — the
+        telemetry signal every detection-based defense starts from.
+
+        For weight-decomposable rules these are the rule's OWN application
+        weights (synchronous fused path: ``aggregate(grads) ==
+        tree_weighted_sum(grads, selection_weights(grads))`` exactly;
+        masked paths: the weights over the imputed stack, matching the
+        engine's masked law for the spec's impl).  Bulyan reports its
+        theta-selection (1/theta on chosen rows); coordinate-wise and
+        iterative rules report *participation* weights (the normalized
+        delivery weights — every arrived row enters the order statistics);
+        wrappers transform and recurse.  ``grads`` may be a pytree or a
+        bare (n, P) arena stack (the flat pipeline's view).
+
+        Fixed shape, no data-dependent control flow: safe to emit as an
+        aux output of a jitted step without changing the compile budget.
+        """
+        d = get_aggregator_def(self.name)
+        if self.stateful and state is None:
+            raise ValueError(
+                f"{self.describe()} is stateful: pass "
+                "state=spec.init_state(proto), as for aggregate()")
+        return _selection_weights(self, d, grads, mask, weights, state)
+
+    def aggregate_with_telemetry(self, grads, mask=None, weights=None,
+                                 state=None):
+        """:meth:`aggregate` plus the fixed-shape telemetry struct:
+        ``(agg, {"sel_w": (n,) f32, "mask": (n,) bool, "contrib_w":
+        (n,) f32})``.  The aggregate is computed by the SAME engine call
+        as :meth:`aggregate` — bit-for-bit identical output; the aux
+        struct adds only (n,)-sized work, so emitting it from a jitted
+        step changes neither results nor the compile budget."""
+        agg = self.aggregate(grads, mask=mask, weights=weights, state=state)
+        return agg, self._telemetry(grads, mask, weights, state)
+
+    def aggregate_flat_with_telemetry(self, stack, mask=None, weights=None,
+                                      state=None):
+        """:meth:`aggregate_flat` plus the telemetry struct (see
+        :meth:`aggregate_with_telemetry`)."""
+        vec = self.aggregate_flat(stack, mask=mask, weights=weights,
+                                  state=state)
+        return vec, self._telemetry(stack, mask, weights, state)
+
+    def _telemetry(self, grads, mask, weights, state):
+        n = _n_agents(grads)
+        m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+        cw = (m.astype(jnp.float32) if weights is None
+              else weights.astype(jnp.float32) * m.astype(jnp.float32))
+        sel = self.selection_weights(grads, mask=mask, weights=weights,
+                                     state=state)
+        return {"sel_w": sel.astype(jnp.float32), "mask": m,
+                "contrib_w": cw}
+
 
 @functools.lru_cache(maxsize=None)
 def _respecialize(spec: AggregatorSpec, n_live: int) -> AggregatorSpec:
@@ -1058,6 +1125,106 @@ def _flat_masked_vec(spec, d, stack, mask, weights, state):
 
 
 # ---------------------------------------------------------------------------
+# engine: selection-weight telemetry (repro.obs) — one (n,) read-out per
+# rule class, mirroring the aggregate laws above.  Everything is fixed
+# shape with no data-dependent control flow, so the loops can emit it as an
+# aux output of a jitted step without touching the compile budget; the
+# aggregate itself is NEVER computed through this path, so telemetry can't
+# perturb results.
+
+
+def _participation(grads, mask, weights):
+    """Normalized delivery weights — the telemetry read-out for rules
+    without a per-row application decomposition (coordinate-wise and
+    iterative rules: every arrived row enters the order statistics)."""
+    n = _n_agents(grads)
+    if mask is None and weights is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    m = jnp.ones((n,), bool) if mask is None else mask
+    _, w, _, tot = _masked_prelude(grads, m, weights)
+    return w / tot
+
+
+def _selection_weights(spec, d, grads, mask, weights, state):
+    name = spec.name
+    # wrappers: apply the same row transform the aggregate path applies,
+    # then read the inner rule's selection
+    if d.is_wrapper:
+        inner_state = _inner_state(spec, state)
+        if name == "clipped":
+            tau = spec.hp("tau", 1.0)
+            norms = jnp.sqrt(jnp.maximum(tree_sqnorms(grads), 1e-30))
+            scale = jnp.minimum(1.0, tau / norms)
+            clipped_g = jax.tree.map(
+                lambda l: (l.astype(jnp.float32)
+                           * scale.reshape((-1,) + (1,) * (l.ndim - 1))
+                           ).astype(l.dtype), grads)
+            return spec.inner.selection_weights(
+                clipped_g, mask=mask, weights=weights, state=inner_state)
+        if name == "staleness_discounted":
+            s = (jnp.zeros((_n_agents(grads),), jnp.float32)
+                 if weights is None else weights.astype(jnp.float32))
+            w = staleness_discount_table(s, spec.hp("weighting", "poly"),
+                                         spec.hp("power", 1.0),
+                                         spec.hp("gamma", 0.7))
+            return spec.inner.selection_weights(
+                grads, mask=mask, weights=w, state=inner_state)
+        # bucketed (and any future group-transform wrapper): rows enter
+        # through their group means — per-agent attribution is uniform
+        return _participation(grads, mask, weights)
+    if name == "zeno_pp":
+        # the custom path's own weights (normalized over accepted rows)
+        return _zeno_pp_weights(spec, grads, mask, weights, state)
+    if name == "bulyan":
+        if spec.hp("base", "krum") != "krum":
+            return _participation(grads, mask, weights)
+        n, f = _n_agents(grads), spec.f
+        theta = n - 2 * f
+        if mask is None and weights is None:
+            d2 = _gram_to_d2(tree_gram(grads))
+        else:
+            m = (jnp.ones((n,), bool) if mask is None
+                 else mask.astype(bool))
+            m, w, _, tot = _masked_prelude(grads, m, weights)
+            mean_sel = tree_weighted_sum(grads, w / tot)
+            imputed = tree_where_agents(
+                m, grads,
+                jax.tree.map(lambda mn, l: jnp.broadcast_to(
+                    mn.astype(l.dtype)[None], l.shape), mean_sel, grads))
+            d2 = _gram_to_d2(tree_gram(imputed))
+        sel = _bulyan_theta_select(d2, n, f, theta)
+        return sel.astype(jnp.float32) / theta
+    if d.weights_fn is None:
+        return _participation(grads, mask, weights)
+    # weight-decomposable rules: the rule's own application weights
+    if mask is None and weights is None:
+        return d.weights_fn(spec, grads, state)
+    n = _n_agents(grads)
+    m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    if name == "mean":
+        # exact: the masked mean applies w/tot directly (no imputation)
+        _, w, _, tot = _masked_prelude(grads, m, weights)
+        return w / tot
+    m, w, cnt, tot = _masked_prelude(grads, m, weights)
+    mean_sel = tree_weighted_sum(grads, w / tot)
+    imputed = tree_where_agents(
+        m, grads,
+        jax.tree.map(lambda mn, l: jnp.broadcast_to(
+            mn.astype(l.dtype)[None], l.shape), mean_sel, grads))
+    rule_w = d.weights_fn(spec, imputed, state)
+    if spec.impl == "fused":
+        # the fused masked law's exact decomposition (see
+        # _masked_aggregate): agg == wsum(imputed, fw) bit-for-bit
+        row_w = jnp.where(m, w, tot / cnt)
+        fw = rule_w * row_w
+        return fw * (jnp.sum(rule_w) / jnp.maximum(jnp.sum(fw), 1e-30))
+    # gather / pallas masked law: rule weights over the imputed stack
+    # (the aggregate additionally scales by tot/cnt — a global factor
+    # that does not change per-agent shares)
+    return rule_w
+
+
+# ---------------------------------------------------------------------------
 # fused per-rule implementations (ported verbatim from the legacy module)
 
 
@@ -1279,15 +1446,12 @@ def _t_median_of_means(spec, grads, state):
                                 num_groups=spec.hp("num_groups"))
 
 
-def tree_bulyan(grads, f):
-    """Bulyan on trees: krum-based selection from the Gram matrix, then
-    leaf-wise coordinate stage with a global selection mask."""
-    n = _n_agents(grads)
-    theta = n - 2 * f
-    d2 = _gram_to_d2(tree_gram(grads))
-    # unrolled with a shrinking neighbour count (see D.krum_scores) so all
-    # theta selections are genuine — the scan version collapsed to index
-    # order after f + 2 picks
+def _bulyan_theta_select(d2, n, f, theta):
+    """Bulyan's krum-based selection stage: (n,) bool mask of the theta
+    rows picked.  Unrolled with a shrinking neighbour count (see
+    D.krum_scores) so all theta selections are genuine — the scan version
+    collapsed to index order after f + 2 picks.  Shared by the aggregate
+    path and :meth:`AggregatorSpec.selection_weights` telemetry."""
     mask = jnp.ones((n,), bool)
     sel = jnp.zeros((n,), bool)
     for it in range(theta):
@@ -1295,6 +1459,16 @@ def tree_bulyan(grads, f):
         i = D.argmin_tiebreak(s, D.masked_row_sums(d2, mask))
         mask = mask.at[i].set(False)
         sel = sel.at[i].set(True)
+    return sel
+
+
+def tree_bulyan(grads, f):
+    """Bulyan on trees: krum-based selection from the Gram matrix, then
+    leaf-wise coordinate stage with a global selection mask."""
+    n = _n_agents(grads)
+    theta = n - 2 * f
+    d2 = _gram_to_d2(tree_gram(grads))
+    sel = _bulyan_theta_select(d2, n, f, theta)
 
     beta = max(theta - 2 * f, 1)
 

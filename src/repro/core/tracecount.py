@@ -1,38 +1,14 @@
-"""Trace-count bookkeeping for compile-regression tests.
-
-``count_trace(site)`` is called from inside jit-traced step functions (the
-async/sync training steps, the serving agreement step).  Python side
-effects run once per TRACE, never per execution, so the counter increments
-exactly when XLA (re)compiles that site — the same trick the kernel-parity
-suite uses locally, promoted to a library hook so the membership-retrace
-suite can assert compile bounds on the REAL loops: membership churn over a
-bucketed elastic spec must cost at most ``len(buckets)`` compilations per
-loop, ever (tests/test_membership_retrace.py).
-
-Zero runtime cost on the compiled path; counters are process-global and
-monotonic — tests snapshot before/after rather than resetting blindly.
+"""Backward-compat shim — the trace-count bookkeeping moved to
+:mod:`repro.obs.counters` (PR 6), which adds the public
+``snapshot()``/``reset()``/gauge API the flight recorder builds its
+recompile ledger on.  ``TRACE_COUNTS`` here IS the same Counter object as
+``repro.obs.counters.COUNTERS``, so existing snapshot-diff tests keep
+working unchanged.  New code should import from ``repro.obs.counters``.
 """
 from __future__ import annotations
 
-from collections import Counter
+from repro.obs.counters import (TRACE_COUNTS, count_trace, reset,
+                                reset_traces, snapshot, trace_count)
 
-TRACE_COUNTS: Counter = Counter()
-
-
-def count_trace(site: str) -> None:
-    """Record one tracing of ``site`` (call from INSIDE the traced fn)."""
-    TRACE_COUNTS[site] += 1
-
-
-def trace_count(site: str) -> int:
-    return TRACE_COUNTS[site]
-
-
-def reset_traces(site: str | None = None) -> None:
-    if site is None:
-        TRACE_COUNTS.clear()
-    else:
-        TRACE_COUNTS.pop(site, None)
-
-
-__all__ = ["TRACE_COUNTS", "count_trace", "trace_count", "reset_traces"]
+__all__ = ["TRACE_COUNTS", "count_trace", "trace_count", "reset_traces",
+           "snapshot", "reset"]

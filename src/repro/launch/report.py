@@ -1,0 +1,38 @@
+"""Render a flight-recorder trace:  python -m repro.launch.report trace.jsonl
+
+Prints the per-agent suspicion table, staleness/quorum percentiles,
+recompile ledger and rule-dispatch breakdown of a recorded run
+(``train_loop(..., recorder=...)``, ``async_train_loop``,
+``generate_replicated``, or ``launch.train --record``).  ``--perfetto``
+additionally exports the Chrome-trace JSON that ``chrome://tracing`` /
+ui.perfetto.dev load."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.report",
+        description="Render a repro.obs flight-recorder trace (JSONL).")
+    ap.add_argument("trace", help="trace JSONL written by a Recorder")
+    ap.add_argument("--top", type=int, default=None,
+                    help="only the TOP most-suspicious agents")
+    ap.add_argument("--perfetto", default=None, metavar="OUT_JSON",
+                    help="also export a Chrome-trace/Perfetto JSON")
+    args = ap.parse_args(argv)
+
+    from repro.obs.recorder import chrome_trace, read_trace
+    from repro.obs.report import render_report
+
+    events = read_trace(args.trace)
+    print(render_report(events, top=args.top))
+    if args.perfetto:
+        with open(args.perfetto, "w") as fh:
+            json.dump(chrome_trace(events), fh)
+        print(f"\nperfetto trace written to {args.perfetto}")
+
+
+if __name__ == "__main__":
+    main()

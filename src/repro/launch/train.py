@@ -38,6 +38,12 @@ def main():
     ap.add_argument("--per-agent-batch", type=int, default=4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--record", default=None, metavar="TRACE_JSONL",
+                    help="write a flight-recorder trace (repro.obs) here; "
+                    "render it with `python -m repro.launch.report`")
+    ap.add_argument("--perfetto", default=None, metavar="TRACE_JSON",
+                    help="with --record: also export a Chrome-trace/"
+                    "Perfetto JSON of the run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -69,11 +75,23 @@ def main():
         attack=args.attack, attack_hyper=ah,
         momentum_alpha=args.momentum_alpha, draco_r=args.draco_r)
 
+    recorder = None
+    if args.record:
+        from repro.obs import Recorder
+        recorder = Recorder(args.record, meta={"cli": "launch.train",
+                                               "arch": args.arch})
+
     params, history = train_loop(
         cfg, bz, opt, ds, steps=args.steps, seed=args.seed,
         ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 2, 1),
-        poison_labels=args.poison_labels)
+        poison_labels=args.poison_labels, recorder=recorder)
 
+    if recorder is not None:
+        recorder.close()
+        print(f"trace written to {args.record}")
+        if args.perfetto:
+            print(f"perfetto trace written to "
+                  f"{recorder.dump_chrome_trace(args.perfetto)}")
     if args.history_out:
         with open(args.history_out, "w") as fh:
             json.dump(history, fh, indent=1)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tracecount import count_trace
+from repro.obs.counters import count_trace
 from repro.models import decode_step, init_cache, prefill
 
 
@@ -68,7 +68,8 @@ def generate(cfg, params, prompt_batch, max_new_tokens: int,
 def generate_replicated(cfg, params_stack, prompt_batch,
                         max_new_tokens: int, aggregator,
                         seq_capacity: int | None = None, jit: bool = True,
-                        fault_hook=None, roster=None):
+                        fault_hook=None, roster=None, recorder=None,
+                        telemetry: bool | None = None):
     """Byzantine-fault-tolerant greedy decoding over r model replicas.
 
     ``params_stack``: params pytree with a leading replica axis (r, ...) —
@@ -101,12 +102,21 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     live replica count, costing at most ``len(buckets)`` agreement
     compilations per call.
 
+    ``recorder``/``telemetry``: flight-recorder hooks (see
+    :mod:`repro.obs`).  With a recorder attached (or ``telemetry=True``)
+    the agreement step additionally emits the aggregator's (r,) selection
+    weights over replicas as a fixed-shape aux output, and every decode
+    step is logged as a recorder event (step 0 = prefill).  Telemetry off
+    keeps the EXACT historical agreement jaxpr; recording runs on host
+    between steps — the token stream is bit-identical either way.
+
     Returns (B, max_new_tokens) int32, identical to :func:`generate` on the
     clean params when <= f replicas are corrupted at every step and the
     rule tolerates f.
     """
     B, T = prompt_batch["tokens"].shape
     cap = seq_capacity or (T + max_new_tokens)
+    telemetry = (recorder is not None) if telemetry is None else telemetry
 
     def rep_prefill(p):
         cache = init_cache(cfg, p, B, cap, prompt_batch)
@@ -138,7 +148,16 @@ def generate_replicated(cfg, params_stack, prompt_batch,
             else:
                 agg = spec.aggregate(logits_stack.astype(jnp.float32),
                                      mask=member)
-            return jnp.argmax(agg, axis=-1).astype(jnp.int32)
+            tok = jnp.argmax(agg, axis=-1).astype(jnp.int32)
+            if not telemetry:                      # static: same jaxpr as
+                return tok                         # the pre-obs engine
+            rr = logits_stack.shape[0]
+            fstack = logits_stack.astype(jnp.float32).reshape(rr, -1)
+            sel = spec.selection_weights(fstack, mask=member)
+            m = (jnp.ones((rr,), bool) if member is None
+                 else member.astype(bool))
+            return tok, {"sel_w": sel.astype(jnp.float32), "mask": m,
+                         "contrib_w": m.astype(jnp.float32)}
         return agree
 
     agree_full = _agree_of(aggregator)
@@ -148,7 +167,16 @@ def generate_replicated(cfg, params_stack, prompt_batch,
         agree_packed = _agree_of(spec_b)
 
         def agree_b(logits_stack, idx, valid):     # idx (b,) i32, valid (b,)
-            return agree_packed(logits_stack[idx], valid)
+            out = agree_packed(logits_stack[idx], valid)
+            if not telemetry:
+                return out
+            tok, t = out                           # scatter back to (r,)
+            rr = logits_stack.shape[0]
+            sel = jnp.zeros((rr,), jnp.float32).at[idx].add(
+                jnp.where(valid, t["sel_w"], 0.0))
+            m = jnp.zeros((rr,), bool).at[idx].max(valid)
+            return tok, {"sel_w": sel, "mask": m,
+                         "contrib_w": m.astype(jnp.float32)}
         return jax.jit(agree_b) if jit else agree_b
 
     if jit:
@@ -163,6 +191,11 @@ def generate_replicated(cfg, params_stack, prompt_batch,
             f"elastic aggregator {aggregator.describe()} was built for "
             f"n_max={el.n_max} but params_stack has {r} replicas")
     bucket_agree: dict = {}
+    if recorder is not None:
+        from repro.obs.telemetry import dispatch_record
+        recorder.emit("run", engine="generate_replicated", replicas=r,
+                      max_new_tokens=max_new_tokens,
+                      dispatch=dispatch_record(aggregator))
 
     def agree_step(step, logits):
         if roster is None:
@@ -179,15 +212,26 @@ def generate_replicated(cfg, params_stack, prompt_batch,
         return bucket_agree[b](logits, jnp.asarray(idx),
                                jnp.asarray(valid))
 
+    def agreed(step, logits):
+        st0 = recorder.now() if recorder is not None else None
+        out = agree_step(step, logits)
+        token, telem = out if telemetry else (out, None)
+        if recorder is not None:
+            recorder.step(step, t0=st0, t1=recorder.now(),
+                          telemetry=telem,
+                          roster=(roster[min(step, len(roster) - 1)]
+                                  if roster is not None else None))
+        return token
+
     logits, caches = vpre(params_stack)
     if fault_hook is not None:
         logits = fault_hook(0, logits)
-    token = agree_step(0, logits)[:, None]
+    token = agreed(0, logits)[:, None]
     out = [token]
     for step in range(1, max_new_tokens):
         logits, caches = vdec(params_stack, token, caches)
         if fault_hook is not None:
             logits = fault_hook(step, logits)
-        token = agree_step(step, logits)[:, None]
+        token = agreed(step, logits)[:, None]
         out.append(token)
     return jnp.concatenate(out, axis=1)

@@ -56,7 +56,7 @@ import numpy as np
 from repro.checkpoint import save
 from repro.core.aggregators import tree_where_agents
 from repro.core.flat import FlatPlan
-from repro.core.tracecount import count_trace
+from repro.obs.counters import count_trace
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
 from repro.core.redundancy.coding import tree_draco_aggregate
@@ -106,10 +106,18 @@ def plan_arrivals(sim: SimConfig, n_agents: int, steps: int) -> AsyncTrace:
 
 
 def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
-                    bucket: int | None = None):
+                    bucket: int | None = None, telemetry: bool = False):
     """Returns async_step(params, opt_state, momentum, buffer, agg_state,
     batch, key, refresh, contrib_w, use_coded[, roster_idx, roster_valid])
     -> (params, opt_state, momentum, buffer, agg_state, metrics).
+
+    ``telemetry`` (static Python flag): metrics additionally carry a
+    fixed-shape ``"telemetry"`` struct — the aggregator's (n,) selection
+    weights, delivery mask and contribution weights
+    (``spec.selection_weights``, see :mod:`repro.obs`).  ``False`` emits
+    the EXACT historical jaxpr; ``True`` adds only (n,)-sized aux
+    outputs — bit-identical results and the same elastic-bucket compile
+    budget either way.
 
     ``refresh``   (n,) bool  — agents computing a fresh gradient this step;
     ``contrib_w`` (n,) f32   — staleness-discounted delivery weights
@@ -223,6 +231,38 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                 agg = jax.tree.map(
                     lambda a, c: jnp.where(use_coded, c.astype(a.dtype), a),
                     agg, coded)
+        telem = None
+        if telemetry:
+            # fixed-shape (n,) aux outputs, computed OUTSIDE the aggregate
+            # call (the update above is untouched — results stay
+            # bit-identical) and BEFORE the state transition (the rule
+            # selected against the pre-step state)
+            n = bz.n_agents
+            st = agg_state if stateful else None
+            mf = mask.astype(jnp.float32)
+            particip = mf / jnp.maximum(jnp.sum(mf), 1.0)
+            if bz.draco_r > 0:
+                sel = particip          # per-group votes: delivery shares
+            elif bucket is not None:
+                w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
+                stack_b = (arena[roster_idx]
+                           if use_flat and plan.uniform_dtype is not None
+                           else jax.tree.map(lambda l: l[roster_idx], sent))
+                sel_b = spec.selection_weights(stack_b, mask=w_b > 0.0,
+                                               weights=w_b, state=st)
+                sel = jnp.zeros((n,), jnp.float32).at[roster_idx].add(
+                    jnp.where(roster_valid, sel_b, 0.0))
+            else:
+                stack = (arena
+                         if use_flat and plan.uniform_dtype is not None
+                         else sent)
+                sel = spec.selection_weights(stack, mask=mask,
+                                             weights=contrib_w, state=st)
+                if fallback_r > 0:
+                    # quorum missed -> the coded vote aggregated instead
+                    sel = jnp.where(use_coded, particip, sel)
+            telem = {"sel_w": sel, "mask": mask,
+                     "contrib_w": contrib_w.astype(jnp.float32)}
         if stateful:
             agg_state = spec.update_state(agg_state, agg)
 
@@ -239,6 +279,8 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             "loss_all": jnp.mean(losses),
             "grad_norm": gnorm,
         }
+        if telem is not None:
+            metrics["telemetry"] = telem
         return params, opt_state, momentum, buffer, agg_state, metrics
 
     return async_step
@@ -249,13 +291,22 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
                      log_every: int = 10, ckpt_dir: str | None = None,
                      ckpt_every: int = 0, poison_labels: bool = False,
                      jit: bool = True, params=None, log_fn=print,
+                     recorder=None, telemetry: Optional[bool] = None,
                      _force_general: bool = False):
     """Returns (params, history list of metric dicts).
 
     sim=None (or any schedule whose trace stays synchronous) reproduces the
     historical synchronous ``train_loop`` bit-for-bit: pure steps dispatch
     to the exact synchronous train step.  ``_force_general`` routes pure
-    steps through the general async path too (testing only)."""
+    steps through the general async path too (testing only).
+
+    ``recorder`` (a :class:`repro.obs.recorder.Recorder`): the loop feeds
+    it run metadata, per-step spans/metrics, the aggregator's selection
+    telemetry, roster-delta annotations and the recompile ledger — all on
+    host, between steps, so recording adds ZERO compiles and leaves
+    results bit-identical.  ``telemetry`` forces the fixed-shape
+    selection aux outputs on/off explicitly (default: on exactly when a
+    recorder is attached)."""
     from repro.training.step import make_train_step
     sim = sim if sim is not None else SimConfig()
     n = bz.n_agents
@@ -301,17 +352,27 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
         momentum = init_momentum(proto)
 
+    telemetry = (recorder is not None) if telemetry is None else telemetry
+    if recorder is not None:
+        from repro.obs.telemetry import dispatch_record
+        recorder.emit("run", steps=steps, n_agents=n,
+                      dispatch=dispatch_record(spec),
+                      quorum=sim.quorum, max_staleness=sim.max_staleness,
+                      attack=bz.attack, f=bz.f, seed=seed,
+                      faults=[repr(f) for f in sim.faults])
     # stateful aggregators must observe (and update) their state every
     # step, so they always run the general path; the synchronous train
     # step stays the stateless fast path
-    step_fn = None if stateful else make_train_step(cfg, bz, optimizer)
+    step_fn = None if stateful else make_train_step(cfg, bz, optimizer,
+                                                    telemetry=telemetry)
     # donate the in-flight gradient buffer (the step returns its updated
     # twin): on accelerator backends the buffer-sized HBM block is reused
     # in place — the flat pipeline's "donated arena"; CPU ignores
     # donation, so skip it there to keep logs clean
     donate = () if jax.default_backend() == "cpu" else (3,)
     async_fn = make_async_step(cfg, bz, optimizer,
-                               fallback_r=sim.coded_fallback_r)
+                               fallback_r=sim.coded_fallback_r,
+                               telemetry=telemetry)
     if jit:
         step_fn = jax.jit(step_fn) if step_fn is not None else None
         async_fn = jax.jit(async_fn, donate_argnums=donate)
@@ -324,7 +385,8 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
 
     def bucket_fn(b: int):
         if b not in bucket_fns:
-            fn = make_async_step(cfg, bz, optimizer, bucket=b)
+            fn = make_async_step(cfg, bz, optimizer, bucket=b,
+                                 telemetry=telemetry)
             bucket_fns[b] = (jax.jit(fn, donate_argnums=donate) if jit
                              else fn)
         return bucket_fns[b]
@@ -359,6 +421,7 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
         if poison_labels:
             batch = label_flip(batch, byz_mask, cfg.vocab_size)
         arrived = int(atrace.contrib[step].sum())
+        st0 = recorder.now() if recorder is not None else None
         if pure[step]:
             params, opt_state, momentum, metrics = step_fn(
                 params, opt_state, momentum, batch, k_step)
@@ -389,6 +452,25 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
                     params, opt_state, momentum, buffer, agg_state, batch,
                     k_step, jnp.asarray(refresh),
                     jnp.asarray(contrib_w[step]), jnp.asarray(use_coded))
+        telem = metrics.pop("telemetry", None) if metrics else None
+        if recorder is not None:
+            mrec = ({k: float(v) for k, v in metrics.items()}
+                    if metrics is not None else {})
+            mrec["arrived"] = arrived
+            mrec["n_live"] = atrace.n_live(step)
+            mrec["staleness_mean"] = (
+                float(atrace.staleness[step][atrace.contrib[step]].mean())
+                if arrived else 0.0)
+            mrec["staleness_max"] = (
+                int(atrace.staleness[step][atrace.contrib[step]].max())
+                if arrived else 0)
+            mrec["quorum_ok"] = bool(atrace.quorum_met[step])
+            if not atrace.quorum_met[step]:
+                recorder.fault(step, "quorum_miss", arrived=arrived)
+            recorder.step(step, t0=st0, t1=recorder.now(), metrics=mrec,
+                          telemetry=telem,
+                          roster=(roster[step] if roster is not None
+                                  else None))
         if step % log_every == 0 or step == steps - 1:
             if metrics is None:
                 m = {"loss": float("nan"), "loss_all": float("nan"),

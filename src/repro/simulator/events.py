@@ -93,19 +93,40 @@ class AsyncTrace:
         return {int(u): int(c) for u, c in zip(uniq, cnt)}
 
     def summary(self) -> dict:
+        """Aggregate statistics of the trace, roster-aware.
+
+        On top of the historical means: staleness and per-step arrival
+        percentiles (p50/p95/max), ``n_live`` statistics under rosters
+        (min/p50 — previously the roster was silently ignored here), and
+        ``live_fraction`` — the fraction of steps each agent was a roster
+        member (all-ones without a roster)."""
+        n = self.contrib.shape[1]
         arrived = self.contrib.sum(1)
         stal = self.staleness[self.contrib]
-        live = (np.full(self.steps, self.contrib.shape[1])
+        live = (np.full(self.steps, n)
                 if self.roster is None else self.roster.sum(1))
+
+        def pct(v, q):
+            return float(np.percentile(np.asarray(v, np.float64), q))
         return {
             "steps": int(self.steps),
             "mean_live": float(live.mean()) if self.steps else 0.0,
+            "min_live": int(live.min()) if self.steps else 0,
+            "live_p50": pct(live, 50) if self.steps else 0.0,
             "mean_arrived": float(arrived.mean()) if self.steps else 0.0,
+            "arrived_p50": pct(arrived, 50) if self.steps else 0.0,
+            "arrived_p95": pct(arrived, 95) if self.steps else 0.0,
+            "min_arrived": int(arrived.min()) if self.steps else 0,
             "mean_staleness": float(stal.mean()) if stal.size else 0.0,
+            "staleness_p50": pct(stal, 50) if stal.size else 0.0,
+            "staleness_p95": pct(stal, 95) if stal.size else 0.0,
             "max_staleness": int(stal.max()) if stal.size else 0,
             "virtual_time": float(self.vclock[-1]) if self.steps else 0.0,
             "quorum_misses": int((~self.quorum_met).sum()),
             "staleness_hist": self.staleness_histogram(),
+            "live_fraction": ([1.0] * n if self.roster is None else
+                              [float(x) for x in
+                               self.roster[:self.steps].mean(0)]),
         }
 
 

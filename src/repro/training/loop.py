@@ -22,10 +22,17 @@ def train_loop(cfg, bz, optimizer, dataset, steps: int, seed: int = 0,
                log_every: int = 10, ckpt_dir: str | None = None,
                ckpt_every: int = 0, poison_labels: bool = False,
                jit: bool = True, params=None, log_fn=print,
-               sim: SimConfig | None = None):
-    """Returns (params, history list of metric dicts)."""
+               sim: SimConfig | None = None, recorder=None,
+               telemetry: bool | None = None):
+    """Returns (params, history list of metric dicts).
+
+    ``recorder``/``telemetry``: flight-recorder hooks (see
+    :mod:`repro.obs` and ``async_train_loop``) — recording runs on host
+    between steps, so results stay bit-identical and no extra compiles
+    happen."""
     return async_train_loop(cfg, bz, optimizer, dataset, steps, sim=sim,
                             seed=seed, log_every=log_every,
                             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                             poison_labels=poison_labels, jit=jit,
-                            params=params, log_fn=log_fn)
+                            params=params, log_fn=log_fn,
+                            recorder=recorder, telemetry=telemetry)

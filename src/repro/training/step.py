@@ -33,7 +33,7 @@ from repro.core.aggregators import AggregatorSpec, make_spec
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.flat import FlatPlan
 from repro.core.momentum import worker_momentum
-from repro.core.tracecount import count_trace
+from repro.obs.counters import count_trace
 from repro.core.redundancy.coding import tree_draco_aggregate
 from repro.models import loss_fn
 from repro.optim import apply_updates
@@ -147,9 +147,17 @@ def _reshard_specs(grads, mesh_sizes):
 
 def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                     mesh_sizes: dict | None = None,
-                    bucket: int | None = None):
+                    bucket: int | None = None, telemetry: bool = False):
     """Returns train_step(params, opt_state, momentum, batch, key[,
     roster_idx, roster_valid]) -> (params, opt_state, momentum, metrics).
+
+    ``telemetry`` (static Python flag): metrics additionally carry a
+    fixed-shape ``"telemetry"`` struct — the aggregator's (n,) selection
+    weights, delivery mask and contribution weights
+    (``spec.selection_weights``, see :mod:`repro.obs`).  ``False`` emits
+    the EXACT historical jaxpr (bit-identical results, same compile
+    count); ``True`` adds only (n,)-sized aux outputs, so the compile
+    budget is unchanged either way.
 
     ``bucket`` (elastic membership): per-agent gradients are still computed
     for the full n_agents batch, but aggregation runs over the LIVE roster
@@ -267,6 +275,38 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
             "loss_all": jnp.mean(losses),
             "grad_norm": gnorm,
         }
+        if telemetry:
+            # fixed-shape (n,) aux outputs computed OUTSIDE the aggregate
+            # call — the update above is untouched, so results stay
+            # bit-identical with telemetry on
+            n = bz.n_agents
+            if bz.draco_r > 0:
+                # the repetition code votes per group: per-agent
+                # attribution is uniform participation
+                sel = jnp.full((n,), 1.0 / n, jnp.float32)
+                m_full = jnp.ones((n,), bool)
+            elif bucket is not None:
+                stack = (arena[roster_idx]
+                         if use_flat and plan.uniform_dtype is not None
+                         else jax.tree.map(lambda l: l[roster_idx], grads))
+                sel_b = spec.selection_weights(stack, mask=roster_valid)
+                sel = jnp.zeros((n,), jnp.float32).at[roster_idx].add(
+                    jnp.where(roster_valid, sel_b, 0.0))
+                m_full = jnp.zeros((n,), bool).at[roster_idx].max(
+                    roster_valid)
+            else:
+                stack = (arena
+                         if use_flat and plan.uniform_dtype is not None
+                         else grads)
+                sel = spec.selection_weights(stack)
+                m_full = jnp.ones((n,), bool)
+                if bz.group_size > 1:
+                    # rules ran on the k group means: attribute each
+                    # group's weight evenly to its members
+                    sel = jnp.repeat(sel, bz.group_size) / bz.group_size
+            metrics["telemetry"] = {
+                "sel_w": sel, "mask": m_full,
+                "contrib_w": m_full.astype(jnp.float32)}
         return params, opt_state, momentum, metrics
 
     return train_step
