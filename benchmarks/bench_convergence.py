@@ -48,3 +48,36 @@ def run(quick: bool = True):
                 "derived": f"final_loss={hist[-1]['loss']:.4f}",
             })
     return rows
+
+
+def main(out: str = "BENCH_convergence.json", smoke: bool = False):
+    """Standalone artifact: the attack x defence matrix as provenance-
+    stamped JSON (rows keyed attack|filter with final losses), the shape
+    the CI bench-smoke lane archives next to BENCH_serving.json."""
+    import json
+
+    rows = run(quick=smoke)
+    grid = []
+    for r in rows:
+        attack, flt = r["name"].split("|", 1)
+        grid.append({"attack": attack, "filter": flt,
+                     "us_per_call": r["us_per_call"],
+                     "final_loss": float(r["derived"].split("=", 1)[1])})
+    from repro.obs.provenance import provenance
+    results = {"bench": "attack_defence_matrix", "smoke": bool(smoke),
+               "grid": grid, "provenance": provenance()}
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    for g in grid:
+        print(f"{g['attack']:>12s} | {g['filter']:<18s} "
+              f"loss={g['final_loss']:.4f}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_convergence.json")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(args.out, args.smoke)

@@ -1,0 +1,164 @@
+"""Benchmark — the serving control plane under load and faults.
+
+Sweeps the continuous-batching scheduler (:mod:`repro.serving.sched`)
+over offered load x replica fault rate x commit policy and reports the
+SLO quantities the early-commit design targets: throughput, p50/p95
+token latency and TTFT on the VIRTUAL clock (one clean replica decode =
+1.0 vs), plus the realized early-commit fraction.  Everything is seed-
+deterministic — workload (Poisson arrivals), replica step delays
+(straggler jitter) and the corruption schedule all derive from the run
+seed — so two machines produce the same JSON modulo provenance.
+
+The headline comparison: with straggling replicas, ``early`` commits a
+token at the (f+1)-th consistent arrival while ``full`` waits for the
+slowest live replica — same tokens (bit-identical; pinned by
+tests/test_serving_chaos.py), different tail.
+
+``python benchmarks/bench_serving.py`` writes ``BENCH_serving.json``
+(``--smoke`` for the CI lane's 1-rate grid); ``run(quick)`` feeds the
+``benchmarks/run.py`` CSV harness.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.aggregators import make_spec
+from repro.serving.sched import ReplicatedScheduler, poisson_requests
+
+R, F = 5, 2
+DELAY_STEPS = 64          # precomputed jitter horizon (cycled)
+
+
+def _bench_cfg():
+    return get_config("paper-100m-smoke").replace(vocab_size=64, d_model=32,
+                                                  d_ff=64, num_layers=2)
+
+
+def _stack(cfg, seed=1):
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    return jax.tree.map(lambda l: jnp.stack([l] * R), params)
+
+
+def _delays(seed: int, straggle: float = 2.5):
+    """(DELAY_STEPS, R) per-step replica latencies: 1.0 base + exponential
+    jitter, replica 0 a recurring heavy straggler — the regime where the
+    early/full gap is visible."""
+    rng = np.random.default_rng(seed)
+    d = 1.0 + rng.exponential(0.25, size=(DELAY_STEPS, R))
+    d[::3, 0] += straggle
+    return d
+
+
+def _fault_hook(fault_rate: float, seed: int):
+    """Corrupt replicas {3, 4} (== f) independently per step with
+    probability ``fault_rate`` — hostile logits, same corruption the
+    chaos suite uses."""
+    if fault_rate <= 0:
+        return None, np.zeros((DELAY_STEPS, R), bool)
+    rng = np.random.default_rng(seed + 17)
+    rows = np.zeros((DELAY_STEPS, R), bool)
+    rows[:, 3:] = rng.random((DELAY_STEPS, 2)) < fault_rate
+
+    def hook(step, logits):
+        sel = jnp.asarray(rows[step % DELAY_STEPS])[:, None, None]
+        return jnp.where(sel, -7.0 * logits + 3.0, logits)
+    return hook, rows
+
+
+def bench_point(rate: float, fault_rate: float, early: bool,
+                n_requests: int, seed: int = 0, deadline: float = 3.0):
+    """One grid point: scheduler drain of a Poisson workload."""
+    cfg = _bench_cfg()
+    stack = _stack(cfg)
+    spec = make_spec("coordinate_median", f=F, n=R)
+    hook, _ = _fault_hook(fault_rate, seed)
+    delays = _delays(seed)
+    reqs = poisson_requests(rate, n_requests / max(rate, 1e-9), seed=seed,
+                            vocab_size=cfg.vocab_size, prompt_lens=(4, 8),
+                            new_tokens=(3, 4, 6), max_requests=n_requests)
+    sched = ReplicatedScheduler(
+        cfg, stack, spec, slot_buckets=(2, 4, 8), seq_capacity=16,
+        early_commit=early, deadline=deadline if early else None,
+        fault_hook=hook, delays=lambda s: delays[s % DELAY_STEPS])
+    sched.submit_all(reqs)
+    t0 = time.perf_counter()
+    metrics = sched.run()
+    wall = time.perf_counter() - t0
+    out = {"rate": rate, "fault_rate": fault_rate,
+           "early_commit": early, "requests": len(reqs),
+           "steps": sched.step_idx,
+           "wall_s": round(wall, 3),
+           "wall_us_per_token": round(
+               wall * 1e6 / max(metrics.committed_tokens, 1), 1)}
+    out.update(metrics.summary())
+    return out
+
+
+def sweep(rates, fault_rates, n_requests: int, seed: int = 0):
+    grid = []
+    for rate in rates:
+        for p in fault_rates:
+            for early in (True, False):
+                grid.append(bench_point(rate, p, early, n_requests,
+                                        seed=seed))
+    return grid
+
+
+def run(quick: bool = True):
+    """run.py harness entry point: CSV rows."""
+    rates = (0.6,) if quick else (0.3, 0.6, 1.2)
+    fault_rates = (0.0, 0.3)
+    grid = sweep(rates, fault_rates, n_requests=8 if quick else 24)
+    rows = []
+    for g in grid:
+        mode = "early" if g["early_commit"] else "full"
+        rows.append({
+            "bench": "serving",
+            "name": f"rate{g['rate']}|p{g['fault_rate']}|{mode}",
+            "us_per_call": g["wall_us_per_token"],
+            "derived": (f"thru={g['throughput_tokens_per_vsec']:.2f}/vs "
+                        f"p95={g['token_latency_p95']:.2f} "
+                        f"early={g['early_commit_fraction']:.2f}"),
+        })
+    return rows
+
+
+def main(out: str = "BENCH_serving.json", smoke: bool = False,
+         seed: int = 0):
+    rates = (0.6,) if smoke else (0.3, 0.6, 1.2)
+    fault_rates = (0.0, 0.3)
+    n_requests = 8 if smoke else 24
+    grid = sweep(rates, fault_rates, n_requests, seed=seed)
+    from repro.obs.provenance import provenance
+    results = {"bench": "serving", "replicas": R, "f": F,
+               "aggregator": "coordinate_median", "seed": seed,
+               "smoke": bool(smoke), "grid": grid,
+               "provenance": provenance()}
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print("rate  fault  mode   thru/vs  tok_p50  tok_p95  ttft_p95  early%")
+    for g in grid:
+        mode = "early" if g["early_commit"] else "full"
+        print(f"{g['rate']:<5} {g['fault_rate']:<6} {mode:<6}"
+              f"{g['throughput_tokens_per_vsec']:8.2f}"
+              f"{g['token_latency_p50']:9.2f}{g['token_latency_p95']:9.2f}"
+              f"{g['ttft_p95']:10.2f}"
+              f"{100 * g['early_commit_fraction']:7.1f}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.out, args.smoke, args.seed)

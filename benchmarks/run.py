@@ -6,6 +6,7 @@
   4. p2p_dgd                — §3.3.5 decentralized fault tolerance
   5. roofline               — §Roofline from the dry-run artifacts
   6. async                  — fault-injection simulator / async training
+  7. serving                — continuous-batching replicated-decode scheduler
 
 Prints ``name,us_per_call,derived`` CSV.  --full for the long versions.
 """
@@ -24,7 +25,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_async, bench_coding, bench_convergence,
-                            bench_filters, bench_p2p, bench_roofline)
+                            bench_filters, bench_p2p, bench_roofline,
+                            bench_serving)
     benches = {
         "table2_filters": bench_filters.run,
         "attack_defence_matrix": bench_convergence.run,
@@ -32,6 +34,7 @@ def main() -> None:
         "p2p_dgd": bench_p2p.run,
         "roofline": bench_roofline.run,
         "async": bench_async.run,
+        "serving": bench_serving.run,
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -166,12 +166,23 @@ def prefill_attention(cfg, params, x, cache, *, positions=None,
 
 
 def decode_attention(cfg, params, x, cache, *, mrope_pos=None):
-    """Single-token decode: x (B, 1, D) against the cache (ring-aware)."""
+    """Single-token decode: x (B, 1, D) against the cache (ring-aware).
+
+    ``cache["pos"]`` may be a scalar (all rows decode in lock-step — the
+    historical path, jaxpr unchanged) or a (B,) vector of PER-ROW decode
+    positions: each row rotates at its own position, writes its own ring
+    slot and masks its own written prefix.  Per-row positions are what
+    lets the continuous-batching scheduler (:mod:`repro.serving.sched`)
+    hold requests at different depths in one batch; row values are
+    bit-identical to the same row decoded alone at the scalar position.
+    """
     B, T, _ = x.shape
     assert T == 1
     q, k, v = _project_qkv(cfg, params, x)
     pos = cache["pos"]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    per_row = jnp.ndim(pos) == 1
+    positions = (pos[:, None].astype(jnp.int32) if per_row
+                 else jnp.full((B, 1), pos, jnp.int32))
     if cfg.positional == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -181,15 +192,23 @@ def decode_attention(cfg, params, x, cache, *, mrope_pos=None):
         k = apply_mrope(k, qp, cfg.rope_theta, cfg.mrope_sections)
     cap = cache["k"].shape[1]
     slot = jnp.mod(pos, cap)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if per_row:
+        ck = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+        cv = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     scores = gqa_scores(cfg, q, ck)                  # (B,K,G,1,cap)
     # valid = slots already written (ring: window constraint is implied by
     # the capacity — old slots get overwritten)
     idx = jnp.arange(cap)
     written = jnp.where(pos >= cap, cap, pos + 1)
-    valid = idx < written
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    if per_row:
+        valid = idx[None, :] < written[:, None]      # (B, cap)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    else:
+        valid = idx < written
+        scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = gqa_out(cfg, probs, cv, params)
     new_cache = {"k": ck, "v": cv, "pos": pos + 1}

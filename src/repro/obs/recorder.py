@@ -73,12 +73,33 @@ class Recorder:
         self._t0 = time.perf_counter()
         self._snap = counters.snapshot()
         self._roster = None
+        self._subscribers: list = []
         self.emit("meta", provenance=provenance(), **(meta or {}))
 
     # -- core -----------------------------------------------------------
     def now(self) -> float:
         """Seconds since recorder creation (use for step t0/t1 spans)."""
         return time.perf_counter() - self._t0
+
+    def subscribe(self, callback):
+        """Stream events to ``callback(event_dict)`` as they are emitted.
+
+        The live half of the recorder: a subscriber sees every event the
+        JSONL file gets (same dicts, same order, including any emitted
+        before it unsubscribes) WITHOUT re-parsing the file — this is how
+        the scheduler's suspicion policy (:mod:`repro.serving.sched`)
+        consumes selection-weight telemetry inside the serving loop.
+        Subscription is purely additive: file emission stays byte
+        identical whether zero or many subscribers are attached, and a
+        subscriber registered mid-run simply starts at the next event
+        (replay ``recorder.events`` yourself if you need history).
+        Returns a zero-argument unsubscribe callable."""
+        self._subscribers.append(callback)
+
+        def unsubscribe():
+            if callback in self._subscribers:
+                self._subscribers.remove(callback)
+        return unsubscribe
 
     def emit(self, kind: str, **fields) -> dict:
         ev = {"kind": kind, "t": round(self.now(), 6)}
@@ -87,6 +108,8 @@ class Recorder:
         if self._fh is not None:
             self._fh.write(json.dumps(ev) + "\n")
             self._fh.flush()
+        for cb in tuple(self._subscribers):
+            cb(ev)
         return ev
 
     # -- convenience hooks the loops call -------------------------------

@@ -1,5 +1,6 @@
+from repro.serving.agreement import Agreement
 from repro.serving.engine import (generate, generate_replicated,
                                   make_decode_step, make_prefill_step)
 
 __all__ = ["make_prefill_step", "make_decode_step", "generate",
-           "generate_replicated"]
+           "generate_replicated", "Agreement"]

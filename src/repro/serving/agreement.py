@@ -1,0 +1,152 @@
+"""The ONE replica-agreement builder shared by the serving paths.
+
+Both :func:`repro.serving.engine.generate_replicated` (one request,
+lock-step replicas) and the continuous-batching scheduler
+(:mod:`repro.serving.sched`) robustly aggregate a per-step (r, B, V)
+logits stack over the replica axis and argmax the result.  Historically
+the engine carried two copies of that logic (``_agree_of`` for the
+static/masked path, ``make_agree_bucket`` for elastic rosters); this
+module is the extraction, so the scheduler does not grow a third copy
+and pad strategy / telemetry scatter / count-site accounting can never
+diverge between the serving paths.
+
+:class:`Agreement` exposes three layers, outermost first:
+
+  ``vote(logits, member)``   dispatch on the live-roster mask: no mask ->
+                             the full-stack program; mask + static spec ->
+                             the masked program (mask is a traced operand,
+                             ONE compile); mask + elastic spec -> pack the
+                             live rows into their bucket and run the
+                             bucket's respecialized program (<=
+                             ``len(buckets)`` compiles, cached here);
+  ``full(logits, member)``   the jitted full/masked agreement;
+  ``bucket(b)``              the jitted per-bucket agreement (packed
+                             ``(logits, idx, valid)`` signature, telemetry
+                             scattered back to the full (r,) roster).
+
+With ``telemetry=True`` every program additionally returns the
+aggregator's (r,) selection weights over replicas (see
+:meth:`~repro.core.aggregators.AggregatorSpec.selection_weights`) as a
+fixed-shape aux dict; ``telemetry=False`` keeps the EXACT historical
+agreement jaxpr.  Every trace of an agreement program counts against
+``site`` in :mod:`repro.obs.counters` (the engine keeps its historical
+``"serving_agree"`` site; the scheduler uses ``"sched_agree"``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.counters import count_trace
+
+
+class Agreement:
+    """Jitted replica-agreement programs for one AggregatorSpec.
+
+    Build once per serving loop; per-bucket programs are compiled lazily
+    and cached on the instance, so a roster that revisits a bucket never
+    re-traces.  See the module docstring for the three entry points.
+    """
+
+    def __init__(self, spec, *, telemetry: bool = False, jit: bool = True,
+                 site: str = "serving_agree"):
+        self.spec = spec
+        self.telemetry = bool(telemetry)
+        self.jit = bool(jit)
+        self.site = str(site)
+        # wrapper chains delegate elasticity to their inner rule
+        self.elastic = getattr(spec, "elastic_n", None)
+        self._full = self._agree_of(spec)
+        if jit:
+            self._full = jax.jit(self._full)
+        self._buckets: dict = {}
+
+    # -- program builders ------------------------------------------------
+    def _flat_agree(self, spec, logits_stack, mask=None):
+        # zero-copy agreement: a logits stack is already one dense leaf,
+        # so the flat path is a free (r, B*V) reshape into the arena the
+        # kernels consume — no tree plumbing per decode step.  Specs
+        # without a flat path (fused / wrapper / stateful) keep the tree
+        # engine.
+        r, B, V = logits_stack.shape
+        vec = spec.aggregate_flat(
+            logits_stack.astype(jnp.float32).reshape(r, B * V), mask=mask)
+        return vec.reshape(B, V)
+
+    def _agree_of(self, spec):
+        use_flat = getattr(spec, "flat_capable", False)
+        telemetry = self.telemetry
+        site = self.site
+
+        def agree(logits_stack, member=None):      # member: (r,) bool traced
+            count_trace(site)
+            if use_flat:
+                agg = self._flat_agree(spec, logits_stack, mask=member)
+            else:
+                agg = spec.aggregate(logits_stack.astype(jnp.float32),
+                                     mask=member)
+            tok = jnp.argmax(agg, axis=-1).astype(jnp.int32)
+            if not telemetry:                      # static: same jaxpr as
+                return tok                         # the pre-obs engine
+            rr = logits_stack.shape[0]
+            fstack = logits_stack.astype(jnp.float32).reshape(rr, -1)
+            sel = spec.selection_weights(fstack, mask=member)
+            m = (jnp.ones((rr,), bool) if member is None
+                 else member.astype(bool))
+            return tok, {"sel_w": sel.astype(jnp.float32), "mask": m,
+                         "contrib_w": m.astype(jnp.float32)}
+        return agree
+
+    def _make_bucket(self, b: int):
+        spec_b = self.spec.respecialize(b)
+        agree_packed = self._agree_of(spec_b)
+        telemetry = self.telemetry
+
+        def agree_b(logits_stack, idx, valid):     # idx (b,) i32, valid (b,)
+            out = agree_packed(logits_stack[idx], valid)
+            if not telemetry:
+                return out
+            tok, t = out                           # scatter back to (r,)
+            rr = logits_stack.shape[0]
+            sel = jnp.zeros((rr,), jnp.float32).at[idx].add(
+                jnp.where(valid, t["sel_w"], 0.0))
+            m = jnp.zeros((rr,), bool).at[idx].max(valid)
+            return tok, {"sel_w": sel, "mask": m,
+                         "contrib_w": m.astype(jnp.float32)}
+        return jax.jit(agree_b) if self.jit else agree_b
+
+    # -- entry points ----------------------------------------------------
+    def full(self, logits_stack, member=None):
+        """The full/masked agreement program (member: traced (r,) bool)."""
+        if member is None:
+            return self._full(logits_stack)
+        return self._full(logits_stack, member)
+
+    def bucket(self, b: int):
+        """The packed agreement program of elastic bucket ``b`` (cached)."""
+        if b not in self._buckets:
+            self._buckets[b] = self._make_bucket(b)
+        return self._buckets[b]
+
+    def vote(self, logits_stack, member=None):
+        """Dispatch one agreement step on a host-side live-roster mask.
+
+        ``member``: None (full static roster) or an (r,) bool array-like.
+        Returns the committed (B,) token — with ``telemetry=True``, a
+        ``(token, {sel_w, mask, contrib_w})`` pair, aux shapes always
+        (r,) regardless of the bucket that served the vote."""
+        if member is None:
+            return self._full(logits_stack)
+        member = np.asarray(member, bool)
+        live = np.flatnonzero(member)
+        if len(live) == 0:
+            raise ValueError("agreement vote with no live replicas")
+        if self.elastic is None:
+            return self._full(logits_stack, jnp.asarray(member))
+        b, idx, valid = self.elastic.pack(live)
+        return self.bucket(b)(logits_stack, jnp.asarray(idx),
+                              jnp.asarray(valid))
+
+
+__all__ = ["Agreement"]

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.obs.counters import count_trace
 from repro.models import decode_step, init_cache, prefill
+from repro.serving.agreement import Agreement
 
 
 def make_prefill_step(cfg):
@@ -128,69 +128,19 @@ def generate_replicated(cfg, params_stack, prompt_batch,
     vpre = jax.vmap(rep_prefill)
     vdec = jax.vmap(rep_decode, in_axes=(0, None, 0))
 
-    # zero-copy agreement: a logits stack is already one dense leaf, so
-    # the flat path is a free (r, B*V) reshape into the arena the kernels
-    # consume — no tree plumbing per decode step.  Specs without a flat
-    # path (fused / wrapper / stateful) keep the tree engine.
-    def _flat_agree(spec, logits_stack, mask=None):
-        r, B, V = logits_stack.shape
-        vec = spec.aggregate_flat(
-            logits_stack.astype(jnp.float32).reshape(r, B * V), mask=mask)
-        return vec.reshape(B, V)
-
-    def _agree_of(spec):
-        use_flat = getattr(spec, "flat_capable", False)
-
-        def agree(logits_stack, member=None):      # member: (r,) bool traced
-            count_trace("serving_agree")
-            if use_flat:
-                agg = _flat_agree(spec, logits_stack, mask=member)
-            else:
-                agg = spec.aggregate(logits_stack.astype(jnp.float32),
-                                     mask=member)
-            tok = jnp.argmax(agg, axis=-1).astype(jnp.int32)
-            if not telemetry:                      # static: same jaxpr as
-                return tok                         # the pre-obs engine
-            rr = logits_stack.shape[0]
-            fstack = logits_stack.astype(jnp.float32).reshape(rr, -1)
-            sel = spec.selection_weights(fstack, mask=member)
-            m = (jnp.ones((rr,), bool) if member is None
-                 else member.astype(bool))
-            return tok, {"sel_w": sel.astype(jnp.float32), "mask": m,
-                         "contrib_w": m.astype(jnp.float32)}
-        return agree
-
-    agree_full = _agree_of(aggregator)
-
-    def make_agree_bucket(b: int):
-        spec_b = aggregator.respecialize(b)
-        agree_packed = _agree_of(spec_b)
-
-        def agree_b(logits_stack, idx, valid):     # idx (b,) i32, valid (b,)
-            out = agree_packed(logits_stack[idx], valid)
-            if not telemetry:
-                return out
-            tok, t = out                           # scatter back to (r,)
-            rr = logits_stack.shape[0]
-            sel = jnp.zeros((rr,), jnp.float32).at[idx].add(
-                jnp.where(valid, t["sel_w"], 0.0))
-            m = jnp.zeros((rr,), bool).at[idx].max(valid)
-            return tok, {"sel_w": sel, "mask": m,
-                         "contrib_w": m.astype(jnp.float32)}
-        return jax.jit(agree_b) if jit else agree_b
-
     if jit:
         vpre = jax.jit(vpre)
         vdec = jax.jit(vdec)
-        agree_full = jax.jit(agree_full)
 
-    el = getattr(aggregator, "elastic_n", None)   # wrapper chains delegate
+    # the shared agreement builder (also used by the sched subsystem) —
+    # full/masked/elastic-bucket dispatch, telemetry scatter, count site
+    ag = Agreement(aggregator, telemetry=telemetry, jit=jit)
+    el = ag.elastic
     r = jax.tree.leaves(params_stack)[0].shape[0]
     if el is not None and el.n_max != r:
         raise ValueError(
             f"elastic aggregator {aggregator.describe()} was built for "
             f"n_max={el.n_max} but params_stack has {r} replicas")
-    bucket_agree: dict = {}
     if recorder is not None:
         from repro.obs.telemetry import dispatch_record
         recorder.emit("run", engine="generate_replicated", replicas=r,
@@ -199,18 +149,11 @@ def generate_replicated(cfg, params_stack, prompt_batch,
 
     def agree_step(step, logits):
         if roster is None:
-            return agree_full(logits)
+            return ag.vote(logits)
         member = np.asarray(roster[min(step, len(roster) - 1)], bool)
-        live = np.flatnonzero(member)
-        if len(live) == 0:
+        if not member.any():
             raise ValueError(f"roster at step {step} has no live replicas")
-        if el is None:
-            return agree_full(logits, jnp.asarray(member))
-        b, idx, valid = el.pack(live)
-        if b not in bucket_agree:
-            bucket_agree[b] = make_agree_bucket(b)
-        return bucket_agree[b](logits, jnp.asarray(idx),
-                               jnp.asarray(valid))
+        return ag.vote(logits, member)
 
     def agreed(step, logits):
         st0 = recorder.now() if recorder is not None else None

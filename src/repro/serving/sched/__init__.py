@@ -1,0 +1,45 @@
+"""Serving control plane: continuous batching over replicated decode.
+
+What the layer is: :func:`repro.serving.engine.generate_replicated`
+fault-tolerantly decodes ONE stream; this package schedules MANY.  A
+:class:`~repro.serving.sched.queue.RequestQueue` admits Poisson (or
+hand-built) request arrivals on the simulator's virtual clock; the
+:class:`~repro.serving.sched.scheduler.ReplicatedScheduler` runs them
+through a padded slot batch (per-row decode positions, batch-size
+buckets — churn costs at most ``len(slot_buckets)`` compiles), commits
+each token either EARLY (first f+1 bitwise-consistent live replicas)
+or by the full masked-aggregation vote at the SLO deadline, and lets a
+:class:`~repro.serving.sched.policy.SuspicionPolicy` evict replicas
+whose selection weight pins at zero — all while every stream's tokens
+stay bit-identical to what ``generate_replicated`` would emit for that
+request alone (<= f corruption; pinned by
+``tests/test_serving_chaos.py``).
+
+Quick start::
+
+    from repro.serving.sched import (ReplicatedScheduler, SuspicionPolicy,
+                                     poisson_requests)
+    sched = ReplicatedScheduler(cfg, params_stack, spec,
+                                slot_buckets=(2, 4), seq_capacity=32,
+                                deadline=2.0, delays=trace.delay,
+                                policy=SuspicionPolicy(r, f))
+    sched.submit_all(poisson_requests(0.5, 40.0, seed=0,
+                                      vocab_size=cfg.vocab_size))
+    print(sched.run().summary())
+
+Module map: ``queue`` (requests, admission control, workloads),
+``scheduler`` (slot slab + early commit — the control loop),
+``policy`` (live suspicion -> roster), ``metrics`` (virtual-clock SLO
+accounting).  The load benchmark lives in
+``benchmarks/bench_serving.py``.
+"""
+from repro.serving.sched.metrics import ServingMetrics
+from repro.serving.sched.policy import SuspicionPolicy
+from repro.serving.sched.queue import (Request, RequestQueue,
+                                       poisson_requests)
+from repro.serving.sched.scheduler import ReplicatedScheduler
+
+__all__ = [
+    "Request", "RequestQueue", "poisson_requests",
+    "ReplicatedScheduler", "SuspicionPolicy", "ServingMetrics",
+]

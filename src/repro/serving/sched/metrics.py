@@ -1,0 +1,111 @@
+"""SLO metrics for the serving scheduler: latency percentiles, throughput.
+
+Everything here is host-side numpy over the scheduler's virtual clock —
+the same units the simulator's fault schedules use (one base replica
+decode = 1.0 virtual second), so the latency distributions are a
+function of the workload + fault schedule alone, reproducible bit-for-
+bit across machines.  The two quantities the SLO story turns on:
+
+  * **token latency** — committed-token time minus the instant the
+    token's decode step started (plus, for a first token, the time the
+    request spent queued + prefilling).  Early commit cuts exactly this:
+    a token commits at the (f+1)-th consistent replica arrival instead
+    of the slowest live replica's.
+  * **throughput** — committed tokens per virtual second over the span
+    from first admission to last commit.
+
+``summary()`` mirrors :meth:`repro.simulator.events.AsyncTrace.summary`:
+one flat dict of floats, percentile keys spelled ``p50``/``p95``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _pct(values, q) -> float:
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+class ServingMetrics:
+    """Accumulates per-request / per-token events; renders one summary.
+
+    The scheduler calls the hooks; consumers read :meth:`summary` (or the
+    raw lists, every one a plain python list of floats/ints).
+    """
+
+    def __init__(self):
+        self.token_latencies: list[float] = []   # per committed token
+        self.ttft: list[float] = []              # arrival -> first token
+        self.request_latencies: list[float] = []  # arrival -> last token
+        self.early_commits = 0
+        self.full_votes = 0
+        self.committed_tokens = 0
+        self.completed_requests = 0
+        self.admitted_requests = 0
+        self.evictions = 0
+        self.reinstatements = 0
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+
+    # -- hooks the scheduler drives -------------------------------------
+    def admit(self, req, now: float) -> None:
+        self.admitted_requests += 1
+        if self.t_first is None or now < self.t_first:
+            self.t_first = now
+
+    def commit(self, req, t_commit: float, latency: float,
+               early: bool) -> None:
+        """One committed token for ``req`` at virtual time ``t_commit``,
+        ``latency`` virtual seconds after its decode step started."""
+        self.committed_tokens += 1
+        self.token_latencies.append(float(latency))
+        if early:
+            self.early_commits += 1
+        else:
+            self.full_votes += 1
+        if len(req.out) == 1:                     # this was the first token
+            self.ttft.append(float(t_commit - req.arrival))
+        self.t_last = float(t_commit)
+
+    def finish(self, req, now: float) -> None:
+        self.completed_requests += 1
+        self.request_latencies.append(float(now - req.arrival))
+
+    def evict(self, replica: int, step: int) -> None:
+        self.evictions += 1
+
+    def reinstate(self, replica: int, step: int) -> None:
+        self.reinstatements += 1
+
+    # -- rendering -------------------------------------------------------
+    def summary(self) -> dict:
+        lat = self.token_latencies
+        span = ((self.t_last - self.t_first)
+                if self.t_first is not None and self.t_last is not None
+                and self.t_last > self.t_first else 0.0)
+        total = self.early_commits + self.full_votes
+        return {
+            "committed_tokens": int(self.committed_tokens),
+            "completed_requests": int(self.completed_requests),
+            "admitted_requests": int(self.admitted_requests),
+            "throughput_tokens_per_vsec": (
+                self.committed_tokens / span if span > 0 else 0.0),
+            "token_latency_p50": _pct(lat, 50) if lat else 0.0,
+            "token_latency_p95": _pct(lat, 95) if lat else 0.0,
+            "token_latency_max": float(max(lat)) if lat else 0.0,
+            "ttft_p50": _pct(self.ttft, 50) if self.ttft else 0.0,
+            "ttft_p95": _pct(self.ttft, 95) if self.ttft else 0.0,
+            "request_latency_p50": (_pct(self.request_latencies, 50)
+                                    if self.request_latencies else 0.0),
+            "request_latency_p95": (_pct(self.request_latencies, 95)
+                                    if self.request_latencies else 0.0),
+            "early_commit_fraction": (self.early_commits / total
+                                      if total else 0.0),
+            "full_votes": int(self.full_votes),
+            "evictions": int(self.evictions),
+            "reinstatements": int(self.reinstatements),
+            "virtual_span": float(span),
+        }
+
+
+__all__ = ["ServingMetrics"]

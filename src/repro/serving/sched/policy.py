@@ -1,0 +1,135 @@
+"""Suspicion-driven replica roster policy (the PR 6 named follow-up).
+
+The flight recorder already derives per-agent *suspicion* from selection
+-weight telemetry (:func:`repro.obs.telemetry.suspicion_scores`) — but
+only after the run, from the JSONL.  This module closes the loop LIVE:
+a :class:`SuspicionPolicy` subscribes to the scheduler's
+:class:`~repro.obs.recorder.Recorder` stream
+(:meth:`~repro.obs.recorder.Recorder.subscribe`) and maintains, per
+replica, the streak of consecutive delivered steps whose selection
+weight pinned at zero.  A robust rule that keeps excluding a replica's
+logits is evidence against that replica — when the streak reaches
+``window``, the replica is EVICTED from the voting roster.
+
+Eviction is a roster decision, not a teardown: the scheduler keeps
+advancing an evicted replica's cache with the agreed tokens (the warm-
+standby semantics ``generate_replicated`` established for rosters), so
+after ``cooloff`` steps the policy folds the standby back in — if it is
+still corrupt the selection weights re-pin at zero and it is re-evicted;
+if it was transient (bit-flip, recovered host) it rejoins the vote
+instantly consistent.  ``min_live`` (default ``2 f + 1`` — the classic
+robust-aggregation quorum) floors the roster: the policy never evicts
+below the count the aggregation rule needs to tolerate f, no matter how
+suspicious the stragglers look.
+
+The policy is a pure event consumer — it never touches a trace, and the
+scheduler reads ``policy.roster`` between steps.  It composes with any
+event source that emits recorder-shaped ``step`` events carrying
+``telemetry.sel_w`` / ``telemetry.mask``, so it can equally be driven by
+a recorded JSONL replay (``for ev in read_trace(p): policy.on_event(ev)``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SuspicionPolicy:
+    """Live roster controller over ``n_replicas`` voting replicas.
+
+    ``window``: consecutive zero-selection delivered steps before
+    eviction; ``cooloff``: steps an evicted replica sits out before being
+    reinstated as a warm standby; ``min_live``: roster floor (None ->
+    ``2 * f + 1``); ``eps``: selection-share threshold under which a
+    delivered step counts as "not selected".
+    """
+
+    def __init__(self, n_replicas: int, f: int, *, window: int = 8,
+                 cooloff: int = 16, min_live: int | None = None,
+                 eps: float = 1e-9):
+        if n_replicas < 1:
+            raise ValueError(f"need at least one replica, got {n_replicas}")
+        self.n = int(n_replicas)
+        self.f = int(f)
+        self.window = int(window)
+        self.cooloff = int(cooloff)
+        self.min_live = (2 * self.f + 1 if min_live is None
+                         else int(min_live))
+        self.eps = float(eps)
+        self.roster = np.ones(self.n, bool)       # the scheduler reads this
+        self.zero_streak = np.zeros(self.n, np.int64)
+        self.evicted_at = np.full(self.n, -1, np.int64)
+        self.events: list[dict] = []              # eviction/reinstate log
+        self._unsubscribe = None
+
+    # -- wiring ----------------------------------------------------------
+    def attach(self, recorder) -> "SuspicionPolicy":
+        """Subscribe to a live Recorder event stream; returns self."""
+        self._unsubscribe = recorder.subscribe(self.on_event)
+        return self
+
+    def detach(self) -> None:
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
+    # -- the event consumer ---------------------------------------------
+    def on_event(self, ev: dict) -> None:
+        if ev.get("kind") != "step" or not ev.get("telemetry"):
+            return
+        t = ev["telemetry"]
+        sel = np.asarray(t.get("sel_w", ()), np.float64)
+        mask = np.asarray(t.get("mask", ()), bool)
+        if sel.shape != (self.n,) or mask.shape != (self.n,):
+            return                               # not a replica-vote event
+        step = int(ev.get("step", len(self.events)))
+        self._update(sel, mask, step)
+
+    def _update(self, sel: np.ndarray, mask: np.ndarray, step: int) -> None:
+        # selection shares over the delivered set (rules whose weights sum
+        # below 1 — cgc attenuation — compare on the same baseline)
+        tot = float(np.where(mask, sel, 0.0).sum())
+        share = np.where(mask, sel, 0.0) / max(tot, 1e-30)
+        delivered = mask & self.roster
+        zero = delivered & (share <= self.eps)
+        self.zero_streak = np.where(zero, self.zero_streak + 1,
+                                    np.where(delivered, 0,
+                                             self.zero_streak))
+        # reinstate cooled-off standbys first (the roster floor below
+        # then sees the refreshed live count)
+        for i in np.flatnonzero(~self.roster):
+            if step - self.evicted_at[i] >= self.cooloff:
+                self.roster[i] = True
+                self.zero_streak[i] = 0
+                self.evicted_at[i] = -1
+                self.events.append({"kind": "reinstate", "replica": int(i),
+                                    "step": step})
+        # evict pinned-at-zero replicas, most-suspicious first, floored
+        order = np.argsort(-self.zero_streak)
+        for i in order:
+            if (self.roster[i] and self.zero_streak[i] >= self.window
+                    and int(self.roster.sum()) > self.min_live):
+                self.roster[i] = False
+                self.evicted_at[i] = step
+                self.events.append({"kind": "evict", "replica": int(i),
+                                    "step": step,
+                                    "streak": int(self.zero_streak[i])})
+
+    # -- inspection ------------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return int(self.roster.sum())
+
+    def describe(self) -> dict:
+        return {
+            "roster": self.roster.tolist(),
+            "zero_streak": self.zero_streak.tolist(),
+            "window": self.window, "cooloff": self.cooloff,
+            "min_live": self.min_live,
+            "evictions": sum(1 for e in self.events
+                             if e["kind"] == "evict"),
+            "reinstatements": sum(1 for e in self.events
+                                  if e["kind"] == "reinstate"),
+        }
+
+
+__all__ = ["SuspicionPolicy"]

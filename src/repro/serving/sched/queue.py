@@ -1,0 +1,122 @@
+"""Request queue + admission control for the serving scheduler.
+
+A :class:`Request` is one generation stream: prompt tokens, a decode
+budget, and its virtual arrival time.  The :class:`RequestQueue` is the
+front door — FIFO over ARRIVED requests (arrival times live on the same
+virtual clock the replica fault schedules run on), with a bounded
+pending depth as admission control: a request submitted while
+``max_pending`` are already waiting is REJECTED at the door (the
+load-shedding answer to overload — queueing it would only grow tail
+latency without bound; the bench sweeps offered load past saturation to
+show exactly that knee).
+
+:func:`poisson_requests` turns a
+:func:`repro.simulator.events.poisson_arrival_times` stream into a
+seed-deterministic request workload (prompt lengths and decode budgets
+drawn from small caller-given menus — the scheduler compiles one prefill
+per DISTINCT prompt length, so a menu, not a continuum).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation stream: ``tokens`` (T,) int32 prompt, decode budget,
+    virtual arrival time.  ``out`` collects the committed token ids."""
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    arrival: float = 0.0
+    # filled by the scheduler as the stream progresses
+    out: list = field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new_tokens
+
+
+class RequestQueue:
+    """FIFO of pending requests with bounded-depth admission control.
+
+    ``submit`` returns False (and drops the request) when ``max_pending``
+    requests are already queued; ``poll(now)`` hands back every queued
+    request whose arrival time has passed, in arrival order.  The queue
+    never reorders: continuous batching happens downstream, in the
+    scheduler's slot table.
+    """
+
+    def __init__(self, max_pending: Optional[int] = None):
+        self.max_pending = max_pending
+        self._q: deque = deque()
+        self.submitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        self.submitted += 1
+        if self.max_pending is not None and len(self._q) >= self.max_pending:
+            self.rejected += 1
+            return False
+        self._q.append(req)
+        return True
+
+    def submit_all(self, reqs) -> int:
+        """Submit in order; returns how many were admitted."""
+        return sum(1 for r in reqs if self.submit(r))
+
+    def poll(self, now: float, limit: Optional[int] = None) -> list:
+        """Pop queued requests with ``arrival <= now`` (FIFO), at most
+        ``limit`` of them (None = all arrived)."""
+        out = []
+        while self._q and self._q[0].arrival <= now \
+                and (limit is None or len(out) < limit):
+            out.append(self._q.popleft())
+        return out
+
+    def peek_arrival(self) -> Optional[float]:
+        """Arrival time of the head request (None when empty) — the
+        scheduler fast-forwards its virtual clock here when idle."""
+        return self._q[0].arrival if self._q else None
+
+
+def poisson_requests(rate: float, horizon: float, seed: int = 0, *,
+                     vocab_size: int, prompt_lens=(8,), new_tokens=(8,),
+                     max_requests: Optional[int] = None) -> list:
+    """A seed-deterministic Poisson request workload.
+
+    Arrival times come from
+    :func:`repro.simulator.events.poisson_arrival_times` (``rate``
+    requests per virtual second over ``horizon``); per request, prompt
+    length and decode budget are drawn uniformly from the ``prompt_lens``
+    / ``new_tokens`` menus and prompt tokens uniformly from the vocab —
+    all from one :class:`numpy.random.Generator` seeded with ``seed``, so
+    a (rate, horizon, seed) triple names one exact workload across
+    benchmark runs."""
+    from repro.simulator.events import poisson_arrival_times
+    times = poisson_arrival_times(rate, horizon, seed=seed,
+                                  max_events=max_requests)
+    rng = np.random.default_rng(seed + 1)
+    reqs = []
+    for i, t in enumerate(times):
+        T = int(rng.choice(np.asarray(prompt_lens)))
+        reqs.append(Request(
+            rid=i,
+            tokens=rng.integers(0, vocab_size, size=T).astype(np.int32),
+            max_new_tokens=int(rng.choice(np.asarray(new_tokens))),
+            arrival=float(t)))
+    return reqs
+
+
+__all__ = ["Request", "RequestQueue", "poisson_requests"]

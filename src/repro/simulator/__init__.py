@@ -9,7 +9,8 @@ from repro.simulator.faults import (Churn, CrashRecover, FaultTrace, Join,
                                     MessageDrop, Partition, PermanentCrash,
                                     Rejoin, Straggler, compile_schedule,
                                     no_faults)
-from repro.simulator.events import AsyncTrace, simulate_arrivals
+from repro.simulator.events import (AsyncTrace, poisson_arrival_times,
+                                    simulate_arrivals)
 from repro.simulator.async_loop import (SimConfig, async_train_loop,
                                         make_async_step, plan_arrivals,
                                         staleness_weights)
@@ -18,7 +19,7 @@ __all__ = [
     "Straggler", "CrashRecover", "PermanentCrash", "MessageDrop",
     "Partition", "Join", "Rejoin", "Churn",
     "FaultTrace", "compile_schedule", "no_faults",
-    "AsyncTrace", "simulate_arrivals",
+    "AsyncTrace", "simulate_arrivals", "poisson_arrival_times",
     "SimConfig", "async_train_loop", "make_async_step", "plan_arrivals",
     "staleness_weights",
 ]

@@ -130,6 +130,37 @@ class AsyncTrace:
         }
 
 
+def poisson_arrival_times(rate: float, horizon: float, seed: int = 0,
+                          t0: float = 0.0, max_events: int | None = None
+                          ) -> np.ndarray:
+    """Seed-deterministic Poisson-process event times on the virtual clock.
+
+    The arrival side of a SERVING workload: requests hit the front door as
+    a Poisson process of ``rate`` events per virtual second (i.i.d.
+    exponential gaps), the same virtual-time axis :func:`simulate_arrivals`
+    runs training deliveries on — so an offered-load sweep composes with
+    the :mod:`~repro.simulator.faults` schedules driving the replicas.
+    Returns the (k,) float64 sorted event times in ``[t0, t0 + horizon)``;
+    ``rate <= 0`` yields no events, ``max_events`` truncates (admission
+    control belongs to the consumer — see
+    :class:`repro.serving.sched.RequestQueue`)."""
+    if rate <= 0.0 or horizon <= 0.0:
+        return np.zeros(0, np.float64)
+    rng = np.random.default_rng(seed)
+    # draw in chunks: E[k] = rate * horizon, pad generously, extend rarely
+    times, t = [], float(t0)
+    end = t0 + horizon
+    while t < end and (max_events is None or len(times) < max_events):
+        gaps = rng.exponential(1.0 / rate, size=max(16, int(rate * horizon)))
+        for g in gaps:
+            t += g
+            if t >= end or (max_events is not None
+                            and len(times) >= max_events):
+                break
+            times.append(t)
+    return np.asarray(times, np.float64)
+
+
 def simulate_arrivals(trace: FaultTrace, steps: int,
                       quorum: Optional[int] = None,
                       max_staleness: Optional[int] = None) -> AsyncTrace:

@@ -429,3 +429,52 @@ def test_provenance_keys():
 if __name__ == "__main__":
     import sys
     sys.exit(pytest.main([__file__, "-q"]))
+
+
+# ----------------------------------------- live subscription (serving loop)
+
+def test_subscriber_sees_every_event_in_order(tmp_path):
+    """A subscriber receives the same dicts, in the same order, as the
+    JSONL file — the live half the scheduler's suspicion policy rides."""
+    rec = Recorder(str(tmp_path / "t.jsonl"))
+    seen = []
+    unsub = rec.subscribe(seen.append)
+    rec.emit("note", message="a")
+    rec.step(0, metrics={"loss": 1.0})
+    rec.emit("note", message="b")
+    rec.close()
+    # meta predates the subscription; everything after lands live
+    assert [e["kind"] for e in seen] == ["note", "step", "note"]
+    assert seen == rec.events[1:]
+    assert [e["kind"] for e in read_trace(rec.path)[1:]] == \
+        [e["kind"] for e in seen]
+    unsub()
+    assert rec._subscribers == []
+
+
+def test_unsubscribe_stops_delivery_and_file_unchanged(tmp_path):
+    """File emission is byte-identical with or without subscribers, and
+    an unsubscribed callback never fires again."""
+    def run(path, attach):
+        rec = Recorder(str(path))
+        seen = []
+        unsub = rec.subscribe(seen.append) if attach else None
+        rec.emit("note", message="x")
+        if unsub is not None:
+            unsub()
+            unsub()                               # idempotent
+        rec.emit("note", message="y")
+        rec.close()
+        return seen, path.read_text()
+
+    seen, with_sub = run(tmp_path / "a.jsonl", attach=True)
+    assert [e["message"] for e in seen] == ["x"]
+
+    _, without = run(tmp_path / "b.jsonl", attach=False)
+    strip = lambda s: [json.loads(l) for l in s.splitlines()]  # noqa: E731
+    a, b = strip(with_sub), strip(without)
+    for ea, eb in zip(a, b):
+        ea.pop("t"), eb.pop("t")
+        ea.get("provenance", {}).pop("wall_time", None)
+        eb.get("provenance", {}).pop("wall_time", None)
+    assert a == b

@@ -171,3 +171,196 @@ def test_replicated_decoding_breaks_beyond_f():
                               make_spec("coordinate_median", f=F_REP, n=R),
                               fault_hook=fault_hook)
     assert not np.array_equal(np.asarray(out), np.asarray(clean))
+
+
+# ---------------------------------------------------------------------------
+# the continuous-batching scheduler (repro.serving.sched): every stream's
+# tokens must be the EXACT tokens generate_replicated emits for that
+# request alone — under clean runs, <= f corruption, early commit AND the
+# full-quorum fallback — and request churn must stay inside the batch-
+# bucket compile budget.
+
+from repro.core.tracecount import TRACE_COUNTS  # noqa: E402
+from repro.serving.sched import (ReplicatedScheduler, Request,  # noqa: E402
+                                 SuspicionPolicy, poisson_requests)
+
+
+def _setup(seed=0, n_reqs=3):
+    cfg = get_config("paper-100m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    stack = jax.tree.map(lambda l: jnp.stack([l] * R), params)
+    rng = np.random.default_rng(seed)
+    lens = (4, 6)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=int(lens[i % len(lens)])
+                                        ).astype(np.int32),
+                    max_new_tokens=int(4 + (i % 3)),
+                    arrival=float(i))
+            for i in range(n_reqs)]
+    return cfg, params, stack, reqs
+
+
+def _solo_refs(cfg, params, reqs):
+    """Clean single-model streams — generate_replicated equals these under
+    <= f corruption (pinned above), so they are THE reference."""
+    return [np.asarray(generate(cfg, params,
+                                {"tokens": np.asarray(r.tokens)[None, :]},
+                                r.max_new_tokens))[0].tolist()
+            for r in reqs]
+
+
+def _corrupt2_hook(step, logits):
+    """Replicas {3, 4} (== F_REP) confidently hostile at every step."""
+    sel = jnp.zeros((R,), bool).at[jnp.asarray([3, 4])].set(True)
+    return jnp.where(sel[:, None, None], -7.0 * logits + 3.0, logits)
+
+
+def _run_sched(cfg, stack, spec, reqs, **kw):
+    sched = ReplicatedScheduler(cfg, stack, spec, slot_buckets=(2, 4),
+                                seq_capacity=16, **kw)
+    assert sched.submit_all(reqs) == len(reqs)
+    return sched, sched.run()
+
+
+def test_scheduler_streams_match_solo_decode_clean():
+    """Continuous batching is bit-invisible: requests joining/retiring
+    mid-decode get exactly their solo token streams, on BOTH commit
+    paths — and a clean early-commit run never runs the aggregation."""
+    cfg, params, stack, reqs = _setup()
+    refs = _solo_refs(cfg, params, reqs)
+    spec = make_spec("coordinate_median", f=F_REP, n=R)
+
+    before = TRACE_COUNTS["sched_agree"]
+    _, metrics = _run_sched(cfg, stack, spec,
+                            [Request(r.rid, r.tokens, r.max_new_tokens,
+                                     r.arrival) for r in reqs],
+                            early_commit=True)
+    assert [r.out for r in reqs] != [refs]  # reqs above were not mutated
+    s = metrics.summary()
+    assert s["early_commit_fraction"] == 1.0
+    assert TRACE_COUNTS["sched_agree"] == before  # vote never compiled
+
+    reqs_e = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+              for r in reqs]
+    _run_sched(cfg, stack, spec, reqs_e, early_commit=True)
+    assert [r.out for r in reqs_e] == refs
+
+    reqs_f = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+              for r in reqs]
+    _, mf = _run_sched(cfg, stack, spec, reqs_f, early_commit=False)
+    assert [r.out for r in reqs_f] == refs
+    assert mf.summary()["early_commit_fraction"] == 0.0
+
+
+def test_scheduler_streams_survive_f_corruption_both_paths():
+    """<= f hostile replicas: early commit (f+1 bitwise-consistent honest
+    replicas outvote them) and the deadline fallback (full masked vote)
+    both emit the clean streams."""
+    cfg, params, stack, reqs = _setup(seed=1)
+    refs = _solo_refs(cfg, params, reqs)
+    spec = make_spec("coordinate_median", f=F_REP, n=R)
+
+    for ec in (True, False):
+        rs = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+              for r in reqs]
+        _run_sched(cfg, stack, spec, rs, early_commit=ec,
+                   fault_hook=_corrupt2_hook)
+        assert [r.out for r in rs] == refs, f"early_commit={ec}"
+
+    # stragglers + SLO deadline: honest replicas 0/1 arrive late, so some
+    # steps fall back to the full vote past the deadline — still clean
+    delays = np.ones((1, R))
+    delays[0, :2] = 9.0
+    rs = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+          for r in reqs]
+    _, m = _run_sched(cfg, stack, spec, rs, early_commit=True, deadline=2.0,
+                      delays=delays, fault_hook=_corrupt2_hook)
+    assert [r.out for r in rs] == refs
+    assert m.summary()["token_latency_p95"] >= 9.0  # the SLO miss is real
+
+
+def test_scheduler_early_commit_breaks_beyond_f():
+    """Tightness: f+1 COLLUDING replicas that answer fastest steer an
+    early commit before any honest replica arrives — the f-of-r bound,
+    now with a timing dimension."""
+    cfg, params, stack, reqs = _setup(seed=2, n_reqs=2)
+    refs = _solo_refs(cfg, params, reqs)
+    spec = make_spec("coordinate_median", f=F_REP, n=R)
+
+    def colluders(step, logits):                  # replicas {2,3,4} = f+1
+        sel = jnp.zeros((R,), bool).at[jnp.asarray([2, 3, 4])].set(True)
+        return jnp.where(sel[:, None, None], -7.0 * logits + 3.0, logits)
+
+    delays = np.ones((1, R))
+    delays[0, 2:] = 0.25                          # colluders answer first
+    delays[0, :2] = 5.0                           # honest replicas late
+    rs = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+          for r in reqs]
+    _, m = _run_sched(cfg, stack, spec, rs, early_commit=True, deadline=1.0,
+                      delays=delays, fault_hook=colluders)
+    assert [r.out for r in rs] != refs
+    assert m.summary()["early_commit_fraction"] == 1.0
+
+
+def test_scheduler_churn_within_compile_budget():
+    """200 scheduler steps of Poisson churn under faults: decode compiles
+    at most once per slot bucket, prefill once per distinct prompt
+    length, agreement at most once per batch shape — counted by
+    obs.counters, the acceptance gate for continuous batching."""
+    cfg = get_config("paper-100m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    stack = jax.tree.map(lambda l: jnp.stack([l] * R), params)
+    spec = make_spec("coordinate_median", f=F_REP, n=R)
+    reqs = poisson_requests(1.2, 120.0, seed=7, vocab_size=cfg.vocab_size,
+                            prompt_lens=(4, 6), new_tokens=(2, 3, 4),
+                            max_requests=64)
+    assert len(reqs) >= 30
+    delays = np.ones((8, R))
+    delays[::2, 3] = 3.0                          # a recurring straggler
+
+    before = {k: TRACE_COUNTS[k]
+              for k in ("sched_decode", "sched_prefill", "sched_agree")}
+    buckets = (1, 2, 4)
+    sched = ReplicatedScheduler(
+        cfg, stack, spec, slot_buckets=buckets, seq_capacity=16,
+        early_commit=True, deadline=2.0, fault_hook=_corrupt2_hook,
+        delays=lambda s: delays[s % len(delays)])
+    sched.submit_all(reqs)
+    metrics = sched.run(max_steps=200)
+    assert sched.step_idx == 200 or len(sched.queue) == 0
+    assert metrics.summary()["committed_tokens"] >= 100
+    n_dec = TRACE_COUNTS["sched_decode"] - before["sched_decode"]
+    n_pre = TRACE_COUNTS["sched_prefill"] - before["sched_prefill"]
+    n_agr = TRACE_COUNTS["sched_agree"] - before["sched_agree"]
+    assert n_dec <= len(buckets), n_dec
+    assert n_pre <= 2, n_pre                      # two prompt lengths
+    assert n_agr <= len(buckets) + 1, n_agr       # one per batch shape
+
+
+def test_scheduler_policy_evicts_pinned_replica_and_reinstates():
+    """A persistently hostile replica's selection weight pins at zero;
+    the live suspicion policy evicts it from the voting roster, folds it
+    back after cooloff (it is still hostile, so it is re-evicted), and
+    the streams stay clean throughout."""
+    cfg, params, stack, reqs = _setup(seed=3, n_reqs=6)
+    refs = _solo_refs(cfg, params, reqs)
+    spec = make_spec("coordinate_median", f=F_REP, n=R)
+
+    def hostile4(step, logits):
+        sel = jnp.zeros((R,), bool).at[4].set(True)
+        return jnp.where(sel[:, None, None], -7.0 * logits + 3.0, logits)
+
+    policy = SuspicionPolicy(R, F_REP, window=2, cooloff=3, min_live=3)
+    rs = [Request(r.rid, r.tokens, r.max_new_tokens, r.arrival)
+          for r in reqs]
+    _run_sched(cfg, stack, spec, rs, early_commit=True,
+               fault_hook=hostile4, policy=policy)
+    assert [r.out for r in rs] == refs
+    kinds = [(e["kind"], e["replica"]) for e in policy.events]
+    assert ("evict", 4) in kinds
+    assert ("reinstate", 4) in kinds
+    assert kinds.count(("evict", 4)) >= 2         # re-evicted after return
+    honest = [e for e in policy.events
+              if e["kind"] == "evict" and e["replica"] != 4]
+    assert not honest                             # no honest casualties
