@@ -1,8 +1,19 @@
 """Benchmark 3 — gradient coding (§3.3.3): Draco/DETOX aggregation cost and
 exact-recovery property vs plain mean and a robust filter; reactive-redundancy
-amortized overhead vs check probability q."""
+amortized overhead vs check probability q.
+
+``python benchmarks/bench_coding.py`` writes ``BENCH_coding.json``
+(``--smoke`` for the CI lane) with the two comparisons this PR's decode
+rework targets: the TREE entry point vs the flat ARENA path it now rides
+(same vote law, one Gram + one weighted-sum kernel vs per-leaf work), and
+ELASTIC bucket-packed rosters vs the STATIC full roster (per-bucket
+group tables re-derived host-side — the trim-table trick — so the coded
+decode pays no shape churn).  ``run(quick)`` feeds the
+``benchmarks/run.py`` CSV harness.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -11,6 +22,9 @@ import jax.numpy as jnp
 from repro.core.filters import FILTERS
 from repro.core.redundancy import (detox_aggregate, draco_aggregate,
                                    init_reactive)
+from repro.core.redundancy.coding import (coding_groups,
+                                          flat_draco_aggregate,
+                                          tree_draco_aggregate)
 from repro.core.redundancy.reactive import (check_and_aggregate,
                                             plain_aggregate)
 
@@ -23,15 +37,20 @@ def _timed(fn, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _coded(n, r, d, key, corrupt=True):
+    """(stack, ref): identical replicas per group, 1 fault per full group."""
+    true = jax.random.normal(key, (n // r, d))
+    g = jnp.repeat(true, r, axis=0)
+    if corrupt:
+        g = g.at[jnp.arange(0, n, r)].set(1e5)
+    return g, jnp.mean(true, axis=0)
+
+
 def run(quick: bool = True):
     rows = []
     n, r, d = 16, 4, 65536
     key = jax.random.PRNGKey(0)
-    k = n // r
-    true = jax.random.normal(key, (k, d))
-    g = jnp.repeat(true, r, axis=0)
-    g = g.at[jnp.arange(0, n, r)].set(1e5)        # 1 fault per group
-    ref = jnp.mean(true, axis=0)
+    g, ref = _coded(n, r, d, key)
 
     jd = jax.jit(lambda x: draco_aggregate(x, r))
     err = float(jnp.max(jnp.abs(jd(g) - ref)))
@@ -40,11 +59,15 @@ def run(quick: bool = True):
                      lambda: jd(g).block_until_ready()), 1),
                  "derived": f"recovery_err={err:.2e};exact={err < 1e-4}"})
 
+    # detox needs a REAL bucket hierarchy: k = n2/r = 9 voted gradients
+    # -> b = 3 buckets of 3 at f=1 (k=4 now raises — zero breakdown)
+    n2 = 36
+    g2, ref2 = _coded(n2, r, d, key)
     jdx = jax.jit(lambda x: detox_aggregate(x, r, f=1))
-    err = float(jnp.max(jnp.abs(jdx(g) - ref)))
-    rows.append({"bench": "coding", "name": f"detox_r{r}_n{n}_d{d}",
+    err = float(jnp.max(jnp.abs(jdx(g2) - ref2)))
+    rows.append({"bench": "coding", "name": f"detox_r{r}_n{n2}_d{d}",
                  "us_per_call": round(_timed(
-                     lambda: jdx(g).block_until_ready()), 1),
+                     lambda: jdx(g2).block_until_ready()), 1),
                  "derived": f"recovery_err={err:.2e}"})
 
     jm = jax.jit(lambda x: FILTERS["mean"](x, 0))
@@ -54,6 +77,7 @@ def run(quick: bool = True):
                  "derived": "baseline (no fault tolerance)"})
 
     # reactive redundancy: amortized cost model  E[cost] = plain + q * check
+    true = jax.random.normal(key, (n // r, d))    # same draw as _coded
     t_plain = _timed(lambda: plain_aggregate(
         g, init_reactive(n)).block_until_ready())
     state = init_reactive(n)
@@ -67,3 +91,75 @@ def run(quick: bool = True):
                         f"amortized_overhead={q * t_check / t_plain:.2f}x"),
         })
     return rows
+
+
+def main(out: str = "BENCH_coding.json", smoke: bool = False, seed: int = 0):
+    n, r = 16, 4
+    d = 16384 if smoke else 262144
+    iters = 5 if smoke else 20
+    key = jax.random.PRNGKey(seed)
+    g, ref = _coded(n, r, d, key)
+    rows = []
+
+    # --- tree vs arena: the tree entry point RIDES the arena (FlatPlan
+    # ravel -> one Gram + one masked weighted sum -> unravel), so the gap
+    # is pure ravel/unravel overhead and the outputs agree per column
+    jflat = jax.jit(lambda x: flat_draco_aggregate(x, r))
+    vec = jflat(g)
+    err = float(jnp.max(jnp.abs(vec - ref)))
+    rows.append({"section": "decode_path", "name": "arena", "n": n, "r": r,
+                 "d": d, "us_per_call": round(_timed(
+                     lambda: jflat(g).block_until_ready(), iters), 1),
+                 "recovery_err": err})
+    split = 3 * d // 4
+    tree = {"w": g[:, :split].reshape(n, -1, 64), "b": g[:, split:]}
+    jtree = jax.jit(lambda t: tree_draco_aggregate(t, r))
+    outt = jtree(tree)
+    parity = float(max(
+        jnp.max(jnp.abs(outt["w"].reshape(-1) - vec[:split])),
+        jnp.max(jnp.abs(outt["b"] - vec[split:]))))
+    rows.append({"section": "decode_path", "name": "tree", "n": n, "r": r,
+                 "d": d, "us_per_call": round(_timed(
+                     lambda: jax.block_until_ready(jtree(tree)), iters), 1),
+                 "tree_vs_arena_err": parity})
+
+    # --- elastic vs static roster: bucket-packed decodes with per-bucket
+    # group tables (ragged trailer allowed); the static full roster is the
+    # b = n row
+    for b in (n, 12, 10):
+        groups = coding_groups(b, r, allow_ragged=True)
+        xb = g[:b]
+        jb = jax.jit(lambda x, gr=groups: flat_draco_aggregate(
+            x, r, groups=gr))
+        rows.append({
+            "section": "roster", "name": "static" if b == n else "bucket",
+            "n": n, "live": b, "r": r, "d": d,
+            "ragged_trailer": bool(b % r),
+            "us_per_call": round(_timed(
+                lambda: jb(xb).block_until_ready(), iters), 1)})
+
+    from repro.obs.provenance import provenance
+    results = {"bench": "coding", "n": n, "r": r, "d": d, "seed": seed,
+               "smoke": bool(smoke), "rows": rows,
+               "provenance": provenance()}
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"{'section':<12}{'name':<8}{'live':>5}{'us/call':>10}  notes")
+    for row in rows:
+        notes = "; ".join(f"{k}={v}" for k, v in row.items()
+                          if k not in ("section", "name", "n", "live", "r",
+                                       "d", "us_per_call"))
+        print(f"{row['section']:<12}{row['name']:<8}"
+              f"{row.get('live', row['n']):>5}"
+              f"{row['us_per_call']:>10.1f}  {notes}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_coding.json")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.out, args.smoke, args.seed)

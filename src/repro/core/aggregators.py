@@ -74,6 +74,19 @@ Registered rules — capabilities, impls, masked kernels, elastic, telemetry
     the Byzantine budget per bucket so breakdown bounds track the live
     roster; a static int ``f`` is carried unchanged across buckets.
 
+    Coding x elastic: the draco/detox repetition decoders
+    (:mod:`repro.core.redundancy.coding`) sit UPSTREAM of this registry —
+    they vote over coded groups, then (detox) feed bucket means into a
+    registered rule above.  Their group tables are the same trim-table
+    trick as the per-bucket plans: ``coding_groups(n, r)`` is an
+    lru-cached read-only host array re-derived per elastic bucket at
+    respecialize time (``allow_ragged=True`` admits a smaller trailing
+    group when ``r`` does not divide the bucket), so coded aggregation
+    under membership churn stays within the same ``len(buckets)``
+    compile budget and rides the flat arena
+    (:func:`~repro.core.redundancy.coding.flat_draco_aggregate`)
+    bit-for-bit with the tree entry point.
+
     ``m-pls`` (masked-selection column): the rule's masked/weighted
     pallas path is a FUSED imputation-free kernel — mean-imputation
     happens inside the sort tile (repro.kernels.masked) for the

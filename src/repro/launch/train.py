@@ -29,6 +29,21 @@ def main():
     ap.add_argument("--attack-scale", type=float, default=None)
     ap.add_argument("--momentum-alpha", type=float, default=0.0)
     ap.add_argument("--draco-r", type=int, default=0)
+    # client sampling: the roster as a CHOSEN schedule (simulator
+    # SamplingPolicy) — the spec goes elastic so the aggregation runs the
+    # sampled roster's per-bucket plans, and --record logs the membership
+    # deltas per step
+    ap.add_argument("--sample-policy", default="none",
+                    choices=["none", "uniform", "staleness", "contribution"],
+                    help="per-round client sampling into the roster")
+    ap.add_argument("--sample-m", type=int, default=0,
+                    help="clients sampled per round (default n_agents//2)")
+    ap.add_argument("--sample-round", type=int, default=1,
+                    help="versions per sampling round")
+    ap.add_argument("--elastic-buckets", type=int, default=3,
+                    help="elastic-n bucket count used with --sample-policy")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="async quorum (default: the full live roster)")
     ap.add_argument("--poison-labels", action="store_true")
     ap.add_argument("--regime", default="iid",
                     choices=["iid", "noniid", "parallel"])
@@ -48,9 +63,10 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.core.aggregators import make_spec
+    from repro.core.aggregators import elastic, make_spec
     from repro.data import SyntheticLM
     from repro.optim import adamw, constant, diminishing, sgd
+    from repro.simulator import SamplingPolicy, SimConfig
     from repro.training import ByzantineConfig, train_loop
 
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
@@ -67,9 +83,22 @@ def main():
     if args.attack_scale is not None:
         ah = {"scale": args.attack_scale}
     # the spec is built ONCE here (hyper validated, static plans warmed)
-    # and passed through every layer — no string re-dispatch downstream
-    spec = make_spec(args.filter, f=args.f, impl=args.impl,
-                     n=args.n_agents)
+    # and passed through every layer — no string re-dispatch downstream.
+    # Under --sample-policy the spec goes elastic: the sampled roster
+    # packs into per-bucket plans (and the coded paths regroup per
+    # bucket), compiling at most once per bucket.
+    sim = None
+    n_spec = args.n_agents
+    if args.sample_policy != "none":
+        m = args.sample_m if args.sample_m > 0 else max(args.n_agents // 2, 1)
+        sim = SimConfig(
+            faults=(SamplingPolicy(m=m, policy=args.sample_policy,
+                                   round_len=args.sample_round),),
+            quorum=args.quorum, seed=args.seed)
+        n_spec = elastic(args.n_agents, buckets=args.elastic_buckets)
+    elif args.quorum is not None:
+        sim = SimConfig(quorum=args.quorum, seed=args.seed)
+    spec = make_spec(args.filter, f=args.f, impl=args.impl, n=n_spec)
     bz = ByzantineConfig(
         n_agents=args.n_agents, f=args.f, aggregator=spec,
         attack=args.attack, attack_hyper=ah,
@@ -84,7 +113,7 @@ def main():
     params, history = train_loop(
         cfg, bz, opt, ds, steps=args.steps, seed=args.seed,
         ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 2, 1),
-        poison_labels=args.poison_labels, recorder=recorder)
+        poison_labels=args.poison_labels, sim=sim, recorder=recorder)
 
     if recorder is not None:
         recorder.close()

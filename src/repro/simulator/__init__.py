@@ -7,8 +7,8 @@ Layers (each usable on its own):
 """
 from repro.simulator.faults import (Churn, CrashRecover, FaultTrace, Join,
                                     MessageDrop, Partition, PermanentCrash,
-                                    Rejoin, Straggler, compile_schedule,
-                                    no_faults)
+                                    Rejoin, SamplingPolicy, Straggler,
+                                    compile_schedule, no_faults)
 from repro.simulator.events import (AsyncTrace, poisson_arrival_times,
                                     simulate_arrivals)
 from repro.simulator.async_loop import (SimConfig, async_train_loop,
@@ -17,7 +17,7 @@ from repro.simulator.async_loop import (SimConfig, async_train_loop,
 
 __all__ = [
     "Straggler", "CrashRecover", "PermanentCrash", "MessageDrop",
-    "Partition", "Join", "Rejoin", "Churn",
+    "Partition", "Join", "Rejoin", "Churn", "SamplingPolicy",
     "FaultTrace", "compile_schedule", "no_faults",
     "AsyncTrace", "simulate_arrivals", "poisson_arrival_times",
     "SimConfig", "async_train_loop", "make_async_step", "plan_arrivals",

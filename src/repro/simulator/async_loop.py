@@ -22,9 +22,12 @@ Pipeline per server step t (one parameter version):
      compiles ONCE per shape regardless of the fault schedule, and the
      threaded ``agg_state`` pytree passes through the kernel path
      untouched; if the quorum was missed (stragglers/crashes) the loop can
-     fall back to Draco-style gradient coding
-     (:func:`repro.core.redundancy.coding.tree_draco_aggregate` with the
-     delivery mask);
+     fall back to Draco-style gradient coding over the same (n, P) arena
+     (:func:`repro.core.redundancy.coding.flat_draco_aggregate` with the
+     delivery mask; mixed-dtype trees decode leaf-wise) — under elastic
+     membership the code regroups the PACKED live rows with the bucket's
+     :func:`~repro.core.redundancy.coding.coding_groups` table, derived
+     once per bucket at step-build time;
   4. the server optimizer applies the update, creating version t+1.
 
 The synchronous loop is the degenerate case: with no faults every trace row
@@ -59,7 +62,9 @@ from repro.core.flat import FlatPlan
 from repro.obs.counters import count_trace
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
-from repro.core.redundancy.coding import tree_draco_aggregate
+from repro.core.redundancy.coding import (coding_groups,
+                                          flat_draco_aggregate,
+                                          tree_draco_aggregate)
 from repro.data import label_flip
 from repro.models import init_params, loss_fn
 from repro.optim import apply_updates
@@ -153,17 +158,22 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
     if bz.agg_dtype:
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
     spec = spec.respecialize(bucket) if bucket is not None else spec
-    if bucket is not None and (bz.draco_r > 0 or fallback_r > 0):
-        raise NotImplementedError(
-            "gradient coding is positional over the static roster — "
-            "draco_r/coded_fallback_r are not supported with elastic "
-            "membership buckets")
     stateful = spec.stateful
+    # roster-aware gradient coding: the group table is derived HERE, at
+    # step-build (respecialize) time, from the bucket capacity — lru-cached
+    # per (n, r) like the trim tables, baked into the traced step as a
+    # static constant.  The static path validates n % r == 0 (ValueError);
+    # elastic buckets may carry a ragged trailing group.
+    r_code = bz.draco_r if bz.draco_r > 0 else fallback_r
+    n_agg = bucket if bucket is not None else bz.n_agents
+    groups = (coding_groups(n_agg, r_code, allow_ragged=bucket is not None)
+              if r_code > 0 else None)
     # zero-copy flat pipeline: dense-stack impls ravel the delivered
     # gradients ONCE per step into an (n, P) arena at the communication
-    # boundary and unravel once at optimizer-apply; the coded paths stay
-    # on trees (the repetition code votes leaf-wise over groups)
-    use_flat = (spec.flat_capable and bz.draco_r == 0 and fallback_r == 0)
+    # boundary and unravel once at optimizer-apply; the coded paths ride
+    # the same arena (the vote is Gram-based, the application a one-hot
+    # weighted sum — kernels.pairwise/wsum)
+    use_flat = spec.flat_capable
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
@@ -194,10 +204,22 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
 
         mask = contrib_w > 0.0
         plan = FlatPlan.for_tree(sent)
+        if bucket is not None:
+            w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
         if bz.draco_r > 0:
             # coded regime: the repetition code already handles partial
-            # delivery (vote among delivered group members)
-            agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask)
+            # delivery (vote among delivered group members); under elastic
+            # membership the PACKED live rows are regrouped by the
+            # bucket's table (exact in the parallel regime — every agent
+            # computes the same shard).  tree_draco_aggregate rides the
+            # (n, P) arena internally for uniform-dtype trees.
+            if bucket is not None:
+                sent_b = jax.tree.map(lambda l: l[roster_idx], sent)
+                agg = tree_draco_aggregate(sent_b, bz.draco_r,
+                                           mask=w_b > 0.0, groups=groups)
+            else:
+                agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask,
+                                           groups=groups)
         elif use_flat and plan.uniform_dtype is not None:
             # ONE ravel into the (n, P) arena at the communication
             # boundary; the quorum mask and staleness discounts enter the
@@ -207,12 +229,17 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             # without each leaf's native rounding (not bitwise).
             arena = plan.ravel(sent)
             if bucket is not None:
-                w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
-                vec = spec.aggregate_flat(arena[roster_idx],
-                                          mask=w_b > 0.0, weights=w_b)
+                rows, rmask, rw = arena[roster_idx], w_b > 0.0, w_b
             else:
-                vec = spec.aggregate_flat(arena, mask=mask,
-                                          weights=contrib_w)
+                rows, rmask, rw = arena, mask, contrib_w
+            vec = spec.aggregate_flat(rows, mask=rmask, weights=rw)
+            if fallback_r > 0:
+                # quorum missed: decode the repetition code over the SAME
+                # arena rows (both candidates are (P,) fp32 — one select,
+                # one unravel)
+                coded = flat_draco_aggregate(rows, fallback_r, mask=rmask,
+                                             groups=groups)
+                vec = jnp.where(use_coded, coded, vec)
             agg = plan.unravel(vec)
         elif bucket is not None:
             # elastic membership: pack the live rows into the bucket's
@@ -220,14 +247,20 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             # out, so the rule runs its per-bucket (n, f) plan over the
             # live roster only
             sent_b = jax.tree.map(lambda l: l[roster_idx], sent)
-            w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
             agg = spec.aggregate(sent_b, mask=w_b > 0.0, weights=w_b,
                                  state=agg_state if stateful else None)
+            if fallback_r > 0:
+                coded = tree_draco_aggregate(sent_b, fallback_r,
+                                             mask=w_b > 0.0, groups=groups)
+                agg = jax.tree.map(
+                    lambda a, c: jnp.where(use_coded, c.astype(a.dtype), a),
+                    agg, coded)
         else:
             agg = spec.aggregate(sent, mask=mask, weights=contrib_w,
                                  state=agg_state if stateful else None)
             if fallback_r > 0:
-                coded = tree_draco_aggregate(sent, fallback_r, mask=mask)
+                coded = tree_draco_aggregate(sent, fallback_r, mask=mask,
+                                             groups=groups)
                 agg = jax.tree.map(
                     lambda a, c: jnp.where(use_coded, c.astype(a.dtype), a),
                     agg, coded)
@@ -244,7 +277,6 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             if bz.draco_r > 0:
                 sel = particip          # per-group votes: delivery shares
             elif bucket is not None:
-                w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
                 stack_b = (arena[roster_idx]
                            if use_flat and plan.uniform_dtype is not None
                            else jax.tree.map(lambda l: l[roster_idx], sent))
@@ -252,6 +284,9 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                                                weights=w_b, state=st)
                 sel = jnp.zeros((n,), jnp.float32).at[roster_idx].add(
                     jnp.where(roster_valid, sel_b, 0.0))
+                if fallback_r > 0:
+                    # quorum missed -> the coded vote aggregated instead
+                    sel = jnp.where(use_coded, particip, sel)
             else:
                 stack = (arena
                          if use_flat and plan.uniform_dtype is not None
@@ -321,10 +356,13 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
                 f"n_max={el.n_max} but the config declares "
                 f"n_agents={n}")
         if bz.draco_r > 0 or sim.coded_fallback_r > 0:
-            raise NotImplementedError(
-                "gradient coding is positional over the static roster — "
-                "draco_r/coded_fallback_r are not supported with elastic "
-                "membership")
+            # warm the per-bucket coding group tables up front (lru-cached
+            # with the step plans, same trick as the trim tables) and
+            # surface a bad r at BUILD time, not mid-run
+            r_code = bz.draco_r if bz.draco_r > 0 else sim.coded_fallback_r
+            coding_groups(n, r_code)           # master roster: r must | n
+            for b in el.buckets:
+                coding_groups(int(b), r_code, allow_ragged=True)
         if roster is None:
             # membership never changes: run the concrete n_max spec (the
             # elastic master is bit-for-bit its own n_max bucket)

@@ -29,7 +29,9 @@ gradient computation):
     (bounded staleness); the agent re-dispatches fresh.
 
 Elastic membership (``trace.roster`` — :class:`~repro.simulator.faults.Join`
-/ ``Rejoin`` / ``Churn`` schedules): an agent absent from the roster can
+/ ``Rejoin`` / ``Churn`` schedules, and the *chosen* rosters a
+:class:`~repro.simulator.faults.SamplingPolicy` emits — client sampling is
+just another membership schedule here): an agent absent from the roster can
 neither dispatch, arrive, nor count toward quorum.  A delivery in flight
 when its sender leaves the roster is discarded at the server (the agent is
 gone); the agent re-dispatches fresh at its next membership version.  The

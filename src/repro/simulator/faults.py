@@ -20,12 +20,15 @@ cluster simulator (:mod:`repro.simulator.events`) and the p2p DGD loop
                    (``None`` unless a :class:`Partition` spec is present);
   ``roster[v, i]`` agent i is a MEMBER of the cluster at version v (``None``
                    unless a membership spec — :class:`Join`, :class:`Rejoin`,
-                   :class:`Churn` — is present).  Membership is a stronger
-                   notion than liveness: a crashed agent is still expected
-                   back and still counts toward the deployment's (n, f)
-                   bookkeeping, while a non-member can neither dispatch,
-                   arrive, nor count toward quorum (elastic membership —
-                   agents joining/rejoining, not just leaving).
+                   :class:`Churn`, :class:`SamplingPolicy` — is present).
+                   Membership is a stronger notion than liveness: a crashed
+                   agent is still expected back and still counts toward the
+                   deployment's (n, f) bookkeeping, while a non-member can
+                   neither dispatch, arrive, nor count toward quorum
+                   (elastic membership — agents joining/rejoining, not just
+                   leaving).  :class:`SamplingPolicy` flips the roster from
+                   *observed* churn to a *chosen* schedule: federated
+                   client sampling emitted through the same machinery.
 
 Everything is sampled from one ``numpy.random.default_rng(seed)`` in spec
 order, so a schedule is a pure function of (specs, n, horizon, seed) — the
@@ -195,6 +198,66 @@ class Churn:
 
 
 @dataclass(frozen=True)
+class SamplingPolicy:
+    """Client-sampling policy (federated §4): the roster as a CHOSEN
+    schedule, not an observed fault — the same move the federated
+    client-sampling literature makes on top of gradient coding's
+    roster-aware groups.
+
+    Each round of ``round_len`` versions the server selects ``m`` agents
+    from those still in the roster at the round's first version:
+
+      uniform       — iid uniform without replacement (FedAvg sampling)
+      staleness     — P(i) ∝ 1 / mean latency over the round: prefer FAST
+                      agents (staleness-aware participation)
+      contribution  — P(i) ∝ expected delivery rate over the round (alive
+                      and not dropped): prefer RELIABLE agents
+
+    Scores are read from the already-composed ``alive``/``drop``/``delay``
+    arrays, so place the policy AFTER the fault specs it should react to
+    (specs apply in order).  The choice is INTERSECTED into the roster:
+    agents a prior membership spec removed are never chosen, and a later
+    ``Churn`` can still evict a chosen agent.  ``temperature`` flattens
+    (>1) or sharpens (<1) the preference.  Counts as a membership spec —
+    compiling a schedule containing one allocates a roster, which the
+    flight recorder logs as per-step membership deltas."""
+    m: int
+    policy: str = "uniform"             # uniform | staleness | contribution
+    round_len: int = 1
+    temperature: float = 1.0
+
+    def apply(self, rng, alive, drop, delay, adj, roster):
+        if self.m <= 0:
+            raise ValueError(f"SamplingPolicy needs m >= 1, got m={self.m}")
+        if self.policy not in ("uniform", "staleness", "contribution"):
+            raise KeyError(self.policy)
+        if self.round_len <= 0:
+            raise ValueError(
+                f"SamplingPolicy needs round_len >= 1, got {self.round_len}")
+        h, n = roster.shape
+        for t0 in range(0, h, self.round_len):
+            t1 = min(t0 + self.round_len, h)
+            avail = np.flatnonzero(roster[t0])
+            if avail.size == 0:
+                continue
+            if self.policy == "uniform":
+                score = np.ones(avail.size)
+            elif self.policy == "staleness":
+                score = 1.0 / np.maximum(
+                    delay[t0:t1, avail].mean(axis=0), 1e-9)
+            else:
+                score = (alive[t0:t1, avail]
+                         & ~drop[t0:t1, avail]).mean(axis=0) + 1e-3
+            p = score ** (1.0 / max(self.temperature, 1e-6))
+            p = p / p.sum()
+            chosen = rng.choice(avail, size=min(self.m, avail.size),
+                                replace=False, p=p)
+            keep = np.zeros(n, bool)
+            keep[chosen] = True
+            roster[t0:t1] &= keep[None, :]
+
+
+@dataclass(frozen=True)
 class Partition:
     """Network partition during versions [start, end): only links within the
     same group survive.  Agents not named in any group form one implicit
@@ -215,8 +278,8 @@ class Partition:
 
 
 FAULT_SPECS = (Straggler, CrashRecover, PermanentCrash, MessageDrop,
-               Partition, Join, Rejoin, Churn)
-MEMBERSHIP_SPECS = (Join, Rejoin, Churn)
+               Partition, Join, Rejoin, Churn, SamplingPolicy)
+MEMBERSHIP_SPECS = (Join, Rejoin, Churn, SamplingPolicy)
 
 
 # ---------------------------------------------------------------------------

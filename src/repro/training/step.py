@@ -34,7 +34,7 @@ from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.flat import FlatPlan
 from repro.core.momentum import worker_momentum
 from repro.obs.counters import count_trace
-from repro.core.redundancy.coding import tree_draco_aggregate
+from repro.core.redundancy.coding import coding_groups, tree_draco_aggregate
 from repro.models import loss_fn
 from repro.optim import apply_updates
 
@@ -69,6 +69,13 @@ class ByzantineConfig:
     # and the parameter dims are sharded over BOTH mesh axes before the
     # coordinate-wise filter (beyond-paper collective schedule):
     reshard: bool = False
+
+    def __post_init__(self):
+        # the repetition code's shape contract, checked at CONFIG time —
+        # the historical bare assert inside the aggregate vanished under
+        # python -O and let a bad r reach a silently wrong reshape
+        if self.draco_r:
+            coding_groups(self.n_agents, self.draco_r)
 
     def resolve_spec(self) -> AggregatorSpec:
         """The aggregator actually used by the training loops: the explicit
@@ -182,20 +189,29 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
         # the pallas path, like gather, accumulates fp32 and ignores it)
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
     if bucket is not None:
-        if bz.group_size > 1 or bz.reshard or bz.draco_r > 0:
+        if bz.group_size > 1 or bz.reshard:
             raise NotImplementedError(
-                "group_size/reshard/draco_r are positional over the "
-                "static roster — not supported with elastic membership")
+                "group_size/reshard are positional over the static "
+                "roster — not supported with elastic membership")
         spec = spec.respecialize(bucket)
     if bz.group_size > 1:
         k = bz.n_agents // bz.group_size
         spec = spec.with_f_capped(max((k - 1) // 2, 0))
+    # roster-aware gradient coding: the bucket's group table is derived
+    # HERE, at step-build (respecialize) time — lru-cached per (n, r) like
+    # the trim tables, a static constant of the traced step.  The packed
+    # live rows are regrouped positionally (exact in the parallel regime).
+    groups = (coding_groups(bucket if bucket is not None else bz.n_agents,
+                            bz.draco_r, allow_ragged=bucket is not None)
+              if bz.draco_r > 0 else None)
     # zero-copy flat pipeline: dense-stack impls ravel the gradients ONCE
     # into an (n, P) arena right after the communication boundary and
     # unravel ONCE at optimizer-apply — the aggregation dispatch never
-    # touches a pytree.  reshard stays on the tree path: its whole point
-    # is a leaf-wise sharding constraint the flattening would erase.
-    use_flat = spec.flat_capable and bz.draco_r == 0 and not bz.reshard
+    # touches a pytree.  The coded path rides the same arena (inside
+    # tree_draco_aggregate for uniform-dtype trees).  reshard stays on the
+    # tree path: its whole point is a leaf-wise sharding constraint the
+    # flattening would erase.
+    use_flat = spec.flat_capable and not bz.reshard
 
     def agent_loss(p, agent_batch):
         return loss_fn(cfg, p, agent_batch)
@@ -236,7 +252,14 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                 grads, _reshard_specs(grads, mesh_sizes))
         plan = FlatPlan.for_tree(grads)
         if bz.draco_r > 0:
-            agg = tree_draco_aggregate(grads, bz.draco_r)
+            if bucket is not None:
+                # elastic membership: regroup the packed live rows with
+                # the bucket's table; pad slots are masked out of the vote
+                live = jax.tree.map(lambda l: l[roster_idx], grads)
+                agg = tree_draco_aggregate(live, bz.draco_r,
+                                           mask=roster_valid, groups=groups)
+            else:
+                agg = tree_draco_aggregate(grads, bz.draco_r, groups=groups)
         elif use_flat and plan.uniform_dtype is not None:
             # zero-copy: ONE ravel into the (n, P) arena here, the
             # aggregation runs on the arena, and the single unravel below
@@ -282,9 +305,12 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
             n = bz.n_agents
             if bz.draco_r > 0:
                 # the repetition code votes per group: per-agent
-                # attribution is uniform participation
-                sel = jnp.full((n,), 1.0 / n, jnp.float32)
-                m_full = jnp.ones((n,), bool)
+                # attribution is uniform participation over the live roster
+                m_full = (jnp.zeros((n,), bool).at[roster_idx].max(
+                    roster_valid) if bucket is not None
+                    else jnp.ones((n,), bool))
+                mf = m_full.astype(jnp.float32)
+                sel = mf / jnp.maximum(jnp.sum(mf), 1.0)
             elif bucket is not None:
                 stack = (arena[roster_idx]
                          if use_flat and plan.uniform_dtype is not None

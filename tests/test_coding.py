@@ -2,10 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.redundancy import (detox_aggregate, draco_aggregate,
                                    init_reactive)
-from repro.core.redundancy.coding import majority_vote, tree_draco_aggregate
+from repro.core.redundancy.coding import (coding_groups, draco_assignment,
+                                          flat_draco_aggregate, majority_vote,
+                                          tree_draco_aggregate)
 from repro.core.redundancy.reactive import (check_and_aggregate,
                                             plain_aggregate)
 
@@ -50,9 +53,72 @@ def test_tree_draco_matches_dense():
 
 
 def test_detox_hierarchical():
-    g, ref = coded_stack(n=12, r=3)
+    # n=27, r=3 -> k=9 voted gradients -> b=3 buckets: a REAL hierarchy
+    # (the historical n=12 shape silently auto-shrank to b=1, i.e. a plain
+    # mean with zero breakdown — that shape now raises, see below).
+    g, ref = coded_stack(n=27, r=3)
+    clean, _ = coded_stack(n=27, r=3, corrupt_per_group=0)
     out = detox_aggregate(g, r=3, f=1)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+    # within the vote radius, corruption must not move the output at all
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(detox_aggregate(clean, r=3, f=1)),
+                               atol=1e-4)
+    # and the robust filter over bucket means stays near the true mean
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0.5)
+
+
+def test_detox_rejects_zero_breakdown_bucketing():
+    # k=7, f=1: 7 % b forces the auto-shrink down to b=1 < 2f+1 = 3 — a
+    # single bucket mean has ZERO breakdown, so this must refuse loudly.
+    g, _ = coded_stack(n=21, r=3)
+    with pytest.raises(ValueError, match="2f\\+1"):
+        detox_aggregate(g, r=3, f=1)
+
+
+def test_group_size_must_divide_agent_count():
+    g = jnp.ones((10, 8))
+    with pytest.raises(ValueError, match="n=10.*r=3"):
+        draco_aggregate(g, 3)
+    with pytest.raises(ValueError, match="n=10"):
+        draco_assignment(10, 3)
+    with pytest.raises(ValueError, match="group size"):
+        coding_groups(10, 4)
+    # elastic buckets admit a smaller trailing group instead
+    ragged = coding_groups(10, 4, allow_ragged=True)
+    np.testing.assert_array_equal(np.asarray(ragged),
+                                  [0, 0, 0, 0, 1, 1, 1, 1, 2, 2])
+
+
+def test_vote_tolerance_not_attacker_inflatable():
+    # Regression for the scale = max(sq) vote law: a huge-norm inflater in
+    # group 0 used to raise the agreement tolerance GLOBALLY, letting a
+    # colluding steerer in group 1 (honest + delta with ||delta||^2 within
+    # tol * max_sq) tie the vote and win the slot-order tie-break.  The
+    # per-group median-norm scale bounds steering by the honest norms.
+    d = 20
+    true = jax.random.normal(KEY, (2, d))
+    g = jnp.repeat(true, 3, axis=0)            # n=6, r=3
+    g = g.at[0].set(1e6)                       # group-0 inflater
+    delta = jnp.full((d,), np.sqrt(1e5))       # tiny vs tol * max_sq
+    g = g.at[3].set(true[1] + delta)           # group-1 steerer, slot 0
+    out = draco_aggregate(g, 3)
+    # honest majorities must win both groups: exact recovery of the mean
+    # of (true[0], true[1]) up to fp32 — under the old law the steered
+    # row wins group 1 and the error is ~ delta/2 per coordinate (~158).
+    err = float(jnp.max(jnp.abs(out - jnp.mean(true, axis=0))))
+    assert err < 1e-3, err
+
+
+def test_tree_rides_the_flat_arena_bitwise():
+    from repro.core.flat import FlatPlan
+    g, _ = coded_stack(n=12, r=3, d=24)
+    tree = {"w": g.reshape(12, 6, 4), "b": g[:, :4]}
+    plan = FlatPlan.for_tree(tree)
+    out = tree_draco_aggregate(tree, 3)
+    ref = plan.unravel(flat_draco_aggregate(plan.ravel(tree), 3))
+    for key in out:
+        np.testing.assert_array_equal(np.asarray(out[key]),
+                                      np.asarray(ref[key]))
 
 
 def test_reactive_detects_and_removes_fixed_byzantine():

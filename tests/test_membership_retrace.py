@@ -70,6 +70,31 @@ def test_async_loop_churn_compiles_at_most_once_per_bucket():
     assert n_sync <= 1, f"sync fast path retraced {n_sync} times"
 
 
+@pytest.mark.parametrize("mode", ["draco", "fallback"])
+def test_coded_async_churn_compiles_at_most_once_per_bucket(mode):
+    """Coded aggregation under membership churn: the per-bucket group
+    tables (coding_groups — the trim-table trick) are host constants
+    folded into each bucket's trace, so a 200-step churn run with
+    draco_r > 0 (or the quorum-miss coded fallback) stays within the
+    same <= len(buckets) compile budget as the uncoded loops."""
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N,
+                     per_agent_batch=1, regime="parallel")
+    bz = ByzantineConfig(n_agents=N, f=2, aggregator=elastic_spec(),
+                         draco_r=2 if mode == "draco" else 0)
+    sim = SimConfig(faults=CHURN, seed=4,
+                    quorum=4 if mode == "fallback" else None,
+                    coded_fallback_r=2 if mode == "fallback" else 0)
+    before = TRACE_COUNTS["async_step"]
+    _, h = async_train_loop(CFG, bz, adamw(constant(1e-3)), ds,
+                            steps=STEPS, sim=sim, log_every=STEPS,
+                            log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"])
+    n_async = TRACE_COUNTS["async_step"] - before
+    assert n_async <= len(BUCKETS), (
+        f"coded ({mode}) async loop retraced {n_async} times over "
+        f"{len(BUCKETS)} buckets")
+
+
 def test_sync_step_churn_compiles_at_most_once_per_bucket():
     """training/step.py threads the roster through the jitted synchronous
     step: 200 churn steps, one compile per bucket."""

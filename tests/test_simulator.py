@@ -304,6 +304,53 @@ def test_masked_draco_averages_surviving_groups():
 
 
 # ---------------------------------------------------------------------------
+# client sampling: the roster as a CHOSEN schedule
+
+
+def test_sampling_policy_emits_membership_schedule():
+    from repro.simulator import SamplingPolicy
+    tr = compile_schedule((SamplingPolicy(m=3, round_len=4),), 8, 20, seed=5)
+    assert tr.roster is not None
+    for t0 in range(0, 20, 4):
+        rows = tr.roster[t0:t0 + 4]
+        assert (rows == rows[0]).all()          # constant within the round
+        assert rows[0].sum() == 3               # exactly m sampled
+    # seed-deterministic, and the seed actually matters
+    tr2 = compile_schedule((SamplingPolicy(m=3, round_len=4),), 8, 20,
+                           seed=5)
+    np.testing.assert_array_equal(tr.roster, tr2.roster)
+    assert not np.array_equal(
+        tr.roster, compile_schedule((SamplingPolicy(m=3, round_len=4),),
+                                    8, 20, seed=6).roster)
+
+
+def test_sampling_policy_composes_by_intersection():
+    from repro.simulator import SamplingPolicy
+    tr = compile_schedule((Rejoin(agents=(0,), leave_at=4, rejoin_at=16),
+                           SamplingPolicy(m=5, round_len=2)), 8, 20, seed=0)
+    # an agent a prior membership spec removed is never chosen ...
+    assert not tr.roster[4:16, 0].any()
+    # ... and each round still samples min(m, available)
+    assert (tr.roster.sum(axis=1) == 5).all()
+
+
+def test_sampling_policy_through_async_loop():
+    from repro.core.aggregators import elastic, frac, make_spec
+    from repro.simulator import SamplingPolicy
+    ds = SyntheticLM(vocab_size=64, seq_len=16, n_agents=8,
+                     per_agent_batch=2)
+    spec = make_spec("trimmed_mean", f=frac(0.25),
+                     n=elastic(8, buckets=(4, 6, 8)))
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec)
+    sim = SimConfig(faults=(SamplingPolicy(m=4, policy="contribution"),),
+                    seed=0)
+    _, h = async_train_loop(CFG, bz, OPT(), ds, steps=20, log_every=10,
+                            sim=sim, **SILENT)
+    assert np.isfinite(h[-1]["loss"])
+    assert h[-1]["arrived"] <= 4              # only sampled clients deliver
+
+
+# ---------------------------------------------------------------------------
 # p2p DGD over time-varying (partitioned / crashing) graphs
 
 
