@@ -1,0 +1,171 @@
+"""Benchmark 8 — compressed robust exchange (PR 9): wire-bytes, decode
+cost and robustness of the quantized arena (int8 / fp8 + per-row scale
+sidecar), the 1-bit sign vote, and the sparse masked weighting.
+
+``python benchmarks/bench_compression.py`` writes
+``BENCH_compression.json`` (``--smoke`` for the CI lane) with three
+sections:
+
+  * wire      — bytes/row of the exchange at the model point (n=16):
+                fp32 arena vs sign (1 bit/coordinate), int8 and fp8
+                (1 byte/coordinate + one f32 scale per row).  The CI
+                lane asserts the sign and int8 ratios (32x / ~4x).
+  * latency   — jitted arena-aggregate cost: the f32 path vs
+                quantize_rows + the scaled in-tile-dequant kernels vs
+                the sign vote on raw codes.
+  * training  — final-loss delta vs the uncompressed exchange under the
+                large_value attack, through the real async loop (the
+                quantized flat pipeline end to end).
+
+``run(quick)`` feeds the ``benchmarks/run.py`` CSV harness with the wire
+model and the latency comparison.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregators import make_spec
+from repro.core.flat import QUANT_DTYPES, quantize_rows
+
+N = 16
+
+
+def _timed(fn, iters=20):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def wire_rows(p: int):
+    """bytes/row of one agent's exchange for a P-coordinate arena."""
+    base = 4 * p                                   # fp32, no sidecar
+    rows = [{"section": "wire", "name": "fp32", "n": N, "P": p,
+             "bytes_per_row": base, "ratio": 1.0}]
+    rows.append({"section": "wire", "name": "sign", "n": N, "P": p,
+                 "bytes_per_row": math.ceil(p / 8),
+                 "ratio": round(base / math.ceil(p / 8), 2)})
+    for qdt in sorted(QUANT_DTYPES):
+        b = p + 4                                  # 1B codes + f32 scale
+        rows.append({"section": "wire", "name": qdt, "n": N, "P": p,
+                     "bytes_per_row": b, "ratio": round(base / b, 2)})
+    return rows
+
+
+def latency_rows(p: int, iters: int, seed: int):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (N, p)) * 2.0
+    spec = make_spec("trimmed_mean", f=2, impl="pallas", n=N)
+    sign = make_spec("sign_sgd", f=2, impl="pallas", n=N)
+    rows = []
+
+    jf32 = jax.jit(lambda x: spec.aggregate_flat(x))
+    rows.append({"section": "latency", "name": "trimmed_mean_fp32",
+                 "n": N, "P": p, "us_per_call": round(_timed(
+                     lambda: jf32(g).block_until_ready(), iters), 1)})
+
+    for qdt in sorted(QUANT_DTYPES):
+        dt = jnp.dtype(qdt)
+
+        @jax.jit
+        def jq(x, dt=dt):
+            codes, qs = quantize_rows(x, dt)
+            return spec.aggregate_flat(codes, scale=qs)
+
+        rows.append({"section": "latency",
+                     "name": f"trimmed_mean_{qdt}",
+                     "n": N, "P": p, "us_per_call": round(_timed(
+                         lambda: jq(g).block_until_ready(), iters), 1),
+                     "note": "quantize + in-tile-dequant kernel"})
+
+    jsign = jax.jit(lambda x: sign.aggregate_flat(x))
+    rows.append({"section": "latency", "name": "sign_sgd", "n": N, "P": p,
+                 "us_per_call": round(_timed(
+                     lambda: jsign(g).block_until_ready(), iters), 1),
+                 "note": "majority sign vote"})
+    return rows
+
+
+def training_rows(steps: int, seed: int):
+    """Final-loss deltas vs the uncompressed exchange under large_value,
+    through the async loop's quantized flat pipeline."""
+    from repro.configs import get_config
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant
+    from repro.simulator import SimConfig, async_train_loop
+    from repro.training import ByzantineConfig
+
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=32,
+                                                 dtype="float32")
+    rows, base_loss = [], None
+    cases = [("trimmed_mean_fp32", "trimmed_mean", None),
+             ("trimmed_mean_int8", "trimmed_mean", "int8"),
+             ("sign_sgd_fp32", "sign_sgd", None)]
+    for name, rule, agg_dtype in cases:
+        ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=8,
+                         per_agent_batch=1)
+        bz = ByzantineConfig(n_agents=8, f=2, attack="large_value",
+                             aggregator=make_spec(rule, f=2, n=8),
+                             agg_dtype=agg_dtype)
+        _, h = async_train_loop(cfg, bz, adamw(constant(1e-3)), ds,
+                                steps=steps, sim=SimConfig(seed=seed),
+                                log_every=steps, log_fn=lambda *_: None)
+        loss = float(h[-1]["loss"])
+        if base_loss is None:
+            base_loss = loss
+        rows.append({"section": "training", "name": name, "steps": steps,
+                     "attack": "large_value", "final_loss": round(loss, 4),
+                     "loss_delta_vs_fp32": round(loss - base_loss, 4)})
+    return rows
+
+
+def run(quick: bool = True):
+    p = 2 ** 14 if quick else 2 ** 18
+    out = []
+    for r in wire_rows(p):
+        out.append({"bench": "compression", "name": f"wire_{r['name']}",
+                    "us_per_call": 0.0,
+                    "derived": (f"bytes_per_row={r['bytes_per_row']};"
+                                f"ratio={r['ratio']}x")})
+    for r in latency_rows(p, iters=5 if quick else 20, seed=0):
+        out.append({"bench": "compression", "name": r["name"],
+                    "us_per_call": r["us_per_call"],
+                    "derived": r.get("note", "fp32 arena baseline")})
+    return out
+
+
+def main(out: str = "BENCH_compression.json", smoke: bool = False,
+         seed: int = 0):
+    p = 2 ** 14 if smoke else 2 ** 20
+    iters = 5 if smoke else 20
+    steps = 12 if smoke else 40
+    rows = wire_rows(p) + latency_rows(p, iters, seed) \
+        + training_rows(steps, seed)
+
+    from repro.obs.provenance import provenance
+    results = {"bench": "compression", "n": N, "P": p, "seed": seed,
+               "smoke": bool(smoke), "rows": rows,
+               "provenance": provenance()}
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"{'section':<10}{'name':<22}  notes")
+    for row in rows:
+        notes = "; ".join(f"{k}={v}" for k, v in row.items()
+                          if k not in ("section", "name"))
+        print(f"{row['section']:<10}{row['name']:<22}  {notes}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_compression.json")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.out, args.smoke, args.seed)

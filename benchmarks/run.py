@@ -7,6 +7,7 @@
   5. roofline               — §Roofline from the dry-run artifacts
   6. async                  — fault-injection simulator / async training
   7. serving                — continuous-batching replicated-decode scheduler
+  8. compression            — compressed robust exchange (sign / int8 / fp8)
 
 Prints ``name,us_per_call,derived`` CSV.  --full for the long versions.
 """
@@ -24,9 +25,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_async, bench_coding, bench_convergence,
-                            bench_filters, bench_p2p, bench_roofline,
-                            bench_serving)
+    from benchmarks import (bench_async, bench_coding, bench_compression,
+                            bench_convergence, bench_filters, bench_p2p,
+                            bench_roofline, bench_serving)
     benches = {
         "table2_filters": bench_filters.run,
         "attack_defence_matrix": bench_convergence.run,
@@ -35,6 +36,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "async": bench_async.run,
         "serving": bench_serving.run,
+        "compression": bench_compression.run,
     }
     only = set(args.only.split(",")) if args.only else None
 

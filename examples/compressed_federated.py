@@ -1,0 +1,111 @@
+"""Compressed robust exchange (PR 9): sign-SGD and int8 arenas under a
+Byzantine federation.
+
+A federation of 8 clients trains a smoke-scale LM while two clients are
+Byzantine (``large_value`` gradient attack) and the network drops
+messages.  Four exchanges on the SAME fault schedule:
+
+  1. mean/fp32          — undefended full-precision baseline (breaks);
+  2. trimmed_mean/fp32  — robust but full-precision (4 B/coordinate);
+  3. trimmed_mean/int8  — the quantized flat arena: per-row symmetric
+                          int8 codes + one f32 scale, dequantized INSIDE
+                          the aggregation tile (~4x fewer wire bytes);
+  4. sign_sgd/fp32      — 1-bit sign exchange, exact integer majority
+                          vote at the server (~32x fewer wire bytes).
+
+The last run records a flight-recorder trace (repro.obs): compression
+does not blind the telemetry — delivery, staleness and selection-weight
+read-outs ride the pre-quantization arena, so the report renders the
+same tables it would for a full-precision run.
+
+Run:  PYTHONPATH=src python examples/compressed_federated.py [--trace-dir DIR]
+"""
+import argparse
+import math
+import os
+
+from repro.configs import get_config
+from repro.core.aggregators import make_spec
+from repro.data import SyntheticLM
+from repro.obs import Recorder
+from repro.obs.report import render_report
+from repro.optim import adamw, constant
+from repro.simulator import MessageDrop, SimConfig, Straggler, \
+    async_train_loop
+from repro.training import ByzantineConfig
+
+STEPS = 40
+N, F = 8, 2
+FAULTS = (Straggler(dist="lognormal", scale=0.5),
+          MessageDrop(p=0.1))
+
+cfg = get_config("paper-100m-smoke").replace(vocab_size=64, dtype="float32")
+
+
+def wire_bytes(p, kind):
+    """bytes/round/client for a P-coordinate update."""
+    return {"fp32": 4 * p, "int8": p + 4, "sign": math.ceil(p / 8)}[kind]
+
+
+RUNS = {
+    "mean / fp32 (undefended)": dict(
+        bz=ByzantineConfig(n_agents=N, f=F, attack="large_value",
+                           aggregator=make_spec("mean", f=F, n=N)),
+        wire="fp32"),
+    "trimmed_mean / fp32": dict(
+        bz=ByzantineConfig(n_agents=N, f=F, attack="large_value",
+                           aggregator=make_spec("trimmed_mean", f=F, n=N)),
+        wire="fp32"),
+    "trimmed_mean / int8 arena": dict(
+        bz=ByzantineConfig(n_agents=N, f=F, attack="large_value",
+                           aggregator=make_spec("trimmed_mean", f=F, n=N),
+                           agg_dtype="int8"),
+        wire="int8"),
+    "sign_sgd / 1-bit vote": dict(
+        bz=ByzantineConfig(n_agents=N, f=F, attack="large_value",
+                           aggregator=make_spec("sign_sgd", f=F, n=N)),
+        wire="sign"),
+}
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-dir", default=os.path.dirname(__file__) or ".",
+                help="where the recorded trace JSONL/Perfetto land")
+args = ap.parse_args()
+
+os.makedirs(args.trace_dir, exist_ok=True)
+trace_path = os.path.join(args.trace_dir, "compressed_federated_trace.jsonl")
+last_name = list(RUNS)[-1]
+
+print(f"{'exchange':28s} {'final loss':>10s} {'wire B/coord':>13s} "
+      f"{'vs fp32':>8s}")
+for name, kw in RUNS.items():
+    recorder = None
+    if name == last_name:                  # flight-record the sign run
+        recorder = Recorder(trace_path,
+                            meta={"example": "compressed_federated",
+                                  "strategy": name})
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=N,
+                     per_agent_batch=2)
+    _, hist = async_train_loop(cfg, kw["bz"], adamw(constant(3e-3)), ds,
+                               STEPS,
+                               sim=SimConfig(faults=FAULTS, quorum=6,
+                                             max_staleness=3, seed=0),
+                               log_every=STEPS, log_fn=lambda *_: None,
+                               recorder=recorder)
+    per_coord = wire_bytes(1024, kw["wire"]) / 1024
+    ratio = 4.0 / per_coord
+    print(f"{name:28s} {hist[-1]['loss']:10.4f} {per_coord:13.3f} "
+          f"{ratio:7.1f}x")
+    if recorder is not None:
+        perfetto = recorder.dump_chrome_trace(
+            os.path.join(args.trace_dir, "compressed_federated_trace.json"))
+        recorder.close()
+        print(f"\nflight-recorder trace -> {trace_path}"
+              f"\nperfetto export       -> {perfetto}\n")
+        print(render_report(recorder.events))
+
+print("\nthe robust compressed exchanges hold the attack off at a fraction "
+      "of the wire bytes (the undefended mean stays stuck at init loss); "
+      "the flight recorder keeps full delivery/staleness telemetry "
+      "despite the 1-bit exchange — sign_sgd's vote weighs every arrived "
+      "row, so its sel_rate read-out is participation, not selection.")

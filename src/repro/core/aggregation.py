@@ -30,7 +30,8 @@ from repro.core.aggregators import (                       # noqa: F401
     tree_unravel_like, tree_weighted_sum, tree_where_agents, warn_once)
 
 # legacy capability sets — now derived, kept only for external importers
-COORDWISE = {n for n, d in REGISTRY.items() if d.caps.coordwise}
+COORDWISE = {n for n, d in REGISTRY.items()
+             if d.caps.coordwise and "table2" in d.tags}
 WEIGHTED = {n for n, d in REGISTRY.items()
             if d.caps.weight_decomposable and "table2" in d.tags}
 ITERATIVE = {n for n, d in REGISTRY.items()

@@ -26,31 +26,47 @@ through ``**hyper``.  This module replaces all of that with one object:
     available kernel and proven against the gather path by
     tests/test_kernels_parity.py.
 
-Registered rules — capabilities, impls, masked kernels, elastic, telemetry
-    ==================  =========================  ==================  ======  ==================  =========
-    rule                caps                       impls               m-pls   elastic             telemetry
-    ==================  =========================  ==================  ======  ==================  =========
-    mean                weight_decomposable        fused, gather       --      yes                 exact w
-    krum                weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
-    multi_krum          weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
-    m_krum              weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w
-    mda                 weight_decomp, pairwise    fused, gather, pls  yes     yes (subset tables) exact w
-    cge                 weight_decomp, pairwise    fused, gather, pls  yes     yes (keep counts)   exact w
-    cgc                 weight_decomposable        fused, gather       --      yes                 exact w
-    zeno                weight_decomp, stateful    fused, gather       --      yes (state n-free)  exact w
-    zeno_pp             weight_decomp, stateful    custom (fused)      --      yes (state n-free)  exact w
-    coordinate_median   coordwise                  fused, gather, pls  yes     yes                 particip.
-    trimmed_mean        coordwise                  fused, gather, pls  yes     yes (trim counts)   particip.
-    phocas              coordwise                  fused, gather       --      yes                 particip.
-    mean_around_median  coordwise                  fused, gather       --      yes                 particip.
-    geometric_median    iterative                  fused, gather       --      yes                 particip.
-    rfa                 iterative                  fused, gather       --      yes                 particip.
-    median_of_means     iterative                  fused, gather       --      yes                 particip.
-    bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)    theta sel
-    clipped             wrapper                    delegates to inner  --      via inner           via inner
-    bucketed            wrapper                    delegates to inner  --      via inner           particip.
-    staleness_disc.     wrapper                    delegates to inner  --      via inner           via inner
-    ==================  =========================  ==================  ======  ==================  =========
+Registered rules — caps, impls, masked kernels, elastic, telemetry, compression
+    ==================  =========================  ==================  ======  ==================  =========  =========
+    rule                caps                       impls               m-pls   elastic             telemetry  compress
+    ==================  =========================  ==================  ======  ==================  =========  =========
+    mean                weight_decomposable        fused, gather       --      yes                 exact w    q (deq)
+    krum                weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w    q (deq)
+    multi_krum          weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w    q (deq)
+    m_krum              weight_decomp, pairwise    fused, gather, pls  yes     yes (nbr counts)    exact w    q (deq)
+    mda                 weight_decomp, pairwise    fused, gather, pls  yes     yes (subset tables) exact w    q (deq)
+    cge                 weight_decomp, pairwise    fused, gather, pls  yes     yes (keep counts)   exact w    q (deq)
+    cgc                 weight_decomposable        fused, gather       --      yes                 exact w    q (deq)
+    zeno                weight_decomp, stateful    fused, gather       --      yes (state n-free)  exact w    --
+    zeno_pp             weight_decomp, stateful    custom (fused)      --      yes (state n-free)  exact w    --
+    coordinate_median   coordwise                  fused, gather, pls  yes     yes                 particip.  q in-tile
+    trimmed_mean        coordwise                  fused, gather, pls  yes     yes (trim counts)   particip.  q in-tile
+    phocas              coordwise                  fused, gather       --      yes                 particip.  q (deq)
+    mean_around_median  coordwise                  fused, gather       --      yes                 particip.  q (deq)
+    geometric_median    iterative                  fused, gather       --      yes                 particip.  q (deq)
+    rfa                 iterative                  fused, gather       --      yes                 particip.  q (deq)
+    median_of_means     iterative                  fused, gather       --      yes                 particip.  q (deq)
+    bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)    theta sel  q (deq)
+    sign_sgd            coordwise                  fused, gather, pls  yes     yes                 particip.  1-bit vote
+    sparse_mean         coordwise (custom+flat)    flat, gather law    yes     yes                 particip.  sparse
+    clipped             wrapper                    delegates to inner  --      via inner           via inner  --
+    bucketed            wrapper                    delegates to inner  --      via inner           particip.  --
+    staleness_disc.     wrapper                    delegates to inner  --      via inner           via inner  --
+    ==================  =========================  ==================  ======  ==================  =========  =========
+
+    ``compress`` (the compressed robust exchange layer, ROADMAP item 3):
+    *1-bit vote* — ``sign_sgd`` exchanges sign(g) (1 bit/coordinate) and
+    aggregates by per-coordinate majority vote; *sparse* —
+    ``sparse_mean`` treats a zero coordinate as NOT SENT and averages
+    each coordinate over ``(coord_sent) * weight`` with explicit-zero
+    guards (the fed_dropout_avg shape); *q in-tile* — int8 / fp8 arena
+    codes (``repro.core.flat.quantize_rows`` per-row scale sidecar,
+    ``aggregate_flat(..., scale=)``) are dequantized INSIDE the Pallas
+    tile — no dequantized (n, P) copy is ever materialized (jaxpr-gated
+    by tests/test_kernels_parity.py); *q (deq)* — quantized arenas are
+    accepted but dequantized at engine level before the rule runs (a
+    one-time ``warn_once`` names the rule); stateful rules reject
+    quantized arenas by construction (no flat path).
 
     ``telemetry`` (:meth:`AggregatorSpec.selection_weights`, consumed by
     :mod:`repro.obs`): *exact w* — the rule's own (n,) application
@@ -422,6 +438,10 @@ class AggregatorDef:
     tree_fn: Optional[Callable] = None     # (spec, grads, state) -> tree
     custom_fn: Optional[Callable] = None   # (spec, grads, mask, w, state)
     masked_fn: Optional[Callable] = None   # masked-path override
+    flat_fn: Optional[Callable] = None     # (spec, stack, mask, w, state,
+    #                                        qscale) -> (P,) — rules whose
+    #                                        flat law is NOT impute-then-
+    #                                        scale (per-coordinate weights)
     gather_state_fn: Optional[Callable] = None  # (spec, state) -> extra hyper
     init_state_fn: Optional[Callable] = None    # (spec, proto) -> state
     update_state_fn: Optional[Callable] = None  # (spec, state, agg) -> state
@@ -436,7 +456,7 @@ def register_aggregator(name: str, *, caps: AggregatorCaps,
                         hyper: tuple = (), impl_keys: tuple = (),
                         state_keys: tuple = (), gather: tuple = (),
                         dense_fn=None, weights_fn=None, tree_fn=None,
-                        masked_fn=None, gather_state_fn=None,
+                        masked_fn=None, flat_fn=None, gather_state_fn=None,
                         init_state=None, update_state=None,
                         is_wrapper: bool = False, tags: tuple = ()):
     """Register an aggregation rule.  Returns a DECORATOR — apply it to
@@ -460,7 +480,8 @@ def register_aggregator(name: str, *, caps: AggregatorCaps,
             impl_keys=frozenset(impl_keys), state_keys=frozenset(state_keys),
             gather_keys=frozenset(gather), dense_fn=dense_fn,
             weights_fn=weights_fn, tree_fn=tree_fn, custom_fn=custom_fn,
-            masked_fn=masked_fn, gather_state_fn=gather_state_fn,
+            masked_fn=masked_fn, flat_fn=flat_fn,
+            gather_state_fn=gather_state_fn,
             init_state_fn=init_state, update_state_fn=update_state,
             is_wrapper=is_wrapper, tags=tags)
         return custom_fn
@@ -697,11 +718,15 @@ class AggregatorSpec:
         tree engine: their arithmetic is defined on leaves, and flattening
         would silently change reduce orders."""
         d = get_aggregator_def(self.name)
-        return (not d.is_wrapper and d.custom_fn is None
-                and d.masked_fn is None and not self.stateful
+        if d.is_wrapper or self.stateful:
+            return False
+        if d.flat_fn is not None:
+            return True
+        return (d.custom_fn is None and d.masked_fn is None
                 and self.impl in ("gather", "pallas"))
 
-    def aggregate_flat(self, stack, mask=None, weights=None, state=None):
+    def aggregate_flat(self, stack, mask=None, weights=None, state=None,
+                       scale=None):
         """Aggregate a pre-raveled (n, P) gradient arena -> (P,) fp32.
 
         The flat-pipeline twin of :meth:`aggregate`: the caller raveled
@@ -712,20 +737,31 @@ class AggregatorSpec:
         path's impute-then-scale law, bit-for-bit with the tree engine
         for uniform-dtype trees; ``impl="pallas"`` runs the fused masked
         kernels (imputation inside the tile — the (n, P) imputed copy is
-        never materialized)."""
+        never materialized).
+
+        ``scale``: per-row (n,) fp32 dequantization sidecar for a
+        QUANTIZED arena (``stack`` then holds int8 / fp8 exchange codes
+        from :func:`repro.core.flat.quantize_rows`; row i decodes as
+        ``stack[i].astype(f32) * scale[i]``).  Kernelized coordinate
+        rules dequantize INSIDE the tile (no dequantized (n, P) copy is
+        materialized — jaxpr-gated by tests/test_kernels_parity.py);
+        other rules dequantize at engine level with a one-time
+        warning."""
         d = get_aggregator_def(self.name)
         if not self.flat_capable:
             raise ValueError(
                 f"{self.describe()} (impl={self.impl}) has no flat path — "
                 "check spec.flat_capable before routing the arena")
+        if d.flat_fn is not None:
+            return d.flat_fn(self, stack, mask, weights, state, scale)
         if mask is None and weights is None:
-            return _flat_sync_vec(self, d, stack, state)
+            return _flat_sync_vec(self, d, stack, state, scale)
         if not d.caps.masked_capable:
             raise ValueError(f"{self.name} does not support masked "
                              f"aggregation")
         if mask is None:
             mask = jnp.ones((stack.shape[0],), bool)
-        return _flat_masked_vec(self, d, stack, mask, weights, state)
+        return _flat_masked_vec(self, d, stack, mask, weights, state, scale)
 
     # -- aggregation telemetry (repro.obs) --------------------------------
     def selection_weights(self, grads, mask=None, weights=None, state=None):
@@ -765,11 +801,11 @@ class AggregatorSpec:
         return agg, self._telemetry(grads, mask, weights, state)
 
     def aggregate_flat_with_telemetry(self, stack, mask=None, weights=None,
-                                      state=None):
+                                      state=None, scale=None):
         """:meth:`aggregate_flat` plus the telemetry struct (see
         :meth:`aggregate_with_telemetry`)."""
         vec = self.aggregate_flat(stack, mask=mask, weights=weights,
-                                  state=state)
+                                  state=state, scale=scale)
         return vec, self._telemetry(stack, mask, weights, state)
 
     def _telemetry(self, grads, mask, weights, state):
@@ -1004,17 +1040,26 @@ def _masked_prelude(grads, mask, weights):
 
 def _masked_aggregate(spec, d, grads, mask, weights, state):
     """Robust aggregation over a *varying subset* of agents with per-agent
-    weights.  The rules are fixed-n: absent rows are *imputed* with the
-    weighted mean of the arrived rows, so they sit at the current consensus
-    and cannot shift any order statistic outward, and the stack keeps one
-    jit shape across rounds.  Weights fold in exactly where each rule class
-    admits them:
+    weights.  The rules are fixed-n (one jit shape across rounds); the
+    masked law differs by rule class:
 
-      * weight-decomposable — rule weights on the imputed stack, times the
-        per-agent weights, renormalized (imputed rows carry the average
-        arrived weight so a selection landing on them is neutral);
-      * coordinate-wise / iterative — rule on the imputed stack, scaled by
-        the mean weight of arrived rows (a staleness-adaptive step size).
+      * coordinate-wise order statistics and the sign vote
+        (_ARRIVED_STAT_RULES) — the statistic over the ARRIVED rows only:
+        absent rows enter the sort as +inf sentinels and the kept rank
+        window follows the traced arrived count, then the result is
+        scaled by the mean weight of arrived rows (a staleness-adaptive
+        step size).  Imputing the absent rows at the delivered mean is
+        NOT robust — the mean is attack-contaminated, so the ghost rows
+        land inside the trim window and one straggler lets the attack
+        through;
+      * weight-decomposable — rule weights on the mean-imputed stack,
+        times the per-agent weights, renormalized (imputed rows carry the
+        average arrived weight so a selection landing on them is
+        neutral); the imputed ghosts are outliers to the selection
+        distances, not candidates inside a trust window;
+      * remaining coordinate-wise / iterative — rule on the mean-imputed
+        stack, scaled by the mean arrived weight (a known robustness gap
+        under attack + absence — see ROADMAP).
 
     With mask all-True and weights all-one this reduces to the synchronous
     path up to exact-arithmetic no-ops.
@@ -1030,6 +1075,11 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
     the fused kernel (one exchange dtype per stack) and falls back to the
     imputed path below with a one-time warning."""
     mask, w, cnt, tot = _masked_prelude(grads, mask, weights)
+    # tot is eps-clamped: with EVERY delivered weight zero (possible under
+    # sparse/dropout weighting) tot/cnt would be eps-garbage — the update
+    # must be an explicit zero instead (tot == sum(w) whenever sum(w) > 0,
+    # so the guard is bit-free on every live path)
+    scale = jnp.where(jnp.sum(w) > 0, tot / cnt, 0.0)
     if spec.impl == "pallas":
         from repro.kernels import (pallas_masked_aggregate,
                                    pallas_masked_supported)
@@ -1041,14 +1091,41 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
                 spec.name, stack, mask.astype(jnp.float32), w / tot,
                 spec.f, spec.hyper)
             agg = tree_unravel_like(vec, grads)
-            scale = tot / cnt
             return jax.tree.map(
                 lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
                 agg)
+        if pallas_masked_supported(spec.name) and d.caps.coordwise:
+            # mixed-dtype tree, coordinate-wise rule: per-coordinate
+            # statistics never mix columns, so per-DTYPE sub-arenas still
+            # get the fused kernel — group leaves by dtype, launch one
+            # kernel per uniform segment, slice back per leaf.  Bitwise
+            # the uniform path per segment (columns are independent), so
+            # this equals the gather reference leaf for leaf.
+            flat_leaves, treedef = jax.tree.flatten(grads)
+            n = flat_leaves[0].shape[0]
+            by_dt: dict = {}
+            for i, l in enumerate(flat_leaves):
+                by_dt.setdefault(jnp.dtype(l.dtype), []).append(i)
+            outs: list = [None] * len(flat_leaves)
+            for dt, idxs in by_dt.items():
+                seg = jnp.concatenate(
+                    [flat_leaves[i].reshape(n, -1) for i in idxs], axis=1)
+                vec = pallas_masked_aggregate(
+                    spec.name, seg, mask.astype(jnp.float32), w / tot,
+                    spec.f, spec.hyper)
+                off = 0
+                for i in idxs:
+                    sz = flat_leaves[i][0].size
+                    outs[i] = (vec[off:off + sz].astype(dt)
+                               .astype(jnp.float32)
+                               * scale).astype(dt).reshape(
+                                   flat_leaves[i].shape[1:])
+                    off += sz
+            return jax.tree.unflatten(treedef, outs)
         if pallas_masked_supported(spec.name):
-            # the fused masked kernel needs one exchange dtype; a mixed
-            # tree silently paid the imputed (n, d) copy before this
-            # notice existed — same estimator, just the slow path
+            # pairwise kernels need one exchange dtype for the WHOLE row
+            # (the Gram couples every column); a mixed tree falls back to
+            # the imputed tree path — same estimator, just the slow path
             dts = tuple(sorted({jnp.dtype(l.dtype).name for l in leaves}))
             warn_once(
                 ("masked-pallas-mixed-dtype", spec.name, dts),
@@ -1057,6 +1134,18 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
                 "tree-level imputed path (materializes the imputed "
                 "(n, d) stack).  Cast the leaves to one exchange dtype "
                 "to restore the fused kernel.")
+    if d.caps.coordwise and spec.name in _ARRIVED_STAT_RULES:
+        # arrived-window law (see _ARRIVED_STAT_RULES), leaf-wise:
+        # coordinate statistics never couple columns, so per-leaf equals
+        # the arena path column for column — and the same double rounding
+        # through the leaf dtype keeps it bit-for-bit with the kernels
+        def _leaf(l):
+            vec = _arrived_coord_vec(
+                spec, l.reshape(l.shape[0], -1).astype(jnp.float32), mask)
+            out = vec.astype(l.dtype)
+            return (out.astype(jnp.float32) * scale).astype(
+                l.dtype).reshape(l.shape[1:])
+        return jax.tree.map(_leaf, grads)
     wn = w / tot
     mean_sel = tree_weighted_sum(grads, wn)
     imputed = tree_where_agents(
@@ -1077,7 +1166,7 @@ def _masked_aggregate(spec, d, grads, mask, weights, state):
         fw = fw * (jnp.sum(rule_w) / jnp.maximum(jnp.sum(fw), 1e-30))
         return tree_weighted_sum(imputed, fw)
     agg = _sync_aggregate(spec, d, imputed, state)
-    scale = tot / cnt                      # <= 1, == 1 when all fresh
+    # scale <= 1, == 1 when all fresh; exact 0 when no weight was delivered
     return jax.tree.map(
         lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), agg)
 
@@ -1092,11 +1181,63 @@ def _flat_f32(stack):
     return stack if stack.dtype == jnp.float32 else stack.astype(jnp.float32)
 
 
-def _flat_sync_vec(spec, d, stack, state):
+def _flat_dequant(spec, stack, qscale):
+    """Engine-level dequantization fallback for rules without an in-tile
+    scaled kernel: materializes the (n, P) f32 copy, with a one-time
+    notice (the kernelized coordinate rules never come here — their
+    dequant happens inside the tile)."""
+    from repro.core.flat import dequantize_rows
+    if spec.impl == "pallas":
+        warn_once(
+            ("flat-scaled-dequant", spec.name),
+            f"{spec.name}: no scaled (quantized-arena) kernel — "
+            "dequantizing the (n, P) arena at engine level before "
+            "aggregation.  Only the kernelized coordinate rules "
+            "(coordinate_median, trimmed_mean, sign_sgd, sparse_mean) "
+            "dequantize inside the tile.")
+    return dequantize_rows(stack, qscale)
+
+
+# the coordinate-wise rules whose masked law is the order statistic (or
+# sign vote) over the ARRIVED rows only — absent rows are +inf sort
+# sentinels, never statistics.  Mean-imputing them (the pairwise family's
+# law) is not robust: the delivered mean is attack-contaminated, so the
+# ghost rows land inside the trim window and one straggler lets the attack
+# through.  sparse_mean is arrived-only by construction (absent rows carry
+# zero weight); phocas/mean_around_median still ride the imputed fallback
+# (their closest-to-statistic windows are not count-indexable — see
+# ROADMAP).
+_ARRIVED_STAT_RULES = ("coordinate_median", "trimmed_mean", "sign_sgd")
+
+
+def _arrived_coord_vec(spec, xf, mask):
+    """(n, P) fp32 stack -> (P,) fp32 masked coordinate-wise law: the
+    statistic over arrived rows, one arithmetic copy shared with the
+    fused kernels (kernels/ref.py) so every impl is bit-for-bit."""
+    from repro.kernels import ref
+    if spec.name == "sign_sgd":
+        return ref.masked_sign_vote_ref(xf, mask)
+    if spec.name == "coordinate_median":
+        return ref.masked_stat_ref(xf, mask, None, "median")
+    b = trim_count(xf.shape[0], spec.f, spec.hp("beta"))
+    return ref.masked_stat_ref(xf, mask, None, "trimmed_mean", b=b)
+
+
+def _flat_sync_vec(spec, d, stack, state, qscale=None):
     """(n, P) arena -> (P,) fp32: the dense sync engine without the
     per-call ravel/unravel (bit-for-bit with `_sync_aggregate` on the
     equivalent tree — the cast-then-concat and concat-then-cast orders
-    produce identical fp32 bits)."""
+    produce identical fp32 bits).  ``qscale``: per-row dequant sidecar
+    of a quantized arena (kernelized coordinate rules dequantize inside
+    the tile; everything else pays an engine-level dequant copy)."""
+    if qscale is not None and spec.impl == "pallas":
+        from repro.kernels import (pallas_scaled_aggregate,
+                                   pallas_scaled_supported)
+        if pallas_scaled_supported(spec.name):
+            return pallas_scaled_aggregate(spec.name, stack, qscale,
+                                           spec.f, spec.hyper)
+    if qscale is not None:
+        stack = _flat_dequant(spec, stack, qscale)
     if spec.impl == "pallas":
         from repro.kernels import pallas_aggregate
         return pallas_aggregate(spec.name, _flat_f32(stack), spec.f,
@@ -1105,23 +1246,43 @@ def _flat_sync_vec(spec, d, stack, state):
     return d.dense_fn(_flat_f32(stack), spec.f, **hyper)
 
 
-def _flat_masked_vec(spec, d, stack, mask, weights, state):
-    """Masked/weighted flat path: the gather law (impute at the delivered
-    weighted mean, run the plain rule, scale by tot/cnt) on the arena.
-    ``impl="pallas"`` + a registered masked kernel fuses the imputation
-    into the kernel tiles — the imputed (n, P) copy is never
-    materialized and mask/weights stay traced operands."""
+def _flat_masked_vec(spec, d, stack, mask, weights, state, qscale=None):
+    """Masked/weighted flat path on the arena: the arrived-window law for
+    the coordinate-wise rules (_ARRIVED_STAT_RULES — absent rows are +inf
+    sort sentinels, never statistics), the impute-at-delivered-mean law
+    for everything else, each scaled by tot/cnt.  ``impl="pallas"`` + a
+    registered masked kernel fuses the whole law into the kernel tiles —
+    no masked (n, P) copy is ever materialized and mask/weights stay
+    traced operands.  With ``qscale`` (quantized arena) dequantization
+    happens in-tile for the scaled kernels and the law runs in the
+    dequantized fp32 domain."""
     mask, w, cnt, tot = _masked_prelude(stack, mask, weights)
-    scale = tot / cnt
+    # all-zero delivered weights must yield an explicit zero update, not
+    # an eps-scaled garbage row (tot is clamped at 1e-30); tot == sum(w)
+    # whenever sum(w) > 0, so the guard changes no live-path bits
+    scale = jnp.where(jnp.sum(w) > 0, tot / cnt, 0.0)
+    out_dtype = jnp.float32 if qscale is not None else stack.dtype
 
     def scaled(vec):
         # the tree engine rounds the fp32 aggregate to the LEAF dtype
         # before applying the scale (unravel, then per-leaf
         # (l.astype(f32) * scale).astype(l.dtype)); replicate that
         # double rounding through the arena dtype so non-f32 uniform
-        # trees stay bit-for-bit (a no-op round trip for f32 arenas)
-        return vec.astype(stack.dtype).astype(jnp.float32) * scale
+        # trees stay bit-for-bit (a no-op round trip for f32 arenas).
+        # Quantized arenas skip the round trip: their virtual dtype is
+        # fp32 (rounding the f32 aggregate to int8 would destroy it)
+        return vec.astype(out_dtype).astype(jnp.float32) * scale
 
+    if qscale is not None and spec.impl == "pallas":
+        from repro.kernels import (pallas_scaled_masked_aggregate,
+                                   pallas_scaled_supported)
+        if pallas_scaled_supported(spec.name):
+            vec = pallas_scaled_masked_aggregate(
+                spec.name, stack, qscale, mask.astype(jnp.float32),
+                w / tot, spec.f, spec.hyper)
+            return scaled(vec)
+    if qscale is not None:
+        stack = _flat_dequant(spec, stack, qscale)
     if spec.impl == "pallas":
         from repro.kernels import (pallas_masked_aggregate,
                                    pallas_masked_supported)
@@ -1130,6 +1291,10 @@ def _flat_masked_vec(spec, d, stack, mask, weights, state):
                 spec.name, stack, mask.astype(jnp.float32), w / tot,
                 spec.f, spec.hyper)
             return scaled(vec)
+    if d.caps.coordwise and spec.name in _ARRIVED_STAT_RULES:
+        # arrived-window law (see _ARRIVED_STAT_RULES): shared arithmetic
+        # with the fused kernels, so gather/pallas stay bit-for-bit
+        return scaled(_arrived_coord_vec(spec, _flat_f32(stack), mask))
     wn = w / tot
     xf = _flat_f32(stack)
     mean_sel = jnp.sum(xf * wn[:, None], axis=0).astype(stack.dtype)
@@ -1408,6 +1573,11 @@ def _leafwise(spec, grads, state):
         elif name == "mean_around_median":
             med = jnp.median(x.astype(jnp.float32), axis=0)
             out = _mean_closest_nd(x, med, n - f)
+        elif name == "sign_sgd":
+            # majority vote: the ±1/0 votes sum EXACTLY in fp32 for
+            # n < 2^24, so this equals the dense/pallas paths bitwise
+            out = jnp.sign(jnp.sum(jnp.sign(x).astype(jnp.float32),
+                                   axis=0))
         else:
             raise KeyError(name)
         return out.astype(l.dtype)
@@ -1572,6 +1742,11 @@ _register_plain(
     impl_keys=("native_dtype",),
     dense_fn=D.mean_around_median, tree_fn=_leafwise, tags=_T2)
 _register_plain(
+    "sign_sgd",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    impl_keys=("native_dtype",),
+    dense_fn=D.sign_sgd, tree_fn=_leafwise, tags=("compressed",))
+_register_plain(
     "geometric_median",
     caps=AggregatorCaps(iterative=True, sharding_aware=True),
     # "nu" kept as a legacy eps alias (the historical fused path accepted
@@ -1713,6 +1888,105 @@ def zeno_pp(spec, grads, mask, weights, state):
     server)."""
     wn = _zeno_pp_weights(spec, grads, mask, weights, state)
     return tree_weighted_sum(grads, wn)
+
+
+# ---------------------------------------------------------------------------
+# compressed robust exchange: sparse/dropout per-coordinate weighting.  A
+# zero coordinate means NOT SENT (the fed_dropout_avg convention), so the
+# aggregate averages each coordinate over (coord_sent) * weight — per-
+# coordinate weights, which the impute-then-scale masked law cannot
+# express; hence custom_fn (tree) + flat_fn (arena) instead of the
+# generic engine paths.
+
+
+def _sparse_row_weights(n, mask, weights):
+    """(n,) fp32 row weights with the mask folded in (dead rows -> 0)."""
+    m = (jnp.ones((n,), bool) if mask is None
+         else mask.astype(bool)).astype(jnp.float32)
+    return m if weights is None else weights.astype(jnp.float32) * m
+
+
+def _sparse_mean_law(xf, cw):
+    """agg_c = sum_i cw_ic x_ic / sum_i cw_ic, explicit 0 where the
+    denominator is 0 (nobody sent the coordinate — never an eps-scaled
+    garbage row).  The where-gate keeps 0 * non-finite == 0 exactly, so
+    dead-row garbage cannot leak through a zero weight."""
+    num = jnp.sum(jnp.where(cw > 0, xf, 0.0) * cw, axis=0)
+    den = jnp.sum(cw, axis=0)
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def _sparse_mean_flat(spec, stack, mask, weights, state, qscale=None):
+    """sparse_mean on the (n, P) arena.  ``impl="pallas"`` runs the
+    sparse kernel (repro.kernels.wsum) with sent-detection on the native
+    codes and, for quantized arenas, in-tile dequantization — no
+    dequantized (n, P) copy; other impls apply the jnp law."""
+    n = stack.shape[0]
+    w = _sparse_row_weights(n, mask, weights)
+    if spec.impl == "pallas":
+        from repro.kernels import (pallas_masked_aggregate,
+                                   pallas_scaled_masked_aggregate)
+        m = (jnp.ones((n,), jnp.float32) if mask is None
+             else mask.astype(jnp.float32))
+        if qscale is not None:
+            return pallas_scaled_masked_aggregate(
+                "sparse_mean", stack, qscale, m, w, spec.f, spec.hyper)
+        return pallas_masked_aggregate(
+            "sparse_mean", stack, m, w, spec.f, spec.hyper)
+    if qscale is not None:
+        from repro.core.flat import dequantize_rows
+        xf = dequantize_rows(stack, qscale)
+    else:
+        xf = _flat_f32(stack)
+    cw = (xf != 0).astype(jnp.float32) * w[:, None]
+    return _sparse_mean_law(xf, cw)
+
+
+@register_aggregator(
+    "sparse_mean",
+    caps=AggregatorCaps(coordwise=True, sharding_aware=True),
+    flat_fn=_sparse_mean_flat, tags=("compressed",))
+def sparse_mean(spec, grads, mask, weights, state):
+    """Sparse/dropout-aware weighted mean (tree path; see
+    :func:`repro.core.filters.dense.sparse_mean` for the unit-weight
+    dense oracle).  Per-coordinate weights are ``(coord_sent) * w_i``
+    with ``w_i`` the caller's per-agent weight (dataset size, staleness
+    discount) zeroed on masked-out rows; coordinates nobody sent yield
+    an explicit zero update."""
+    n = _n_agents(grads)
+    w = _sparse_row_weights(n, mask, weights)
+    if spec.impl == "pallas":
+        # the law is per-coordinate, so the tree splits EXACTLY into
+        # per-dtype (n, -1) segments riding the fused sparse kernel —
+        # sent-detection and weighting stay inside the tile (no (n, d)
+        # where/select materialized; jaxpr-gated by the parity suite)
+        from repro.kernels import pallas_masked_aggregate
+        m = (jnp.ones((n,), jnp.float32) if mask is None
+             else mask.astype(jnp.float32))
+        flat_leaves, treedef = jax.tree.flatten(grads)
+        by_dtype = {}
+        for i, l in enumerate(flat_leaves):
+            by_dtype.setdefault(jnp.dtype(l.dtype), []).append(i)
+        outs = [None] * len(flat_leaves)
+        for dt, idxs in by_dtype.items():
+            seg = jnp.concatenate(
+                [flat_leaves[i].reshape(n, -1) for i in idxs], axis=1)
+            vec = pallas_masked_aggregate("sparse_mean", seg, m, w,
+                                          spec.f, spec.hyper)
+            off = 0
+            for i in idxs:
+                sz = flat_leaves[i][0].size
+                outs[i] = (vec[off:off + sz].astype(dt)
+                           .reshape(flat_leaves[i].shape[1:]))
+                off += sz
+        return jax.tree.unflatten(treedef, outs)
+
+    def leaf(l):
+        xf = l.astype(jnp.float32)
+        wl = w.reshape((-1,) + (1,) * (l.ndim - 1))
+        cw = (xf != 0).astype(jnp.float32) * wl
+        return _sparse_mean_law(xf, cw).astype(l.dtype)
+    return jax.tree.map(leaf, grads)
 
 
 # ---------------------------------------------------------------------------

@@ -112,6 +112,37 @@ def mean(g, f=0):
 
 
 # ---------------------------------------------------------------------------
+# compressed exchange (survey §5.2 scaling / Bernstein et al. signSGD)
+
+
+@register("sign_sgd")
+def sign_sgd(g, f=0):
+    """signSGD with majority vote: agents send sign(g_i) (1 bit/coord),
+    the server returns the per-coordinate sign of the vote.  The ±1/0
+    votes sum EXACTLY in fp32 for n < 2^24, so every impl (gather, fused
+    leaf-wise, pallas tile) is bitwise identical.  Output is magnitude-
+    bounded (per-coordinate in [-1, 1]) — robust to <= f sign-flippers by
+    majority, broken only by a vote majority (the conformance suite's
+    bounded-output breakdown law)."""
+    return jnp.sign(jnp.sum(jnp.sign(g).astype(jnp.float32), axis=0))
+
+
+@register("sparse_mean")
+def sparse_mean(g, f=0):
+    """Sparse/dropout-aware mean: a zero coordinate means NOT SENT (the
+    fed_dropout_avg convention), so each coordinate averages only the
+    rows that carry it — agg_c = sum_i [g_ic != 0] g_ic / sum_i
+    [g_ic != 0], with an explicit 0 where nobody sent the coordinate
+    (never an eps-scaled garbage row).  Per-agent weights (dataset
+    sizes, staleness discounts) enter via the spec engine's weighted
+    path; this dense oracle is the unit-weight case."""
+    sent = (g != 0).astype(jnp.float32)
+    den = jnp.sum(sent, axis=0)
+    num = jnp.sum(g.astype(jnp.float32) * sent, axis=0)
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # angle / distance based
 
 

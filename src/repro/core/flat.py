@@ -103,6 +103,55 @@ class FlatPlan:
         return jax.tree.unflatten(self.treedef, out)
 
 
+# ---------------------------------------------------------------------------
+# wire quantization: per-row symmetric codes + fp32 scale sidecar
+#
+# The compressed-exchange path (ByzantineConfig.agg_dtype in QUANT_DTYPES)
+# quantizes the fp32 arena right after ravel — each agent row gets its own
+# scale (rows are per-agent messages; one outlier agent must not crush
+# everyone else's resolution) — and the kernels dequantize INSIDE the tile,
+# so the (n, P) dequantized copy is never materialized (jaxpr-gated in
+# tests/test_kernels_parity.py).  qmax is the symmetric code range: 127 for
+# int8, 448 for float8_e4m3fn (its largest finite value).
+
+QUANT_DTYPES = {"int8": 127.0}
+if hasattr(jnp, "float8_e4m3fn"):
+    QUANT_DTYPES["float8_e4m3fn"] = 448.0
+
+
+def quantize_rows(x, dtype):
+    """fp32 (n, P) -> (codes (n, P) ``dtype``, scale (n,) fp32), per-row
+    symmetric: ``scale_i = amax_i / qmax`` (1.0 for an all-zero row, so
+    dequantization never divides by zero), ``codes = x / scale`` rounded
+    (integer dtypes) or cast (fp8).  ``dequantize_rows(codes, scale)``
+    reconstructs within one code step."""
+    name = jnp.dtype(dtype).name
+    qmax = QUANT_DTYPES[name]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.where(amax > 0.0, amax / qmax, 1.0)
+    codes = xf / scale[:, None]
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        codes = jnp.clip(jnp.round(codes), -qmax, qmax)
+    return codes.astype(dtype), scale
+
+
+def dequantize_rows(codes, scale):
+    """(codes (n, P), scale (n,) fp32) -> fp32 (n, P).  The reference
+    arithmetic for the in-tile dequantization — the scaled kernels compute
+    exactly ``codes.astype(f32) * scale[:, None]`` per VMEM block, so this
+    host-visible version is the bit-for-bit parity oracle."""
+    return codes.astype(jnp.float32) * scale[:, None]
+
+
+def fake_quantize(x, dtype):
+    """Quantize-dequantize round trip: the fp32 stack every NON-flat
+    consumer (tree fallbacks, telemetry weights on gather) sees, so the
+    compressed run's semantics do not depend on which path executed."""
+    codes, scale = quantize_rows(x, dtype)
+    return dequantize_rows(codes, scale)
+
+
 @functools.lru_cache(maxsize=None)
 def _plan(treedef, shapes, dtypes) -> FlatPlan:
     sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
@@ -113,4 +162,5 @@ def _plan(treedef, shapes, dtypes) -> FlatPlan:
                     total=int(sum(sizes)), uniform_dtype=uniform)
 
 
-__all__ = ["FlatPlan"]
+__all__ = ["FlatPlan", "QUANT_DTYPES", "quantize_rows", "dequantize_rows",
+           "fake_quantize"]

@@ -136,15 +136,20 @@ def make_combine_spec(spec):
 
 def _faulted_adj(adj, trace, t):
     """Effective directed adjacency at round t under a FaultTrace: partition
-    severs cross-group links, crashed agents neither send nor receive, and a
+    severs cross-group links, crashed agents neither send nor receive, a
     dropped broadcast removes all of the sender's outgoing edges (adj[a, b]
-    is the edge a -> b)."""
+    is the edge a -> b), and a churned-out roster member is silenced exactly
+    like a crashed agent — no broadcast, no reception, Metropolis weights
+    rebuilt over the live subgraph (decentralized membership IS the crash
+    handling: there is no server to repack a roster)."""
     h = trace.horizon
     v = min(t, h - 1)
     a = adj.copy()
     if trace.adj is not None:
         a &= trace.adj[v]
     alive = trace.alive[v]
+    if trace.roster is not None:
+        alive = alive & trace.roster[v]
     a &= alive[:, None] & alive[None, :]
     a[trace.drop[v]] = False
     return a, alive
@@ -164,7 +169,10 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
     or an iterable of fault specs (compiled here with ``fault_seed``): the
     graph becomes time-varying — partitions cut links, crash/recover faults
     freeze agents (no broadcast, no update), message drops silence a
-    sender's round.  Metropolis weights are rebuilt per round.
+    sender's round, and membership schedules (Join/Rejoin/Churn) silence
+    churned-out agents the same way crashes do (the live subgraph keeps
+    mixing; departed agents freeze and re-enter where they left off).
+    Metropolis weights are rebuilt per round.
     Returns trajectory (steps+1, n, d)."""
     from repro.simulator.faults import FaultTrace, compile_schedule
     adj = np.asarray(adj, bool)
@@ -175,14 +183,6 @@ def p2p_dgd_run(adj, grad_fn, x0, steps: int, f: int = 0,
                  else compile_schedule(tuple(fault_schedule), n, steps + 1,
                                        seed=fault_seed))
         assert trace.n_agents == n, (trace.n_agents, n)
-        if trace.roster is not None:
-            # membership changes a decentralized topology itself (graph
-            # rewiring + weight renormalization) — refusing beats silently
-            # letting churned-out agents keep broadcasting and mixing
-            raise NotImplementedError(
-                "p2p_dgd_run does not support membership (Join/Rejoin/"
-                "Churn) schedules yet — the roster would need to rewire "
-                "the mixing graph; see ROADMAP 'Elastic membership'")
     W = metropolis_weights(adj)
     if isinstance(combine, str):
         comb = COMBINE[combine]

@@ -216,9 +216,14 @@ def tree_draco_aggregate(grads, r: int, tol: float = 1e-6, mask=None,
     Uniform-dtype trees ravel through their cached
     :class:`~repro.core.flat.FlatPlan` into the (n, P) arena and decode
     with :func:`flat_draco_aggregate` — the tree entry point IS the arena
-    path, bit-for-bit.  Mixed-dtype trees fall back to a leaf-wise Gram
-    accumulation (``tree_gram``/``tree_weighted_sum``) under the same
-    vote law.
+    path, bit-for-bit.  Mixed-dtype trees split into per-dtype sub-arenas:
+    the full-row Gram is additive over column segments, so the segment
+    Grams (each on the arena ``kernels.pairwise.gram`` primitive) sum into
+    ONE Gram feeding ONE vote, and the winner weights apply per segment
+    through ``kernels.wsum.masked_weighted_sum`` — same vote law, same
+    where-zeroed Byzantine-row hygiene as the uniform path.  The split is
+    announced once via :func:`~repro.core.aggregators.warn_once` with the
+    offending dtypes (a uniform exchange dtype restores the single arena).
 
     ``mask`` (n,) bool restricts the vote to *delivered* gradients (the
     async simulator's straggler fallback): absent agents neither vote nor
@@ -226,8 +231,12 @@ def tree_draco_aggregate(grads, r: int, tol: float = 1e-6, mask=None,
     renormalizes over the surviving groups.  ``groups`` (host array from
     :func:`coding_groups`) overrides the static ``i // r`` table — the
     elastic loops pass their bucket's (possibly ragged) table here."""
-    from repro.core.aggregators import tree_gram, tree_weighted_sum
+    from repro.core.aggregators import warn_once
     from repro.core.flat import FlatPlan
+    from repro.kernels.dispatch import default_interpret
+    from repro.kernels.ops import _pad_d
+    from repro.kernels.pairwise import gram
+    from repro.kernels.wsum import masked_weighted_sum
     n = jax.tree.leaves(grads)[0].shape[0]
     if groups is None:
         groups = coding_groups(n, r)
@@ -236,6 +245,43 @@ def tree_draco_aggregate(grads, r: int, tol: float = 1e-6, mask=None,
         vec = flat_draco_aggregate(plan.ravel(grads), r, tol=tol,
                                    mask=mask, groups=groups)
         return plan.unravel(vec)
-    w = coded_vote_weights(tree_gram(grads), r, tol=tol, mask=mask,
-                           groups=groups)
-    return tree_weighted_sum(grads, w)
+    # mixed-dtype tree: per-dtype sub-arenas.  Gram(full row) is the sum of
+    # the segment Grams (column blocks are disjoint), so the vote sees the
+    # SAME (n, n) Gram the single-arena path would — one vote, applied per
+    # segment with the arena weighted-sum kernel (winner one-hots are
+    # non-negative; losing rows are where-zeroed, so Byzantine ±inf in a
+    # rejected row never leaks into the decode).
+    leaves, treedef = jax.tree.flatten(grads)
+    by_dtype = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+    warn_once(
+        ("draco-mixed-dtype", tuple(sorted(str(d) for d in by_dtype))),
+        "tree_draco_aggregate: mixed-dtype gradient tree "
+        f"({', '.join(sorted(str(d) for d in by_dtype))}) decodes through "
+        "per-dtype sub-arenas instead of one flat arena; set a uniform "
+        "exchange dtype (e.g. agg_dtype) to restore the single-ravel path")
+    interpret = default_interpret()
+    m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    segs = {}
+    total_gram = None
+    for dt, idxs in by_dtype.items():
+        seg = jnp.concatenate(
+            [leaves[i].reshape(n, -1) for i in idxs], axis=1)
+        segp, _ = _pad_d(seg)
+        segs[dt] = (idxs, seg.shape[1], segp)
+        g = gram(segp, interpret=interpret)
+        total_gram = g if total_gram is None else total_gram + g
+    w = coded_vote_weights(total_gram, r, tol=tol, mask=mask, groups=groups)
+    out = [None] * len(leaves)
+    for dt, (idxs, p, segp) in segs.items():
+        vec = masked_weighted_sum(
+            w, segp, m, jnp.zeros((segp.shape[1],), jnp.float32),
+            interpret=interpret)[:p]
+        off = 0
+        for i in idxs:
+            size = leaves[i][0].size
+            out[i] = vec[off:off + size].reshape(
+                leaves[i].shape[1:]).astype(leaves[i].dtype)
+            off += size
+    return jax.tree.unflatten(treedef, out)

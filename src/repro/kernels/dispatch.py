@@ -27,15 +27,21 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.coord_stats import coord_stat
-from repro.kernels.masked import masked_coord_stat
+from repro.kernels.masked import (masked_coord_stat, masked_sign_vote,
+                                  scaled_coord_stat,
+                                  scaled_masked_coord_stat,
+                                  scaled_masked_sign_vote, sign_vote)
 from repro.kernels.ops import (_pad_d, kernel_bulyan, kernel_bulyan_masked,
                                kernel_cge, kernel_cge_masked, kernel_krum,
                                kernel_krum_masked, kernel_m_krum,
                                kernel_m_krum_masked, kernel_mda,
                                kernel_mda_masked, kernel_multi_krum,
                                kernel_multi_krum_masked)
+from repro.kernels.wsum import (scaled_sparse_masked_weighted_mean,
+                                sparse_masked_weighted_mean)
 
 _INTERPRET = None
 
@@ -99,6 +105,21 @@ def _bulyan(stack, f, hyper, interpret):
     return kernel_bulyan(stack, f, interpret=interpret)
 
 
+def _sign_sgd(stack, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return sign_vote(gp, interpret=interpret)[:d]
+
+
+def _sparse_mean(stack, f, hyper, interpret):
+    # plain = every row live with unit weight; padded columns are all-zero
+    # (nobody "sent" them) and slice away
+    n = stack.shape[0]
+    gp, d = _pad_d(stack)
+    ones = jnp.ones((n,), jnp.float32)
+    return sparse_masked_weighted_mean(gp, ones, ones,
+                                       interpret=interpret)[:d]
+
+
 PALLAS_RULES = {
     "coordinate_median": _median,
     "trimmed_mean": _trimmed_mean,
@@ -108,14 +129,18 @@ PALLAS_RULES = {
     "m_krum": _m_krum,
     "mda": _mda,
     "bulyan": _bulyan,
+    "sign_sgd": _sign_sgd,
+    "sparse_mean": _sparse_mean,
 }
 
 
 # ---------------------------------------------------------------------------
-# masked / weighted rules: fused mean-imputation variants (async quorums) —
+# masked / weighted rules: fused masked variants (async quorums) —
 # the coordinate statistics impute inside the sort tile, the selection
-# family inside the Gram/application tiles (imputation-free: the imputed
-# (n, d) stack is never materialized anywhere)
+# family inside the Gram/application tiles (no masked (n, d) copy is ever
+# materialized; the coordinate-wise kernels use the arrived-window
+# sentinel law, the Gram kernels the mean-imputed law — see
+# kernels/masked.py)
 
 
 def _masked_median(stack, mask, wn, f, hyper, interpret):
@@ -161,6 +186,20 @@ def _masked_bulyan(stack, mask, wn, f, hyper, interpret):
     return kernel_bulyan_masked(stack, mask, wn, f, interpret=interpret)
 
 
+def _masked_sign_sgd(stack, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return masked_sign_vote(gp, mask, wn, interpret=interpret)[:d]
+
+
+def _masked_sparse_mean(stack, mask, wn, f, hyper, interpret):
+    # the wn slot carries RAW mask-folded row weights (dataset sizes), not
+    # the normalized w/tot the imputing rules take — sparse_mean's law is
+    # invariant under global weight scaling, so both conventions agree
+    gp, d = _pad_d(stack)
+    return sparse_masked_weighted_mean(gp, mask, wn,
+                                       interpret=interpret)[:d]
+
+
 PALLAS_MASKED_RULES = {
     "coordinate_median": _masked_median,
     "trimmed_mean": _masked_trimmed_mean,
@@ -170,6 +209,84 @@ PALLAS_MASKED_RULES = {
     "m_krum": _masked_m_krum,
     "mda": _masked_mda,
     "bulyan": _masked_bulyan,
+    "sign_sgd": _masked_sign_sgd,
+    "sparse_mean": _masked_sparse_mean,
+}
+
+
+# ---------------------------------------------------------------------------
+# scaled rules: the arena holds int8/fp8 codes + a per-row fp32 dequant
+# scale sidecar (core.flat.quantize_rows); these kernels dequantize INSIDE
+# the tile, so no dequantized (n, P) copy is ever materialized (jaxpr-gated
+# in tests/test_kernels_parity.py).  Rules without an entry here pay an
+# engine-level dequant copy (aggregators._flat_dequant warns once).
+
+
+def _scaled_median(stack, qs, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return scaled_coord_stat(gp, qs, "median", interpret=interpret)[:d]
+
+
+def _scaled_trimmed_mean(stack, qs, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    b = _trim_b(stack.shape[0], f, hyper)
+    return scaled_coord_stat(gp, qs, "trimmed_mean", b=b,
+                             interpret=interpret)[:d]
+
+
+def _scaled_sign_sgd(stack, qs, f, hyper, interpret):
+    # sign(code * scale) == sign(code): scales are strictly positive, so
+    # the plain vote kernel reads the codes directly — zero dequant cost
+    gp, d = _pad_d(stack)
+    return sign_vote(gp, interpret=interpret)[:d]
+
+
+def _scaled_sparse_mean(stack, qs, f, hyper, interpret):
+    n = stack.shape[0]
+    gp, d = _pad_d(stack)
+    ones = jnp.ones((n,), jnp.float32)
+    return scaled_sparse_masked_weighted_mean(gp, qs, ones, ones,
+                                              interpret=interpret)[:d]
+
+
+PALLAS_SCALED_RULES = {
+    "coordinate_median": _scaled_median,
+    "trimmed_mean": _scaled_trimmed_mean,
+    "sign_sgd": _scaled_sign_sgd,
+    "sparse_mean": _scaled_sparse_mean,
+}
+
+
+def _scaled_masked_median(stack, qs, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return scaled_masked_coord_stat(gp, qs, mask, wn, "median",
+                                    interpret=interpret)[:d]
+
+
+def _scaled_masked_trimmed_mean(stack, qs, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    b = _trim_b(stack.shape[0], f, hyper)
+    return scaled_masked_coord_stat(gp, qs, mask, wn, "trimmed_mean", b=b,
+                                    interpret=interpret)[:d]
+
+
+def _scaled_masked_sign_sgd(stack, qs, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return scaled_masked_sign_vote(gp, qs, mask, wn,
+                                   interpret=interpret)[:d]
+
+
+def _scaled_masked_sparse_mean(stack, qs, mask, wn, f, hyper, interpret):
+    gp, d = _pad_d(stack)
+    return scaled_sparse_masked_weighted_mean(gp, qs, mask, wn,
+                                              interpret=interpret)[:d]
+
+
+PALLAS_SCALED_MASKED_RULES = {
+    "coordinate_median": _scaled_masked_median,
+    "trimmed_mean": _scaled_masked_trimmed_mean,
+    "sign_sgd": _scaled_masked_sign_sgd,
+    "sparse_mean": _scaled_masked_sparse_mean,
 }
 
 
@@ -183,6 +300,13 @@ def pallas_supported(name: str) -> bool:
 
 def pallas_masked_supported(name: str) -> bool:
     return name in PALLAS_MASKED_RULES
+
+
+def pallas_scaled_supported(name: str) -> bool:
+    """True iff ``name`` dequantizes a quantized (codes + per-row scale)
+    arena inside its kernel tiles (both sync and masked variants)."""
+    return (name in PALLAS_SCALED_RULES
+            and name in PALLAS_SCALED_MASKED_RULES)
 
 
 @functools.partial(jax.jit,
@@ -204,3 +328,27 @@ def pallas_masked_aggregate(name: str, stack, mask, wn, f: int,
     per-step fault masks never retrigger compilation."""
     itp = default_interpret() if interpret is None else interpret
     return PALLAS_MASKED_RULES[name](stack, mask, wn, f, dict(hyper), itp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("name", "f", "hyper", "interpret"))
+def pallas_scaled_aggregate(name: str, stack, qscale, f: int,
+                            hyper: tuple = (), *,
+                            interpret: bool | None = None):
+    """stack: quantized (n, P) codes, qscale: (n,) fp32 per-row dequant
+    scale -> (P,) fp32 aggregate, dequantization fused into the tiles."""
+    itp = default_interpret() if interpret is None else interpret
+    return PALLAS_SCALED_RULES[name](stack, qscale, f, dict(hyper), itp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("name", "f", "hyper", "interpret"))
+def pallas_scaled_masked_aggregate(name: str, stack, qscale, mask, wn,
+                                   f: int, hyper: tuple = (), *,
+                                   interpret: bool | None = None):
+    """Masked variant of :func:`pallas_scaled_aggregate` — qscale, mask
+    and wn are all TRACED (n,) operands (fault masks and per-step scales
+    never retrigger compilation)."""
+    itp = default_interpret() if interpret is None else interpret
+    return PALLAS_SCALED_MASKED_RULES[name](stack, qscale, mask, wn, f,
+                                            dict(hyper), itp)

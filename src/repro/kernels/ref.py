@@ -29,23 +29,71 @@ def trimmed_mean_from_sorted(s, b: int):
 
 
 def masked_impute_ref(g, mask, wn):
-    """Mean-imputed stack, arithmetic mirroring the engine's masked path:
-    fp32 weighted mean of arrived rows -> native-dtype round trip ->
-    row-select.  Oracle for kernels/masked.py."""
+    """Mean-imputed stack, arithmetic mirroring the engine's masked path
+    for the PAIRWISE rule family: fp32 weighted mean of arrived rows ->
+    native-dtype round trip -> row-select.  Oracle for the Gram-based
+    masked kernels.  The coordinate-wise rules do NOT use this law — the
+    delivered mean is not robust, so a mean-imputed ghost row lands
+    inside the trim window under attack; they use the arrived-window
+    statistics below instead."""
     xf = g.astype(jnp.float32)
     mean = jnp.sum(xf * wn.astype(jnp.float32)[:, None],
                    axis=0).astype(g.dtype)
     return jnp.where(mask.astype(bool)[:, None], g, mean[None])
 
 
-def masked_stat_ref(g, mask, wn, stat: str, b: int = 0):
-    """(d,) fp32 oracle for masked_coord_stat."""
-    s = jnp.sort(masked_impute_ref(g, mask, wn).astype(jnp.float32), axis=0)
+def arrived_stat_from_sorted(s, mask, stat: str, b: int = 0):
+    """Order statistic over the ARRIVED rows only.
+
+    ``s``: (n, t) fp32, per-coordinate ascending sort of the stack with
+    absent rows replaced by +inf (they occupy the top ``n - cnt`` ranks
+    of every column, so the arrived values sit in ranks ``[0, cnt)``).
+    The kept rank window is computed from the traced arrived count:
+
+      * ``median``        — ranks ``[(cnt-1)//2, cnt - (cnt-1)//2)``
+        (one rank when cnt is odd, the two middle ranks when even — the
+        window mean IS the median);
+      * ``trimmed_mean``  — ranks ``[b', cnt - b')`` with
+        ``b' = min(b, (cnt-1)//2)``: the per-side trim clamps so the
+        window never empties; below ``2b + 1`` arrivals the statistic
+        degrades gracefully to the median of the arrived rows.
+
+    The window indicator depends only on the scalar count, so the whole
+    statistic is one sort + one masked reduce — fixed shapes, traced
+    mask, no recompiles.  Zero arrivals return an exact 0 (the engine's
+    zero-total guard scales the update to 0 anyway)."""
+    import jax
+    n = s.shape[0]
+    cnt = jnp.sum(mask.astype(jnp.float32) > 0.5).astype(jnp.int32)
     if stat == "median":
-        return median_from_sorted(s)
-    if stat == "trimmed_mean":
-        return trimmed_mean_from_sorted(s, b)
-    raise KeyError(stat)
+        lo = (cnt - 1) // 2
+    elif stat == "trimmed_mean":
+        lo = jnp.minimum(jnp.int32(b), (cnt - 1) // 2)
+    else:
+        raise KeyError(stat)
+    lo = jnp.maximum(lo, 0)
+    hi = cnt - lo
+    ranks = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+    keep = (ranks >= lo) & (ranks < hi)
+    width = jnp.maximum(hi - lo, 1).astype(jnp.float32)
+    out = jnp.sum(jnp.where(keep, s, 0.0), axis=0) / width
+    return jnp.where(cnt > 0, out, 0.0)
+
+
+def masked_stat_ref(g, mask, wn, stat: str, b: int = 0):
+    """(d,) fp32 oracle for masked_coord_stat: the arrived-window law
+    (absent rows are +inf sort sentinels, never statistics)."""
+    mb = mask.astype(bool)
+    s = jnp.sort(jnp.where(mb[:, None], g.astype(jnp.float32), jnp.inf),
+                 axis=0)
+    return arrived_stat_from_sorted(s, mask, stat, b)
+
+
+def masked_sign_vote_ref(g, mask):
+    """(d,) fp32 oracle for masked_sign_vote: majority vote over the
+    arrived rows only (absent rows cast no vote)."""
+    votes = jnp.sign(g.astype(jnp.float32)) * mask.astype(jnp.float32)[:, None]
+    return jnp.sign(jnp.sum(votes, axis=0))
 
 
 def krum_select_ref(g, f: int):

@@ -114,6 +114,94 @@ def masked_weighted_sum(w, g, mask, mean, *, interpret: bool = True):
     return out[0]
 
 
+def _sparse_mean_body(xf, cw):
+    """Per-coordinate weighted mean over the rows that SENT the
+    coordinate: cw is the per-coordinate weight ((coord != 0) * row
+    weight), the where-gate keeps an unsent inf/NaN coordinate from
+    leaking through 0 * x, and a coordinate nobody sent yields an
+    explicit 0 update (zero-total guard) — identical arithmetic to
+    repro.core.aggregators._sparse_mean_law, the gather oracle."""
+    num = jnp.sum(jnp.where(cw > 0.0, xf, 0.0) * cw, axis=0)
+    den = jnp.sum(cw, axis=0)
+    return jnp.where(den > 0.0, num / jnp.where(den > 0.0, den, 1.0), 0.0)
+
+
+def _sparse_wmean_kernel(g_ref, mask_ref, w_ref, out_ref):
+    x = g_ref[...]
+    live = mask_ref[...][0] > 0.5
+    w = jnp.where(live, w_ref[...][0].astype(jnp.float32), 0.0)   # (n,)
+    xf = x.astype(jnp.float32)
+    cw = (xf != 0.0).astype(jnp.float32) * w[:, None]
+    out_ref[...] = _sparse_mean_body(xf, cw)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_masked_weighted_mean(g, mask, w, *, interpret: bool = True):
+    """g: (n, d) native dtype, mask: (n,) {0,1}, w: (n,) row weights
+    (dataset sizes — any positive scaling; the law is scale-invariant) ->
+    (d,) fp32 sparse/dropout-aware mean: each coordinate is averaged over
+    the LIVE rows that actually sent it (coord != 0), weighted by
+    ``(coord_sent) * w``.  Absent rows never vote — there is no
+    imputation (a dropped-out coordinate is information-free, unlike a
+    straggler's stale full row).  d multiple of TILE_D."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        _sparse_wmean_kernel,
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(g, mask.astype(jnp.float32).reshape(1, n),
+      w.astype(jnp.float32).reshape(1, n))
+    return out[0]
+
+
+def _scaled_sparse_wmean_kernel(g_ref, sc_ref, mask_ref, w_ref, out_ref):
+    # quantized codes: code == 0 iff the dequantized coordinate == 0
+    # (scales are strictly positive), so the sent-pattern survives
+    # quantization and the in-tile dequant feeds the same law
+    x = g_ref[...]
+    sc = sc_ref[...][0]
+    live = mask_ref[...][0] > 0.5
+    w = jnp.where(live, w_ref[...][0].astype(jnp.float32), 0.0)
+    xf = x.astype(jnp.float32) * sc[:, None]
+    cw = (xf != 0.0).astype(jnp.float32) * w[:, None]
+    out_ref[...] = _sparse_mean_body(xf, cw)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scaled_sparse_masked_weighted_mean(g, scale, mask, w, *,
+                                       interpret: bool = True):
+    """Sparse mean over a quantized arena: in-tile dequant (per-row fp32
+    scale sidecar), then :func:`sparse_masked_weighted_mean`'s law."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        _scaled_sparse_wmean_kernel,
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(g, scale.astype(jnp.float32).reshape(1, n),
+      mask.astype(jnp.float32).reshape(1, n),
+      w.astype(jnp.float32).reshape(1, n))
+    return out[0]
+
+
 def _accumulate_rows(rows, *, chain, div, true_div, exact):
     """Summation + division stage shared by the ordered applications.
 

@@ -58,7 +58,8 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.core.aggregators import tree_where_agents
-from repro.core.flat import FlatPlan
+from repro.core.flat import (FlatPlan, QUANT_DTYPES, fake_quantize,
+                             quantize_rows)
 from repro.obs.counters import count_trace
 from repro.core.attacks import get_attack, make_byzantine_mask
 from repro.core.momentum import init_momentum, worker_momentum
@@ -155,7 +156,11 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             f"{spec.name} consumes raw staleness counts, but the async "
             "loop passes discount multipliers — configure "
             "SimConfig.staleness_weighting and use the inner spec instead")
-    if bz.agg_dtype:
+    # agg_dtype in QUANT_DTYPES selects the compressed-exchange pipeline:
+    # per-row codes + scale sidecar quantized at ravel time, in-tile
+    # dequant (see training/step.py — same contract)
+    quant = bool(bz.agg_dtype) and bz.agg_dtype in QUANT_DTYPES
+    if bz.agg_dtype and not quant:
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
     spec = spec.respecialize(bucket) if bucket is not None else spec
     stateful = spec.stateful
@@ -198,12 +203,29 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
         sent = buffer
         if attack_fn is not None:
             sent = tree_attack(attack_fn, key, sent, byz_mask)
-        if bz.agg_dtype:
+        if bz.agg_dtype and not quant:
             sent = jax.tree.map(
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), sent)
 
         mask = contrib_w > 0.0
         plan = FlatPlan.for_tree(sent)
+        codes = qs = arena = None
+        if quant:
+            # quantize the wire: codes + per-row fp32 scale.  Codes feed
+            # the scaled kernels only on the plain flat path; the coded
+            # vote (Gram-based, no scaled kernels) and the tree fallbacks
+            # see the fake-quantized fp32 stack instead — identical
+            # compressed-exchange semantics on every path.
+            arena = plan.ravel(sent, jnp.float32)
+            qdt = jnp.dtype(bz.agg_dtype)
+            if use_flat and bz.draco_r == 0:
+                if fallback_r > 0:
+                    arena = fake_quantize(arena, qdt)
+                else:
+                    codes, qs = quantize_rows(arena, qdt)
+            else:
+                sent = plan.unravel_stack(fake_quantize(arena, qdt))
+                arena = None
         if bucket is not None:
             w_b = jnp.where(roster_valid, contrib_w[roster_idx], 0.0)
         if bz.draco_r > 0:
@@ -220,23 +242,30 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
             else:
                 agg = tree_draco_aggregate(sent, bz.draco_r, mask=mask,
                                            groups=groups)
-        elif use_flat and plan.uniform_dtype is not None:
+        elif use_flat and (quant or plan.uniform_dtype is not None):
             # ONE ravel into the (n, P) arena at the communication
             # boundary; the quorum mask and staleness discounts enter the
             # masked kernels as traced operands and the single unravel
             # happens below, at optimizer-apply.  Mixed-dtype trees keep
             # the tree path: a fp32 arena would impute masked rows
-            # without each leaf's native rounding (not bitwise).
-            arena = plan.ravel(sent)
+            # without each leaf's native rounding (not bitwise) — except
+            # under quantized exchange, which erases leaf dtypes anyway.
+            if arena is None:
+                arena = plan.ravel(sent)
+            wire = codes if codes is not None else arena
             if bucket is not None:
-                rows, rmask, rw = arena[roster_idx], w_b > 0.0, w_b
+                rows, rmask, rw = wire[roster_idx], w_b > 0.0, w_b
+                rqs = qs[roster_idx] if qs is not None else None
             else:
-                rows, rmask, rw = arena, mask, contrib_w
-            vec = spec.aggregate_flat(rows, mask=rmask, weights=rw)
+                rows, rmask, rw = wire, mask, contrib_w
+                rqs = qs
+            vec = spec.aggregate_flat(rows, mask=rmask, weights=rw,
+                                      scale=rqs)
             if fallback_r > 0:
                 # quorum missed: decode the repetition code over the SAME
                 # arena rows (both candidates are (P,) fp32 — one select,
-                # one unravel)
+                # one unravel; under quant, rows are the fake-quantized
+                # fp32 arena — codes are only cut when fallback_r == 0)
                 coded = flat_draco_aggregate(rows, fallback_r, mask=rmask,
                                              groups=groups)
                 vec = jnp.where(use_coded, coded, vec)
@@ -278,7 +307,8 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                 sel = particip          # per-group votes: delivery shares
             elif bucket is not None:
                 stack_b = (arena[roster_idx]
-                           if use_flat and plan.uniform_dtype is not None
+                           if use_flat and (quant
+                                            or plan.uniform_dtype is not None)
                            else jax.tree.map(lambda l: l[roster_idx], sent))
                 sel_b = spec.selection_weights(stack_b, mask=w_b > 0.0,
                                                weights=w_b, state=st)
@@ -289,7 +319,8 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                     sel = jnp.where(use_coded, particip, sel)
             else:
                 stack = (arena
-                         if use_flat and plan.uniform_dtype is not None
+                         if use_flat and (quant
+                                          or plan.uniform_dtype is not None)
                          else sent)
                 sel = spec.selection_weights(stack, mask=mask,
                                              weights=contrib_w, state=st)

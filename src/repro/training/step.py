@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.aggregators import AggregatorSpec, make_spec
 from repro.core.attacks import get_attack, make_byzantine_mask
-from repro.core.flat import FlatPlan
+from repro.core.flat import (FlatPlan, QUANT_DTYPES, fake_quantize,
+                             quantize_rows)
 from repro.core.momentum import worker_momentum
 from repro.obs.counters import count_trace
 from repro.core.redundancy.coding import coding_groups, tree_draco_aggregate
@@ -182,7 +183,13 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
         raise NotImplementedError(
             f"{spec.name} is stateful — run it through the async loop "
             "(repro.simulator.async_loop threads aggregator state)")
-    if bz.agg_dtype:
+    # agg_dtype in QUANT_DTYPES (int8 / float8_e4m3fn) selects the
+    # compressed-exchange pipeline: the fp32 arena is quantized per-row
+    # with a scale sidecar right after ravel (core.flat.quantize_rows)
+    # and the kernels dequantize inside the tile — NOT a tree-wide cast
+    # (astype(int8) would truncate gradients to garbage)
+    quant = bool(bz.agg_dtype) and bz.agg_dtype in QUANT_DTYPES
+    if bz.agg_dtype and not quant:
         # sort/exchange in agg_dtype wherever the rule supports it —
         # reaches through composition wrappers to the executing rule
         # (weighted rules accumulate their statistics in fp32 regardless;
@@ -242,7 +249,7 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
             grads = tree_attack(attack_fn, key, grads, byz_mask)
 
         # (4) robust aggregation via the AggregatorSpec (+ §Perf variants)
-        if bz.agg_dtype:
+        if bz.agg_dtype and not quant:
             grads = jax.tree.map(
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), grads)
         if bz.group_size > 1:
@@ -251,6 +258,21 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
             grads = jax.lax.with_sharding_constraint(
                 grads, _reshard_specs(grads, mesh_sizes))
         plan = FlatPlan.for_tree(grads)
+        codes = qs = None
+        if quant:
+            # quantize the wire: per-row codes + fp32 scale sidecar.  The
+            # pre-quantization f32 arena is kept ONLY as a local for
+            # telemetry (it exists anyway — it's what was quantized);
+            # the aggregate itself sees codes + scale.  Paths without a
+            # scale-aware entry point (coded votes, reshard, non-flat
+            # specs) see the fake-quantized stack instead, so every path
+            # has identical compressed-exchange semantics.
+            arena = plan.ravel(grads, jnp.float32)
+            if use_flat and bz.draco_r == 0:
+                codes, qs = quantize_rows(arena, jnp.dtype(bz.agg_dtype))
+            else:
+                grads = plan.unravel_stack(
+                    fake_quantize(arena, jnp.dtype(bz.agg_dtype)))
         if bz.draco_r > 0:
             if bucket is not None:
                 # elastic membership: regroup the packed live rows with
@@ -260,6 +282,18 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                                            mask=roster_valid, groups=groups)
             else:
                 agg = tree_draco_aggregate(grads, bz.draco_r, groups=groups)
+        elif codes is not None:
+            # compressed flat path: codes on the wire, per-row scale as a
+            # sidecar operand — the scaled kernels dequantize in-tile (no
+            # (n, P) f32 copy; mixed-dtype trees are fine here since the
+            # exchange dtype erases per-leaf dtypes anyway)
+            if bucket is not None:
+                vec = spec.aggregate_flat(codes[roster_idx],
+                                          mask=roster_valid,
+                                          scale=qs[roster_idx])
+            else:
+                vec = spec.aggregate_flat(codes, scale=qs)
+            agg = plan.unravel(vec)
         elif use_flat and plan.uniform_dtype is not None:
             # zero-copy: ONE ravel into the (n, P) arena here, the
             # aggregation runs on the arena, and the single unravel below
@@ -312,8 +346,12 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                 mf = m_full.astype(jnp.float32)
                 sel = mf / jnp.maximum(jnp.sum(mf), 1.0)
             elif bucket is not None:
-                stack = (arena[roster_idx]
-                         if use_flat and plan.uniform_dtype is not None
+                # quantized runs attribute weights on the PRE-quantization
+                # f32 arena (it exists anyway — it is what was quantized);
+                # observability must not add a dequantized (n, P) copy
+                flat_stack = codes is not None or (
+                    use_flat and plan.uniform_dtype is not None)
+                stack = (arena[roster_idx] if flat_stack
                          else jax.tree.map(lambda l: l[roster_idx], grads))
                 sel_b = spec.selection_weights(stack, mask=roster_valid)
                 sel = jnp.zeros((n,), jnp.float32).at[roster_idx].add(
@@ -321,9 +359,9 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
                 m_full = jnp.zeros((n,), bool).at[roster_idx].max(
                     roster_valid)
             else:
-                stack = (arena
-                         if use_flat and plan.uniform_dtype is not None
-                         else grads)
+                flat_stack = codes is not None or (
+                    use_flat and plan.uniform_dtype is not None)
+                stack = arena if flat_stack else grads
                 sel = spec.selection_weights(stack)
                 m_full = jnp.ones((n,), bool)
                 if bz.group_size > 1:

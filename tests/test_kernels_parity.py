@@ -46,7 +46,7 @@ from repro.kernels.pairwise import gram
 from repro.kernels.select import cge_select, krum_select
 
 RULES = ["coordinate_median", "trimmed_mean", "krum", "cge",
-         "multi_krum", "m_krum", "mda", "bulyan"]
+         "multi_krum", "m_krum", "mda", "bulyan", "sign_sgd", "sparse_mean"]
 # non-power-of-2 selection counts so the division-compilation pinning is
 # exercised (a power-of-2 divisor would hide a reciprocal-multiply drift)
 HYPER = {"multi_krum": {"m": 3}, "m_krum": {"m": 3}}
@@ -60,7 +60,8 @@ F = 2
 # rules whose pallas OUTPUT is bit-for-bit with the gather path in fp32
 # (cge: selection bitwise, application within ulp — see module docstring)
 BITWISE_RULES = {"coordinate_median", "trimmed_mean", "krum",
-                 "multi_krum", "m_krum", "mda", "bulyan"}
+                 "multi_krum", "m_krum", "mda", "bulyan",
+                 "sign_sgd", "sparse_mean"}
 
 
 def spec_pair(rule, n):
@@ -448,7 +449,8 @@ def _collect_shapes(jaxpr, banned=("select_n", "broadcast_in_dim")):
 
 
 @pytest.mark.parametrize("rule", ["krum", "cge", "multi_krum", "bulyan",
-                                  "coordinate_median"])
+                                  "coordinate_median", "sign_sgd",
+                                  "sparse_mean"])
 def test_masked_pallas_is_imputation_free(rule):
     """The acceptance gate of the masked selection family: no full-size
     broadcast or where precedes the kernel call — the imputed (n, d)
@@ -467,7 +469,17 @@ def test_masked_pallas_is_imputation_free(rule):
     pa = make_spec(rule, f=2, impl="pallas", n=n)
     assert not big(pa), f"{rule}: imputed (n, d) copy materialized: {big(pa)}"
     ga = make_spec(rule, f=2, impl="gather", n=n)
-    assert big(ga), "detector lost its teeth: gather imputation not seen"
+    if rule == "sign_sgd":
+        # the arrived-only vote never imputes, even at gather level — its
+        # engine fallback materializes the (n, d) masked vote product
+        # instead, so the teeth check looks for that
+        jaxpr = jax.make_jaxpr(
+            lambda g, m, w: ga.aggregate(g, mask=m, weights=w))(g, mask, w)
+        muls = [s for s in _collect_shapes(jaxpr, banned=("mul",))
+                if len(s) == 2 and s[0] == n and s[1] >= d]
+        assert muls, "detector lost its teeth: gather vote product not seen"
+    else:
+        assert big(ga), "detector lost its teeth: gather imputation not seen"
 
 
 @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
@@ -529,16 +541,18 @@ def test_unravel_plan_is_cached_and_bitwise():
 
 
 def test_masked_pallas_mixed_dtype_warns_once():
-    """Satellite: the masked coordwise kernel silently fell back to the
-    imputed tree path when gradient leaves carried mixed dtypes — now it
-    says so, exactly once (deduped against jax's warning-filter churn),
-    and the fallback stays numerically on the documented law."""
+    """Satellite (updated): PAIRWISE kernels need one exchange dtype for
+    the whole row (the Gram couples every column), so a mixed-dtype tree
+    still falls back to the imputed tree path — and says so, exactly once
+    (deduped against jax's warning-filter churn), numerically on the
+    documented law.  Coordwise rules no longer warn: they route per-dtype
+    SEGMENTS through the masked kernel (see the next test)."""
     from repro.core import aggregators as A
     n = 8
     grads = {"a": data(n, 64, jnp.float32, 8),
              "b": data(n, 40, jnp.bfloat16, 9)}
     mask, w = mode_args("weighted", n, 2)
-    spec = make_spec("coordinate_median", f=2, impl="pallas", n=n)
+    spec = make_spec("krum", f=2, impl="pallas", n=n)
     # the dedup set is process-global: clear this test's keys so the
     # assertion is independent of what ran before in the same process
     for key in [k for k in A._WARNED_ONCE
@@ -550,10 +564,37 @@ def test_masked_pallas_mixed_dtype_warns_once():
         spec.aggregate(grads, mask=mask, weights=w)      # second call
     hits = [r for r in rec if "mixed dtypes" in str(r.message)]
     assert len(hits) == 1, [str(r.message) for r in rec]
-    expect = make_spec("coordinate_median", f=2, impl="gather",
+    expect = make_spec("krum", f=2, impl="gather",
                        n=n).aggregate(grads, mask=mask, weights=w)
     for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_masked_pallas_mixed_dtype_coordwise_segments():
+    """Coordwise rules stopped warning on mixed-dtype trees: each
+    uniform-dtype SEGMENT rides the masked kernel (the per-coordinate law
+    never couples columns, so splitting is exact) and the result matches
+    the gather reference leaf-for-leaf — no warning fired."""
+    from repro.core import aggregators as A
+    n = 8
+    grads = {"a": data(n, 64, jnp.float32, 8),
+             "b": data(n, 40, jnp.bfloat16, 9)}
+    mask, w = mode_args("weighted", n, 2)
+    for key in [k for k in A._WARNED_ONCE
+                if k[0] == "masked-pallas-mixed-dtype"]:
+        A._WARNED_ONCE.discard(key)
+    for rule in ("coordinate_median", "trimmed_mean", "sign_sgd",
+                 "sparse_mean"):
+        spec = make_spec(rule, f=2, impl="pallas", n=n)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            out = spec.aggregate(grads, mask=mask, weights=w)
+        assert not [r for r in rec if "mixed dtypes" in str(r.message)], rule
+        expect = make_spec(rule, f=2, impl="gather", n=n).aggregate(
+            grads, mask=mask, weights=w)
+        for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=rule)
 
 
 def test_flat_loops_add_zero_recompiles_under_churn_and_faults():
@@ -581,6 +622,195 @@ def test_flat_loops_add_zero_recompiles_under_churn_and_faults():
         assert spec.respecialize(b).flat_capable
     bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
                          attack="sign_flip")
+    sim = SimConfig(faults=(Join(agents=(7,), at=10),
+                            Churn(rate=0.2, mean_out=2.0,
+                                  agents=(1, 2, 3, 4)),
+                            Straggler(dist="lognormal", scale=0.5),
+                            MessageDrop(p=0.1)),
+                    quorum=3, max_staleness=3, seed=0)
+    before = TRACE_COUNTS["async_step"]
+    before_sync = TRACE_COUNTS["train_step"]
+    _, h = async_train_loop(cfg, bz, adamw(constant(1e-3)), ds, steps=200,
+                            sim=sim, log_every=100, log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"])
+    used = TRACE_COUNTS["async_step"] - before
+    used_sync = TRACE_COUNTS["train_step"] - before_sync
+    assert used + used_sync <= len(el.buckets) + 1, (used, used_sync)
+
+
+# ---------------------------------------------------------------------------
+# 6. compressed exchange: quantized arenas (int8 / fp8 + per-row scale
+#    sidecar), the scaled in-tile-dequant kernels, and the zero-total
+#    weight guards
+
+
+from repro.core.flat import (QUANT_DTYPES, dequantize_rows,  # noqa: E402
+                             fake_quantize, quantize_rows)
+
+SCALED_RULES = ["coordinate_median", "trimmed_mean", "sign_sgd",
+                "sparse_mean"]
+QDTYPES = sorted(QUANT_DTYPES)
+
+
+@pytest.mark.parametrize("qdt", QDTYPES)
+def test_quantize_roundtrip_is_the_dequant_law(qdt):
+    """quantize_rows -> dequantize_rows IS fake_quantize, bit-for-bit:
+    the sidecar decode ``codes * scale[:, None]`` is THE parity oracle
+    every in-tile dequant is asserted against."""
+    n, d = 12, 771
+    g = data(n, d, jnp.float32, 13)
+    codes, qs = quantize_rows(g, jnp.dtype(qdt))
+    assert codes.dtype == jnp.dtype(qdt) and qs.shape == (n,)
+    assert bool(jnp.all(qs > 0))
+    deq = dequantize_rows(codes, qs)
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(fake_quantize(g, jnp.dtype(qdt))))
+    if qdt == "int8":
+        # symmetric round-to-nearest: error bounded by half a code step
+        err = np.abs(np.asarray(deq) - np.asarray(g))
+        assert float(np.max(err / np.asarray(qs)[:, None])) <= 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("qdt", QDTYPES)
+def test_quantize_zero_row_guard(qdt):
+    """An all-zero gradient row (a frozen / just-joined agent) must not
+    divide by its zero amax: scale pins to 1.0, codes to 0, decode to 0."""
+    g = jnp.zeros((4, 640), jnp.float32).at[1].set(
+        data(1, 640, jnp.float32, 14)[0])
+    codes, qs = quantize_rows(g, jnp.dtype(qdt))
+    assert np.isfinite(np.asarray(qs)).all()
+    np.testing.assert_array_equal(np.asarray(qs[0]), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_rows(codes, qs)[0]), 0.0)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("qdt", QDTYPES)
+@pytest.mark.parametrize("rule", SCALED_RULES)
+def test_scaled_flat_matches_gather_dequant(rule, qdt, mode):
+    """The tentpole parity gate: a quantized arena + per-row scale through
+    ``impl="pallas"`` (dequant inside the tile) agrees BIT-FOR-BIT with
+    ``impl="gather"`` (engine-level dequant), which itself agrees with
+    running the rule on the explicitly dequantized rows — across odd/even
+    n and the plain/masked/weighted modes."""
+    for n in NS:
+        g = data(n, 771, jnp.float32, 3)
+        codes, qs = quantize_rows(g, jnp.dtype(qdt))
+        mask, w = mode_args(mode, n, 5)
+        pa = make_spec(rule, f=F, impl="pallas", n=n)
+        ga = make_spec(rule, f=F, impl="gather", n=n)
+        out = pa.aggregate_flat(codes, mask=mask, weights=w, scale=qs)
+        expect = ga.aggregate_flat(codes, mask=mask, weights=w, scale=qs)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect),
+                                      err_msg=f"{rule}/{qdt}/{mode}/n={n}")
+        ref_out = ga.aggregate_flat(dequantize_rows(codes, qs),
+                                    mask=mask, weights=w)
+        np.testing.assert_array_equal(np.asarray(expect),
+                                      np.asarray(ref_out),
+                                      err_msg=f"{rule}/{qdt}/{mode}/n={n}")
+
+
+@pytest.mark.parametrize("rule", SCALED_RULES)
+def test_scaled_masked_pallas_is_dequant_copy_free(rule):
+    """The acceptance gate of the int8/fp8 arena: NO dequantized (n, P)
+    f32 copy is materialized outside the kernel — the cast and the
+    scale-multiply live inside the tile.  The same detector run on the
+    gather path DOES fire (it dequantizes at engine level), proving the
+    check bites."""
+    n, d = 8, 640
+    g = data(n, d, jnp.float32, 4)
+    codes, qs = quantize_rows(g, jnp.dtype("int8"))
+    mask, w = mode_args("weighted", n, 5)
+    banned = ("convert_element_type", "mul", "select_n", "broadcast_in_dim")
+
+    def big(spec):
+        jaxpr = jax.make_jaxpr(
+            lambda c, s, m, w: spec.aggregate_flat(c, mask=m, weights=w,
+                                                   scale=s))(codes, qs,
+                                                             mask, w)
+        return [s for s in _collect_shapes(jaxpr, banned=banned)
+                if len(s) == 2 and s[0] == n and s[1] >= d
+                ]
+
+    pa = make_spec(rule, f=F, impl="pallas", n=n)
+    assert not big(pa), (
+        f"{rule}: dequantized (n, P) copy materialized: {big(pa)}")
+    ga = make_spec(rule, f=F, impl="gather", n=n)
+    assert big(ga), "detector lost its teeth: gather dequant not seen"
+
+
+def test_scaled_fallback_rules_warn_once_and_stay_on_law():
+    """Rules WITHOUT a scaled kernel (krum here) still accept a quantized
+    arena through the engine-level dequant fallback — with a one-time
+    warning naming the in-tile-capable rules — and stay bit-for-bit on
+    the dequantize-then-aggregate law."""
+    from repro.core import aggregators as A
+    n = 8
+    g = data(n, 640, jnp.float32, 15)
+    codes, qs = quantize_rows(g, jnp.dtype("int8"))
+    mask, w = mode_args("weighted", n, 6)
+    spec = make_spec("krum", f=F, impl="pallas", n=n)
+    for key in [k for k in A._WARNED_ONCE if k[0] == "flat-scaled-dequant"]:
+        A._WARNED_ONCE.discard(key)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = spec.aggregate_flat(codes, mask=mask, weights=w, scale=qs)
+        spec.aggregate_flat(codes, mask=mask, weights=w, scale=qs)
+    hits = [r for r in rec if "no scaled" in str(r.message)]
+    assert len(hits) == 1, [str(r.message) for r in rec]
+    expect = spec.aggregate_flat(dequantize_rows(codes, qs),
+                                 mask=mask, weights=w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_masked_zero_total_weight_is_finite_zero():
+    """Satellite pin: with every delivered weight zero (reachable under
+    sparse/dropout weighting: coord_sent * dataset_size can vanish) the
+    masked engine's tot/cnt scale used to go 0/eps-garbage — it now
+    returns an exact finite zero, on the tree AND flat paths."""
+    n, d = 8, 640
+    g = data(n, d, jnp.float32, 2)
+    mask = jnp.ones((n,), bool).at[jnp.arange(4)].set(False)
+    w0 = jnp.zeros((n,))
+    for rule in ("coordinate_median", "trimmed_mean", "sign_sgd",
+                 "sparse_mean"):
+        for impl in ("pallas", "gather"):
+            spec = make_spec(rule, f=F, impl=impl, n=n)
+            out = spec.aggregate(g, mask=mask, weights=w0)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.zeros((d,), np.float32),
+                                          err_msg=f"{rule}/{impl}/tree")
+            vec = spec.aggregate_flat(g, mask=mask, weights=w0)
+            np.testing.assert_array_equal(np.asarray(vec),
+                                          np.zeros((d,), np.float32),
+                                          err_msg=f"{rule}/{impl}/flat")
+
+
+def test_quantized_flat_loop_compiles_once_per_bucket():
+    """The compressed acceptance gate: the SAME 200-step churn + fault
+    run as above, now with an int8 exchange dtype (agg_dtype="int8") —
+    per-row quantize at ravel, scaled in-tile-dequant kernels at
+    aggregate — still compiles at most once per elastic bucket: the
+    quantize/scale threading added ZERO compiles."""
+    from repro.configs import get_config
+    from repro.core.aggregators import elastic, frac
+    from repro.core.tracecount import TRACE_COUNTS
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant
+    from repro.simulator import (Churn, Join, MessageDrop, SimConfig,
+                                 Straggler, async_train_loop)
+    from repro.training import ByzantineConfig
+
+    cfg = get_config("paper-100m-smoke").replace(vocab_size=32,
+                                                 dtype="float32")
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=8, per_agent_batch=1)
+    el = elastic(8, buckets=(4, 6, 8))
+    spec = make_spec("trimmed_mean", f=frac(0.25), n=el)
+    for b in el.buckets:
+        assert spec.respecialize(b).impl == "pallas"
+        assert spec.respecialize(b).flat_capable
+    bz = ByzantineConfig(n_agents=8, f=2, aggregator=spec,
+                         attack="sign_flip", agg_dtype="int8")
     sim = SimConfig(faults=(Join(agents=(7,), at=10),
                             Churn(rate=0.2, mean_out=2.0,
                                   agents=(1, 2, 3, 4)),

@@ -64,6 +64,13 @@ RULES = {
     "rfa": dict(),
     "median_of_means": dict(grouping=True),
     "bulyan": dict(f=1),                       # needs n >= 4f + 3
+    # compressed-exchange rules (PR 9): sign_sgd's estimate lives on the
+    # ±1 hypercube (bounded_output — magnitude can never scale the
+    # deviation; a beyond-f majority steers the VOTE direction instead);
+    # sparse_mean is an undefended weighted mean over sent coordinates
+    # (fragile: one adversary breaks it, exactly like mean)
+    "sign_sgd": dict(bounded_output=True),
+    "sparse_mean": dict(f=0, own_masked=True, fragile=True),
     "clipped": dict(wrapper=True, hyper={"tau": 50.0}),
     "bucketed": dict(wrapper=True, grouping=True, hyper={"group_size": 2}),
     "staleness_discounted": dict(wrapper=True, staleness=True),
@@ -184,14 +191,32 @@ def test_full_roster_mask_is_identity(rule):
 
 
 def expected_masked(spec, g, mask, w, st):
-    """The engine's documented masked law, rebuilt outside the engine:
-    impute departed rows at the delivered weighted mean, run the plain
-    rule, scale by tot/cnt — except weight-decomposable FUSED impls, which
-    fold the per-agent weights into the rule's selection weights."""
+    """The engine's documented masked law, rebuilt outside the engine.
+    Coordinate-wise order statistics and the sign vote: the plain rule on
+    the GATHERED arrived subset (absent rows are never statistics),
+    scaled by tot/cnt.  Everything else: impute departed rows at the
+    delivered weighted mean, run the plain rule, scale by tot/cnt —
+    except weight-decomposable FUSED impls, which fold the per-agent
+    weights into the rule's selection weights."""
     mf = mask.astype(jnp.float32)
     wv = (mf if w is None else w.astype(jnp.float32) * mf)
     cnt = jnp.maximum(mf.sum(), 1.0)
     tot = jnp.maximum(wv.sum(), 1e-30)
+    if spec.name in ("coordinate_median", "trimmed_mean", "sign_sgd"):
+        live = np.flatnonzero(np.asarray(mask))
+        sub = np.asarray(g, np.float32)[live]
+        if spec.name == "sign_sgd":
+            agg = np.sign(np.sign(sub).sum(axis=0))
+        else:
+            s = np.sort(sub, axis=0)
+            c = len(live)
+            b = 0 if spec.name == "coordinate_median" else min(
+                spec.f if spec.hp("beta") is None else
+                int(np.ceil(spec.hp("beta") * N)), (N - 1) // 2)
+            lo = min(b, (c - 1) // 2) if spec.name == "trimmed_mean" \
+                else (c - 1) // 2
+            agg = s[lo:c - lo].mean(axis=0)
+        return agg * float(tot / cnt)
     mean_w = tree_weighted_sum(g, wv / tot)
     imputed = jnp.where(mask[:, None], g, mean_w[None])
     if spec.caps.weight_decomposable and spec.impl == "fused":
@@ -237,6 +262,26 @@ def test_mean_masked_is_exact_subset_mean():
         out = np.asarray(spec.aggregate(g, mask=mask))
         sub = np.asarray(make_spec("mean", n=len(live)).aggregate(g[live]))
         np.testing.assert_allclose(out, sub, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "gather"])
+@pytest.mark.parametrize("rule",
+                         ["coordinate_median", "trimmed_mean", "sign_sgd"])
+def test_attack_does_not_leak_through_absence(rule, impl):
+    """THE masked-robustness regression: under the old impute-at-mean law,
+    absent rows were imputed at the (attack-contaminated) delivered mean
+    and landed INSIDE the trim window — with 2 of 8 rows absent and 2
+    Byzantine rows at 1e6, masked trimmed_mean returned ~1e6/6 instead of
+    the honest statistic, so a single straggler let a large_value attack
+    straight through.  The arrived-window law keeps the f-of-arrived
+    breakdown bound: the result must stay at honest magnitude."""
+    spec = build(rule, impl=impl)
+    g = data(N, D, 77) * 0.1                       # honest rows, O(0.1)
+    g = jnp.asarray(g).at[0].set(1e6).at[1].set(1e6)   # 2 Byzantine
+    mask = jnp.ones((N,), bool).at[-2:].set(False)     # 2 honest absent
+    out = np.asarray(spec.aggregate(g, mask=mask))
+    assert np.isfinite(out).all(), rule
+    assert float(np.max(np.abs(out))) < 10.0, (rule, impl, out[:4])
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +330,11 @@ def test_breakdown_bounded_at_f(rule, seed):
     dev1, spread, hull1 = deviation(spec, N, a, 1e3, seed)
     dev2, _, _ = deviation(spec, N, a, 1e4, seed)
     bound = 10.0 * max(spread, 1e-3)
+    if RULES[rule].get("bounded_output"):
+        # the estimate lives on the ±1 hypercube: its distance to the
+        # honest mean is bounded by the cube diagonal, not the honest
+        # spread — still attack-magnitude-independent (the next assert)
+        bound += float(np.sqrt(32))
     assert dev1 <= bound and dev2 <= bound, (
         f"{rule}: deviation {dev1:.3g}/{dev2:.3g} exceeds {bound:.3g} "
         f"with a={a} <= f adversaries")
@@ -302,7 +352,22 @@ def test_breakdown_beyond_f(rule):
     for the undefended mean, a majority for everything else) steers the
     estimate, with deviation scaling with the attack magnitude."""
     spec = build(rule)
-    a_bad = 1 if rule == "mean" else (N // 2 + 1)
+    if RULES[rule].get("bounded_output"):
+        # a 1-bit estimate cannot scale with the attack magnitude — the
+        # break is a STEERED VOTE: a beyond-f majority flips the estimate's
+        # coordinate signs to the adversarial direction, while <= f
+        # adversaries leave the honest direction in charge
+        g_ok, honest = attack_stack(N, spec.f, 1e3, 0)
+        g_bad, _ = attack_stack(N, N // 2 + 1, 1e3, 0)
+        direction = jnp.sign(jnp.mean(honest, axis=0))
+        aligned = lambda g: float(jnp.mean(
+            jnp.sign(spec.aggregate(g)) == direction))
+        assert aligned(g_ok) > 0.9, "honest majority lost its own vote"
+        assert aligned(g_bad) < 0.1, (
+            f"{rule}: a beyond-f majority failed to steer the sign vote")
+        return
+    a_bad = (1 if rule == "mean" or RULES[rule].get("fragile")
+             else (N // 2 + 1))
     dev1, _, _ = deviation(spec, N, a_bad, 1e3, 0)
     dev2, _, _ = deviation(spec, N, a_bad, 1e4, 0)
     assert dev2 >= 5.0 * max(dev1, 1e-6), (

@@ -99,6 +99,44 @@ def test_data_injection_detection():
         assert int(np.argmax(scores[i])) == 0
 
 
+def test_membership_schedule_silences_churned_agents():
+    """Membership schedules (Join/Rejoin/Churn rosters) used to raise
+    NotImplementedError in the p2p loop; they now fold into the faulted
+    adjacency exactly like crashes — churned-out agents freeze (no
+    broadcast, no update), the live subgraph keeps mixing, and everyone
+    present at the end still converges."""
+    from repro.simulator.faults import Churn, Join, Rejoin, compile_schedule
+
+    targets, grad_fn, x0 = quad_setup()
+    n, steps = 8, 120
+    sched = (Join(agents=(7,), at=10),
+             Rejoin(agents=(6,), leave_at=30, rejoin_at=50),
+             Churn(rate=0.3, mean_out=3.0, agents=(1, 2, 3)))
+    trace = compile_schedule(sched, n, steps + 1, seed=0)
+    traj = p2p_dgd_run(ring_graph(8, 2), grad_fn, x0, steps,
+                       fault_schedule=trace)
+    assert np.isfinite(np.asarray(traj)).all()
+
+    # churned-out members are frozen through their absence: state at the
+    # end of an out-round equals state entering it
+    roster = np.asarray(trace.roster)
+    out_rounds = [(t, i) for t in range(steps) for i in range(n)
+                  if not roster[min(t, trace.horizon - 1), i]]
+    assert out_rounds, "schedule produced no churned-out rounds"
+    for t, i in out_rounds:
+        np.testing.assert_array_equal(np.asarray(traj[t + 1][i]),
+                                      np.asarray(traj[t][i]))
+
+    # the always-present agents (never scheduled out) still descend to the
+    # consensus neighbourhood of the mean target
+    always_in = [i for i in range(n) if roster[:, i].all()]
+    assert always_in
+    opt = jnp.mean(targets, axis=0)
+    err = float(jnp.max(jnp.linalg.norm(
+        traj[-1][jnp.asarray(always_in)] - opt, axis=-1)))
+    assert err < 0.6, err
+
+
 def test_spec_combine_lifts_table2_into_p2p():
     """Any registered AggregatorSpec works as a p2p combine rule: each
     receiver robustly aggregates its in-neighbourhood through the masked
