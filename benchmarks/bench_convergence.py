@@ -1,77 +1,242 @@
-"""Benchmark 2 — the attack x defence convergence matrix (the experimental
-figure every surveyed defence paper reports: final training loss under each
-attack, per filter, vs the undefended mean)."""
+"""Benchmark 2 — the rule x attack x regime convergence leaderboard.
+
+The experimental figure every surveyed defence paper reports, extended the
+way PR 10 extends the threat model: final training loss under each attack
+(static catalogue AND the defense-aware adversaries of
+``core.attacks.adaptive``), per rule (including the defenses with memory:
+``centered_clip`` and the ``server_momentum`` wrapper), per fault regime:
+
+  ``sync``        — full roster, synchronous timing (train_loop);
+  ``stragglers``  — Pareto stragglers + quorum through the async loop;
+  ``churn``       — membership churn over a 3-bucket ELASTIC spec (the
+                    adaptive attacks recalibrate against each bucket's
+                    respecialized spec; the run asserts the bucket compile
+                    budget — zero added recompiles per bucket).
+
+Every cell also reports *suspicion accuracy*: the run is recorded with the
+PR-6 flight recorder and the per-agent selection-weight telemetry is asked
+to finger the Byzantine set (top-f suspicion vs the actual first f agents).
+A defense can hold the loss yet fail to identify the attacker (clipping
+bounds influence without localizing it) — the leaderboard shows both.
+
+``--smoke`` runs the CI-sized subset; the full grid runs from
+``benchmarks/run.py --full``.
+"""
 from __future__ import annotations
 
 import time
 
 from repro.configs.base import ArchConfig
-from repro.core.aggregators import make_spec
+from repro.core.aggregators import elastic, frac, make_spec, server_momentum
+from repro.core.tracecount import TRACE_COUNTS
 from repro.data import SyntheticLM
+from repro.obs.recorder import Recorder
+from repro.obs.telemetry import agent_series, suspicion_scores
 from repro.optim import adamw, constant
+from repro.simulator import (Churn, Join, SimConfig, Straggler,
+                             async_train_loop)
 from repro.training import ByzantineConfig, train_loop
 
 CFG = ArchConfig(name="bench", family="dense", num_layers=2, d_model=64,
                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
                  head_dim=16, dtype="float32")
 
+N, F = 8, 2
+BUCKETS = (4, 6, 8)
+LR = 3e-3
+
+# attack strengths chosen to actually break the undefended mean
+# (scale-1 sign-flip leaves the mean positively aligned)
+ATTACK_HYPER = {"sign_flip": {"scale": 4.0}, "alie": {"z": 3.0}}
+
+SMOKE_RULES = ["mean", "trimmed_mean", "centered_clip", "server_momentum"]
+FULL_RULES = ["mean", "trimmed_mean", "coordinate_median", "krum",
+              "multi_krum", "cge", "phocas", "mda", "bulyan",
+              "geometric_median", "median_of_means", "centered_clip",
+              "server_momentum"]
+SMOKE_ATTACKS = ["none", "sign_flip", "spec_alie", "min_max"]
+FULL_ATTACKS = ["none", "sign_flip", "large_value", "alie", "ipm",
+                "gaussian", "zero", "spec_alie", "min_max", "slow_drift"]
+# the robust-with-memory rules the acceptance gate tracks across regimes
+MEMORY_RULES = ("centered_clip", "server_momentum")
+ADAPTIVE = ("spec_alie", "min_max", "slow_drift")
+# converged-noise floor for the 2x-of-clean gate: once the clean run is
+# below this, doubling it is training noise, not an attack succeeding
+LOSS_FLOOR = 0.05
+
+
+def build_spec(rule, n_spec, f_spec):
+    hyper = {"tau": 1.0} if rule == "centered_clip" else {}
+    if rule == "server_momentum":
+        return server_momentum(make_spec("trimmed_mean", f=f_spec, n=n_spec))
+    if rule == "bulyan":
+        # bulyan needs n >= 4f + 3: at n=8 that caps f at 1
+        return make_spec(rule, f=1, n=n_spec)
+    return make_spec(rule, f=f_spec, n=n_spec, **hyper)
+
+
+def _sim(regime, seed=0):
+    if regime == "stragglers":
+        return SimConfig(faults=(Straggler(dist="pareto", scale=1.0,
+                                           prob=0.4, agents=(3, 4)),),
+                         quorum=6, max_staleness=3, seed=seed)
+    if regime == "churn":
+        # at most two agents out at once: the live roster never drops
+        # below 6, so with f = frac(1/3) every bucket keeps the two
+        # Byzantine agents (always live) at <= f — the defenses are
+        # benchmarked inside their tolerance, per bucket
+        return SimConfig(faults=(Join(agents=(7,), at=4),
+                                 Churn(rate=0.15, mean_out=2.0,
+                                       agents=(3, 4)),),
+                         seed=seed)
+    raise KeyError(regime)
+
+
+def run_cell(rule, attack, regime, steps):
+    """One leaderboard cell: train, record, score.  Returns the cell dict."""
+    if regime == "churn":
+        spec = build_spec(rule, elastic(N, buckets=BUCKETS),
+                          frac(1.0 / 3.0))
+    else:
+        spec = build_spec(rule, N, F)
+    bz = ByzantineConfig(n_agents=N, f=F, aggregator=spec, attack=attack,
+                         attack_hyper=dict(ATTACK_HYPER.get(attack, {})))
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=N,
+                     per_agent_batch=4)
+    rec = Recorder()
+    before = TRACE_COUNTS["async_step"]
+    t0 = time.perf_counter()
+    if regime == "sync":
+        # train_loop itself reroutes stateful rules and adaptive attacks
+        # through the general async path (synchronous timing, no faults)
+        _, hist = train_loop(CFG, bz, adamw(constant(LR)), ds, steps=steps,
+                             log_every=steps, log_fn=lambda *_: None,
+                             recorder=rec)
+        compiles = None
+    else:
+        _, hist = async_train_loop(CFG, bz, adamw(constant(LR)), ds,
+                                   steps=steps, sim=_sim(regime),
+                                   log_every=steps, log_fn=lambda *_: None,
+                                   recorder=rec)
+        compiles = TRACE_COUNTS["async_step"] - before
+        if regime == "churn" and compiles > len(BUCKETS):
+            raise AssertionError(
+                f"{rule}|{attack}|churn: {compiles} compiles over "
+                f"{len(BUCKETS)} buckets — elastic budget blown")
+    wall = time.perf_counter() - t0
+    rec.close()
+    susp_acc = None
+    if attack != "none":
+        ser = agent_series(rec.events, N)
+        if ser["sel_w"].shape[0]:
+            scores = suspicion_scores(ser["sel_w"], ser["mask"],
+                                      ser.get("roster"))
+            by_susp = sorted(range(N),
+                             key=lambda i: -scores[i]["suspicion"])
+            susp_acc = len(set(by_susp[:F]) & set(range(F))) / F
+    return {
+        "regime": regime, "attack": attack, "rule": rule,
+        "final_loss": round(float(hist[-1]["loss"]), 4),
+        "suspicion_acc": susp_acc,
+        "compiles": compiles,
+        "us_per_call": round(wall / steps * 1e6, 1),
+    }
+
+
+def grid(quick: bool = True):
+    """The (regime, attack, rule) cells of the leaderboard."""
+    rules = SMOKE_RULES if quick else FULL_RULES
+    attacks = SMOKE_ATTACKS if quick else FULL_ATTACKS
+    cells = [("sync", a, r) for a in attacks for r in rules]
+    # fault regimes: the robust subset the acceptance gate tracks (the
+    # undefended mean's breakage is established in the sync block)
+    fr_rules = [r for r in rules
+                if r in ("trimmed_mean",) + MEMORY_RULES]
+    fr_attacks = [a for a in attacks if a == "none" or a in ADAPTIVE]
+    for regime in ("stragglers", "churn"):
+        cells += [(regime, a, r) for a in fr_attacks for r in fr_rules]
+    return cells
+
 
 def run(quick: bool = True):
-    steps = 40 if quick else 150
-    filters = (["mean", "trimmed_mean", "krum", "cge"] if quick else
-               ["mean", "trimmed_mean", "coordinate_median", "krum",
-                "multi_krum", "geometric_median", "median_of_means", "cge",
-                "cgc", "phocas", "bulyan", "mda"])
-    # attack strengths chosen to actually break the undefended mean
-    # (scale-1 sign-flip leaves the mean positively aligned)
-    hypers = {"sign_flip": {"scale": 4.0}, "alie": {"z": 3.0}}
-    attacks = (["sign_flip", "large_value"] if quick else
-               ["sign_flip", "large_value", "alie", "ipm", "gaussian",
-                "zero"])
-    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=8,
-                     per_agent_batch=4)
+    """benchmarks/run.py entry point — CSV-shaped rows."""
+    steps = 12 if quick else 60
     rows = []
-    for attack in attacks:
-        for name in filters:
-            bz = ByzantineConfig(n_agents=8, f=2,
-                                 aggregator=make_spec(name, f=2, n=8),
-                                 attack=attack,
-                                 attack_hyper=hypers.get(attack, {}))
-            t0 = time.perf_counter()
-            _, hist = train_loop(CFG, bz, adamw(constant(3e-3)), ds,
-                                 steps=steps, log_fn=lambda *_: None)
-            wall = time.perf_counter() - t0
-            rows.append({
-                "bench": "attack_defence_matrix",
-                "name": f"{attack}|{name}",
-                "us_per_call": round(wall / steps * 1e6, 1),
-                "derived": f"final_loss={hist[-1]['loss']:.4f}",
-            })
+    for regime, attack, rule in grid(quick):
+        c = run_cell(rule, attack, regime, steps)
+        sa = ("-" if c["suspicion_acc"] is None
+              else f"{c['suspicion_acc']:.2f}")
+        rows.append({
+            "bench": "convergence_leaderboard",
+            "name": f"{regime}|{attack}|{rule}",
+            "us_per_call": c["us_per_call"],
+            "derived": f"final_loss={c['final_loss']:.4f};susp_acc={sa}",
+            "cell": c,
+        })
     return rows
 
 
+def check_artifact(data: dict) -> list[str]:
+    """The leaderboard's own acceptance gate (also run by CI on the smoke
+    artifact).  Returns a list of violations (empty = pass):
+
+      * the undefended mean is broken by every attack it faced (final
+        loss >= 2x its clean run in the same regime);
+      * every robust-with-memory cell holds final loss within 2x of that
+        rule's clean run IN THE SAME REGIME (or within 2x of LOSS_FLOOR
+        once the clean run has converged below it), under every attack at
+        <= f — including the defense-aware ones, across all three regimes;
+      * churn cells stayed inside the elastic bucket compile budget.
+    """
+    cells = data["rows"]
+    by_key = {(c["regime"], c["attack"], c["rule"]): c for c in cells}
+    bad = []
+    for c in cells:
+        clean = by_key.get((c["regime"], "none", c["rule"]))
+        if clean is None:
+            continue
+        if c["rule"] == "mean" and c["attack"] != "none":
+            if c["final_loss"] < 2.0 * clean["final_loss"]:
+                bad.append(
+                    f"undefended mean NOT broken by {c['attack']} in "
+                    f"{c['regime']} ({clean['final_loss']} -> "
+                    f"{c['final_loss']})")
+        if c["rule"] in MEMORY_RULES and c["attack"] != "none":
+            if c["final_loss"] > 2.0 * max(clean["final_loss"], LOSS_FLOOR):
+                bad.append(
+                    f"{c['rule']} degraded by {c['attack']} in "
+                    f"{c['regime']}: {clean['final_loss']} -> "
+                    f"{c['final_loss']} (beyond 2x clean)")
+        if c["regime"] == "churn" and (c["compiles"] or 0) > len(BUCKETS):
+            bad.append(f"{c['rule']}|{c['attack']}|churn: compile budget "
+                       f"{c['compiles']} > {len(BUCKETS)}")
+    return bad
+
+
 def main(out: str = "BENCH_convergence.json", smoke: bool = False):
-    """Standalone artifact: the attack x defence matrix as provenance-
-    stamped JSON (rows keyed attack|filter with final losses), the shape
-    the CI bench-smoke lane archives next to BENCH_serving.json."""
+    """Standalone artifact: the leaderboard as provenance-stamped JSON
+    (``rows`` = one dict per (regime, attack, rule) cell with final loss,
+    suspicion accuracy and the churn compile count), the shape the CI
+    bench-smoke lane archives and asserts on next to BENCH_serving.json."""
     import json
 
-    rows = run(quick=smoke)
-    grid = []
-    for r in rows:
-        attack, flt = r["name"].split("|", 1)
-        grid.append({"attack": attack, "filter": flt,
-                     "us_per_call": r["us_per_call"],
-                     "final_loss": float(r["derived"].split("=", 1)[1])})
+    cells = [r["cell"] for r in run(quick=smoke)]
     from repro.obs.provenance import provenance
-    results = {"bench": "attack_defence_matrix", "smoke": bool(smoke),
-               "grid": grid, "provenance": provenance()}
+    results = {"bench": "convergence_leaderboard", "smoke": bool(smoke),
+               "rows": cells, "provenance": provenance()}
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
-    for g in grid:
-        print(f"{g['attack']:>12s} | {g['filter']:<18s} "
-              f"loss={g['final_loss']:.4f}")
+    for c in cells:
+        sa = ("-" if c["suspicion_acc"] is None
+              else f"{c['suspicion_acc']:.2f}")
+        print(f"{c['regime']:>10s} | {c['attack']:>10s} | "
+              f"{c['rule']:<16s} loss={c['final_loss']:.4f} susp={sa}")
+    bad = check_artifact(results)
+    for b in bad:
+        print(f"LEADERBOARD VIOLATION: {b}")
     print(f"wrote {out}")
+    if bad:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

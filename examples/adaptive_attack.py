@@ -1,0 +1,86 @@
+"""Defense-aware attacks vs defenses with memory (survey §5's hardest
+setting: the adversary who SEES the defense).
+
+A cluster of 8 agents (2 Byzantine) trains a smoke-scale LM under four
+matchups on identical data:
+
+  1. krum | static catalogue — krum filters every static attack from the
+     zoo (`core/attacks/gradient.py`) exactly: the poisoned rows lose the
+     pairwise-distance vote bitwise, training matches the clean run;
+  2. krum | spec_alie — the defense-aware attacker holds the SPEC (it is
+     a typed object) and line-searches, inside jit, the largest
+     variance-aligned poison that still wins krum's vote: same defense,
+     measurably degraded training;
+  3. centered_clip | spec_alie + min_max — the history filter: every row
+     is iteratively re-clipped to radius tau around the server center
+     carried ACROSS rounds (`init_state`/`update_state`), so even a
+     poison calibrated against centered_clip itself moves the estimate by
+     at most iters * tau per step — training holds near clean;
+  4. the last run is flight-recorded (repro.obs): the per-agent suspicion
+     report reconstructs WHO was being clipped from the effective
+     clip-weight telemetry — the two Byzantine agents surface on top.
+
+Run:  PYTHONPATH=src python examples/adaptive_attack.py [--trace-dir DIR]
+"""
+import argparse
+import os
+
+from repro.configs.base import ArchConfig
+from repro.core.aggregators import make_spec
+from repro.data import SyntheticLM
+from repro.obs import Recorder
+from repro.obs.report import render_report
+from repro.optim import adamw, constant
+from repro.training import ByzantineConfig, train_loop
+
+N, F, STEPS = 8, 2, 30
+
+CFG = ArchConfig(name="demo", family="dense", num_layers=2, d_model=64,
+                 num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                 head_dim=16, dtype="float32")
+
+KRUM = dict(rule="krum", hyper={})
+CCLIP = dict(rule="centered_clip", hyper={"tau": 1.0})
+
+RUNS = [
+    ("krum          | clean", KRUM, "none", {}),
+    ("krum          | alie (static, z=3)", KRUM, "alie", {"z": 3.0}),
+    ("krum          | sign_flip (static)", KRUM, "sign_flip",
+     {"scale": 4.0}),
+    ("krum          | spec_alie (ADAPTIVE)", KRUM, "spec_alie", {}),
+    ("centered_clip | clean", CCLIP, "none", {}),
+    ("centered_clip | min_max (ADAPTIVE)", CCLIP, "min_max", {}),
+    ("centered_clip | spec_alie (ADAPTIVE)", CCLIP, "spec_alie", {}),
+]
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-dir", default=os.path.dirname(__file__) or ".",
+                help="where the recorded trace JSONL lands")
+args = ap.parse_args()
+os.makedirs(args.trace_dir, exist_ok=True)
+trace_path = os.path.join(args.trace_dir, "adaptive_attack_trace.jsonl")
+
+print(f"{'matchup':38s} {'final loss':>10s}")
+recorder = None
+for i, (name, defense, attack, hyper) in enumerate(RUNS):
+    spec = make_spec(defense["rule"], f=F, n=N, **defense["hyper"])
+    bz = ByzantineConfig(n_agents=N, f=F, aggregator=spec, attack=attack,
+                         attack_hyper=hyper)
+    ds = SyntheticLM(vocab_size=64, seq_len=32, n_agents=N,
+                     per_agent_batch=4)
+    if i == len(RUNS) - 1:                 # flight-record the final run
+        recorder = Recorder(trace_path,
+                            meta={"example": "adaptive_attack",
+                                  "matchup": name})
+    _, hist = train_loop(CFG, bz, adamw(constant(3e-3)), ds, steps=STEPS,
+                         log_every=STEPS, log_fn=lambda *_: None,
+                         recorder=recorder if i == len(RUNS) - 1 else None)
+    print(f"{name:38s} {hist[-1]['loss']:10.4f}")
+
+recorder.close()
+print(f"\nflight-recorder trace -> {trace_path}\n")
+print(render_report(recorder.events))
+print("\nkrum is sound against the whole static catalogue yet falls to the"
+      "\nspec-aware line search; the carried clip center bounds what ANY"
+      "\nper-round poison can do, and its clip-weight telemetry still"
+      "\nfingers the attackers (agents 0, 1 above).")

@@ -35,7 +35,8 @@ COORDWISE = {n for n, d in REGISTRY.items()
 WEIGHTED = {n for n, d in REGISTRY.items()
             if d.caps.weight_decomposable and "table2" in d.tags}
 ITERATIVE = {n for n, d in REGISTRY.items()
-             if d.caps.iterative and "meta" not in d.tags}
+             if d.caps.iterative and "table2" in d.tags
+             and "meta" not in d.tags}
 
 
 def _shim_spec(fn_name, name, f, impl, hyper):

@@ -49,10 +49,33 @@ Registered rules — caps, impls, masked kernels, elastic, telemetry, compressio
     bulyan              iterative, pairwise        fused, gather, pls  yes     yes (theta/beta)    theta sel  q (deq)
     sign_sgd            coordwise                  fused, gather, pls  yes     yes                 particip.  1-bit vote
     sparse_mean         coordwise (custom+flat)    flat, gather law    yes     yes                 particip.  sparse
+    centered_clip       iterative, STATEFUL        flat, gather, pls*  own     yes (state n-free)  clip w     --
     clipped             wrapper                    delegates to inner  --      via inner           via inner  --
     bucketed            wrapper                    delegates to inner  --      via inner           particip.  --
     staleness_disc.     wrapper                    delegates to inner  --      via inner           via inner  --
+    server_momentum     wrapper, STATEFUL          delegates to inner  --      via inner           via inner  --
     ==================  =========================  ==================  ======  ==================  =========  =========
+
+    Defenses with MEMORY (the PR-10 history filters — the survey's answer
+    to adaptive, defense-aware attackers): ``centered_clip`` iteratively
+    re-clips every row to radius ``tau`` around the CARRIED server center
+    (state key ``server_grad``, EMA of past aggregates via ``ema``), so a
+    poison small enough to survive one round still cannot move the
+    estimate more than ``iters * tau`` per step; its telemetry (*clip w*)
+    exposes the effective per-row clip weights ``lam_i``, and ``pls*``
+    marks the explicit-opt-in fused MAC (``impl="pallas"`` routes the
+    per-iteration multiply-accumulate through
+    ``kernels.wsum.clipped_weighted_sum``; ``auto`` keeps the dense body
+    — different reduce association).  ``server_momentum`` wraps ANY inner
+    rule and EMAs its outputs (``beta``), de-correlating round-to-round
+    adaptive bias; both thread state through the ordinary
+    ``init_state``/``update_state`` protocol the async loop already
+    carries for zeno (``state["inner"]`` nests wrapper chains).  The
+    defense-aware attack side lives in :mod:`repro.core.attacks.adaptive`
+    (``spec_alie`` / ``min_max`` line-search their poison against the
+    executing spec itself; ``slow_drift`` accumulates bias below
+    per-round thresholds) and the two sides meet in
+    ``benchmarks/bench_convergence.py``'s leaderboard.
 
     ``compress`` (the compressed robust exchange layer, ROADMAP item 3):
     *1-bit vote* — ``sign_sgd`` exchanges sign(g) (1 bit/coordinate) and
@@ -713,13 +736,19 @@ class AggregatorSpec:
     def flat_capable(self) -> bool:
         """True iff this spec can aggregate a pre-raveled (n, P) arena via
         :meth:`aggregate_flat` — the dense-stack impls (gather / pallas)
-        of plain, stateless rules.  Composition wrappers, custom-path
+        of plain stateless rules, plus stateful rules that registered an
+        explicit flat law.  Composition wrappers, other custom-path
         rules and the fused (leaf-wise, sharding-aware) impl keep the
         tree engine: their arithmetic is defined on leaves, and flattening
         would silently change reduce orders."""
         d = get_aggregator_def(self.name)
-        if d.is_wrapper or self.stateful:
+        if d.is_wrapper:
             return False
+        if self.stateful:
+            # stateful rules ride the arena only through an explicit flat
+            # law (state raveling is rule-specific — see centered_clip);
+            # the caller then passes state= to aggregate_flat
+            return d.flat_fn is not None
         if d.flat_fn is not None:
             return True
         return (d.custom_fn is None and d.masked_fn is None
@@ -892,6 +921,13 @@ def _resolve_impl(name: str, impl: str, hyper: dict | None = None) -> str:
     if impl == "auto":
         return "pallas" if supported else "fused"
     if impl == "pallas" and not supported:
+        from repro.kernels.dispatch import FLAT_SELF_KERNELED
+        if name in FLAT_SELF_KERNELED:
+            # the rule's flat_fn dispatches its own fused kernel stages
+            # (centered_clip's clipped-weighted-sum MAC); the tree path
+            # stays dense.  ``auto`` deliberately does NOT select this —
+            # the kernel's reduce association differs from the dense body.
+            return impl
         from repro.kernels import pallas_supported
         if not pallas_supported(name):
             reason = "no Pallas kernel registered for it"
@@ -1204,10 +1240,12 @@ def _flat_dequant(spec, stack, qscale):
 # law) is not robust: the delivered mean is attack-contaminated, so the
 # ghost rows land inside the trim window and one straggler lets the attack
 # through.  sparse_mean is arrived-only by construction (absent rows carry
-# zero weight); phocas/mean_around_median still ride the imputed fallback
-# (their closest-to-statistic windows are not count-indexable — see
-# ROADMAP).
-_ARRIVED_STAT_RULES = ("coordinate_median", "trimmed_mean", "sign_sgd")
+# zero weight).  phocas/mean_around_median ride the count-windowed
+# closest-to-center law (kernels/ref.arrived_mean_closest_ref): center
+# from the arrived-window statistic, then the cnt-f arrived rows closest
+# to it per coordinate.
+_ARRIVED_STAT_RULES = ("coordinate_median", "trimmed_mean", "sign_sgd",
+                       "phocas", "mean_around_median")
 
 
 def _arrived_coord_vec(spec, xf, mask):
@@ -1219,6 +1257,11 @@ def _arrived_coord_vec(spec, xf, mask):
         return ref.masked_sign_vote_ref(xf, mask)
     if spec.name == "coordinate_median":
         return ref.masked_stat_ref(xf, mask, None, "median")
+    if spec.name == "phocas":
+        return ref.arrived_mean_closest_ref(xf, mask, "trimmed_mean",
+                                            spec.f)
+    if spec.name == "mean_around_median":
+        return ref.arrived_mean_closest_ref(xf, mask, "median", spec.f)
     b = trim_count(xf.shape[0], spec.f, spec.hp("beta"))
     return ref.masked_stat_ref(xf, mask, None, "trimmed_mean", b=b)
 
@@ -1347,12 +1390,24 @@ def _selection_weights(spec, d, grads, mask, weights, state):
                                          spec.hp("gamma", 0.7))
             return spec.inner.selection_weights(
                 grads, mask=mask, weights=w, state=inner_state)
+        if name == "server_momentum":
+            # momentum mixes on the OUTPUT; the per-row transform is the
+            # identity, so attribution is the inner rule's selection
+            return spec.inner.selection_weights(
+                grads, mask=mask, weights=weights, state=inner_state)
         # bucketed (and any future group-transform wrapper): rows enter
         # through their group means — per-agent attribution is uniform
         return _participation(grads, mask, weights)
     if name == "zeno_pp":
         # the custom path's own weights (normalized over accepted rows)
         return _zeno_pp_weights(spec, grads, mask, weights, state)
+    if name == "centered_clip":
+        # effective clip weights of the final iteration, normalized — a
+        # row the carried center distrusts (large ||g_i - v||) reports a
+        # proportionally smaller share
+        _, lam = _cclip_iterate(spec, grads, mask, weights, state)
+        tot = jnp.sum(lam)
+        return jnp.where(tot > 0, lam / jnp.maximum(tot, 1e-30), lam)
     if name == "bulyan":
         if spec.hp("base", "krum") != "krum":
             return _participation(grads, mask, weights)
@@ -1891,6 +1946,140 @@ def zeno_pp(spec, grads, mask, weights, state):
 
 
 # ---------------------------------------------------------------------------
+# defenses with memory (Karimireddy et al. line): iterative clipping around
+# the carried server estimate, and the server-momentum composition wrapper.
+# Both live on the same init_state/update_state protocol as zeno/zeno_pp —
+# elastic respecialization and conformance coverage come free from the
+# registry.
+
+
+def _cclip_center(state, grads):
+    """``state["server_grad"]`` shaped like one row of ``grads``: when the
+    caller works on a bare (n, d)/(n, P) stack (conformance probes, the
+    flat arena) but the carried center is a pytree, ravel it once (the
+    ``_zeno_gather_state`` pattern)."""
+    v = state["server_grad"]
+    if hasattr(grads, "ndim"):
+        leaves = jax.tree.leaves(v)
+        if len(leaves) == 1 and leaves[0].ndim == grads.ndim - 1:
+            return leaves[0].astype(jnp.float32)
+        return tree_stack_ravel(jax.tree.map(
+            lambda l: l.astype(jnp.float32)[None], v))[0]
+    return jax.tree.map(lambda c: c.astype(jnp.float32), v)
+
+
+def _cclip_iterate(spec, grads, mask, weights, state):
+    """The centered-clipping fixed point on a gradient pytree (or bare
+    stack): ``iters`` rounds of
+
+        v <- v + sum_i w_i min(1, tau/||g_i - v||) (g_i - v) / sum_i w_i
+
+    starting from the CARRIED center.  Absent rows are where-gated to an
+    exact 0 before the norm (departed-content invariance: inf/NaN garbage
+    in a dead row cannot reach the distance, the clip or the sum).
+    Returns ``(v_final fp32 tree, lam_last (n,))`` — lam_last are the
+    final iteration's effective clip weights, the telemetry signal."""
+    n = _n_agents(grads)
+    tau = spec.hp("tau", 1.0)
+    iters = spec.hp("iters", 5)
+    m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    m, w, _, tot = _masked_prelude(grads, m, weights)
+    wn = w / tot
+    v0 = _cclip_center(state, grads)
+
+    def lam_of(v):
+        diff = jax.tree.map(
+            lambda l, c: jnp.where(
+                m.reshape((-1,) + (1,) * (l.ndim - 1)),
+                l.astype(jnp.float32) - c.astype(jnp.float32)[None], 0.0),
+            grads, v)
+        dist = jnp.sqrt(jnp.maximum(tree_sqnorms(diff), 1e-30))
+        return wn * jnp.minimum(1.0, tau / dist), diff
+
+    def body(_, v):
+        lam, diff = lam_of(v)
+        return jax.tree.map(
+            lambda vv, dd: vv + jnp.sum(
+                dd * lam.reshape((-1,) + (1,) * (dd.ndim - 1)), axis=0),
+            v, diff)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    lam, _ = lam_of(v)
+    return v, lam
+
+
+def _cclip_flat(spec, stack, mask, weights, state, qscale=None):
+    """centered_clip on the (n, P) arena.  The per-iteration clip radius
+    needs full-row norms (a cross-tile reduction), so the scalar stage is
+    jnp; the model-sized multiply-accumulate rides the fused
+    clipped-weighted-sum kernel (repro.kernels.wsum) under
+    ``impl="pallas"``."""
+    n, P = stack.shape
+    if qscale is not None:
+        from repro.core.flat import dequantize_rows
+        xf = dequantize_rows(stack, qscale)
+    else:
+        xf = _flat_f32(stack)
+    m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    m, w, _, tot = _masked_prelude(stack, m, weights)
+    wn = w / tot
+    tau = spec.hp("tau", 1.0)
+    iters = spec.hp("iters", 5)
+    v0 = _cclip_center(state, xf)
+
+    def lam_of(v):
+        diff = jnp.where(m[:, None], xf - v[None], 0.0)
+        dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 1e-30))
+        return wn * jnp.minimum(1.0, tau / dist), diff
+
+    use_kernel = spec.impl == "pallas"
+    if use_kernel:
+        from repro.kernels import clipped_weighted_sum, default_interpret
+        from repro.kernels.tiling import TILE_D
+        use_kernel = P % TILE_D == 0
+
+    def body(_, v):
+        lam, diff = lam_of(v)
+        if use_kernel:
+            return clipped_weighted_sum(lam, xf, v,
+                                        interpret=default_interpret())
+        return v + jnp.sum(diff * lam[:, None], axis=0)
+
+    return jax.lax.fori_loop(0, iters, body, v0)
+
+
+def _cclip_init_state(spec, proto):
+    return _server_grad_zeros(proto)
+
+
+def _cclip_update_state(spec, state, agg):
+    # ema=1 (default): the center IS the last aggregate — Karimireddy et
+    # al.'s v_{t} = agg_t; smaller ema trails it
+    return _server_grad_ema(state, agg, spec.hp("ema", 1.0))
+
+
+@register_aggregator(
+    "centered_clip",
+    caps=AggregatorCaps(iterative=True, sharding_aware=True,
+                        masked_capable=True, stateful=True),
+    hyper=("tau", "iters", "ema"), state_keys=("server_grad",),
+    flat_fn=_cclip_flat,
+    init_state=_cclip_init_state, update_state=_cclip_update_state,
+    tags=("memory",))
+def centered_clip(spec, grads, mask, weights, state):
+    """Centered clipping (Karimireddy et al.): iteratively re-clip every
+    row around the CARRIED server estimate v (an EMA of past aggregates),
+    so a perturbation small enough to pass one round still cannot bias
+    the aggregate by more than tau per step — the history-aware answer to
+    ALIE/IPM-style inside-the-spread attacks.  The clip saturates: beyond
+    f the adversary gains rows, never magnitude.  Masked rows contribute
+    exact zeros (own masked law — no mean imputation: an imputed row
+    would drag v toward the attacker-controlled delivered mean)."""
+    v, _ = _cclip_iterate(spec, grads, mask, weights, state)
+    return v
+
+
+# ---------------------------------------------------------------------------
 # compressed robust exchange: sparse/dropout per-coordinate weighting.  A
 # zero coordinate means NOT SENT (the fed_dropout_avg convention), so the
 # aggregate averages each coordinate over (coord_sent) * weight — per-
@@ -2065,6 +2254,35 @@ def _inner_state(spec, state):
     return None
 
 
+def _server_momentum_fn(spec, grads, mask, weights, state):
+    """Server momentum as a composition wrapper (the survey's history
+    filter): the emitted update is an EMA of the inner rule's aggregates,
+
+        out_t = beta * m_{t-1} + (1 - beta) * inner(g_t),   m_t = out_t
+
+    so a single poisoned round moves the served direction by at most
+    (1 - beta) of the inner rule's error, and round-to-round sign flips
+    (the classic way adaptive attacks whipsaw one-shot rules) average
+    out.  Wraps ANY registered rule; state nests the inner rule's own
+    memory under ``state["inner"]`` like every other wrapper."""
+    beta = spec.hp("beta", 0.9)
+    inner = spec.inner.aggregate(grads, mask=mask, weights=weights,
+                                 state=_inner_state(spec, state))
+    m = state["server_grad"]
+    return jax.tree.map(
+        lambda mm, a: (beta * mm.astype(jnp.float32)
+                       + (1.0 - beta) * a.astype(jnp.float32)), m, inner)
+
+
+def _server_momentum_init(spec, proto):
+    return _server_grad_zeros(proto)
+
+
+def _server_momentum_update(spec, state, agg):
+    # the momentum buffer IS the emitted update (out_t above)
+    return _server_grad_ema(state, agg, 1.0)
+
+
 register_aggregator(
     "clipped",
     caps=AggregatorCaps(masked_capable=True, sharding_aware=True),
@@ -2078,6 +2296,14 @@ register_aggregator(
     caps=AggregatorCaps(masked_capable=True, sharding_aware=True,
                         staleness_aware=True),
     hyper=("weighting", "power", "gamma"), is_wrapper=True)(_staleness_fn)
+register_aggregator(
+    "server_momentum",
+    caps=AggregatorCaps(masked_capable=True, sharding_aware=True,
+                        stateful=True),
+    hyper=("beta",), state_keys=("server_grad",),
+    init_state=_server_momentum_init,
+    update_state=_server_momentum_update,
+    is_wrapper=True)(_server_momentum_fn)
 
 
 def clipped(inner: AggregatorSpec, tau: float = 1.0) -> AggregatorSpec:
@@ -2096,12 +2322,17 @@ def staleness_discounted(inner: AggregatorSpec, weighting: str = "poly",
                      weighting=weighting, power=power, gamma=gamma)
 
 
+def server_momentum(inner: AggregatorSpec,
+                    beta: float = 0.9) -> AggregatorSpec:
+    return make_spec("server_momentum", f=inner.f, inner=inner, beta=beta)
+
+
 __all__ = [
     "AggregatorCaps", "AggregatorDef", "AggregatorSpec",
     "AggregatorDeprecationWarning", "REGISTRY", "register_aggregator",
     "get_aggregator_def", "list_aggregators", "make_spec", "warn_once",
     "pallas_available", "ElasticN", "FlatPlan", "FracF", "elastic", "frac",
-    "clipped", "bucketed", "staleness_discounted",
+    "clipped", "bucketed", "staleness_discounted", "server_momentum",
     "tree_stack_ravel", "tree_unravel_like", "tree_sqnorms", "tree_gram",
     "tree_dot", "tree_weighted_sum", "tree_where_agents",
     "tree_geometric_median", "tree_median_of_means", "tree_bulyan",

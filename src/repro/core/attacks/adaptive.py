@@ -1,0 +1,319 @@
+"""Defense-aware (adaptive) Byzantine attacks — the survey's hardest regime.
+
+A static attack (``core.attacks.gradient``) perturbs blindly; an *adaptive*
+attack is compiled against the specific defense it faces.  Here the adversary
+receives the typed :class:`~repro.core.aggregators.AggregatorSpec` — a frozen,
+array-free object carrying the rule name, f, trim/selection hyperparameters
+and the wrapper chain — plus the honest-gradient moments, and optimizes its
+perturbation against exactly that rule:
+
+``spec_alie``
+    ALIE ("a little is enough") with the z-score *calibrated from the spec's
+    trim window* at build time: large enough to bias, small enough that the
+    f Byzantine rows stay strictly inside the rule's selection set.  The
+    static ALIE's fixed z lands outside trimmed_mean's kept window and gets
+    discarded; the calibrated one survives it.
+
+``min_max``
+    Line-searches (bisection under ``jax.lax.fori_loop``, so it jits) the
+    largest deviation along the reversed honest mean that still *survives*
+    ``spec.aggregate`` — the attack literally runs the defense inside its own
+    forward pass and backs off until the rule accepts the poison.
+
+``slow_drift``
+    Stateful: a direction-locked bias ramped slowly across rounds, each round
+    individually below per-round detection thresholds, so history-free
+    defenses pass it while the accumulated drift diverges training.  Attack
+    state threads through the jitted step exactly like aggregator state.
+
+Protocol: ``attack(key, g, byz_mask, state, defense_vec=None) -> (g', state')``
+with ``g`` an (n, d) stack (the flat arena's per-leaf or raveled view),
+``byz_mask`` (n,) bool (True = Byzantine), ``state`` the pytree returned by
+``attack.init_state()``, and ``defense_vec`` the defense's carried center
+(raveled ``server_grad``) when the defense is stateful — the omniscient,
+state-aware threat model.  Honest rows are bitwise untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.core.attacks.gradient import honest_moments
+
+ADAPTIVE_ATTACKS: dict = {}
+
+
+def register_adaptive(name):
+    def deco(factory):
+        ADAPTIVE_ATTACKS[name] = factory
+        return factory
+    return deco
+
+
+def is_adaptive_attack(attack) -> bool:
+    """True iff ``attack`` names (or is) a defense-aware attack."""
+    if isinstance(attack, DefenseAwareAttack):
+        return True
+    return isinstance(attack, str) and attack in ADAPTIVE_ATTACKS
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseAwareAttack:
+    """An attack instance compiled against one :class:`AggregatorSpec`.
+
+    Frozen and array-free (closures capture only python scalars and the
+    spec), so instances pass through jit boundaries like specs do.  Under
+    elastic membership the per-bucket step rebuilds the attack against the
+    respecialized bucket spec — calibration tracks the defense's actual
+    (n, f) window, which is the point.
+    """
+    name: str
+    spec: object                       # the AggregatorSpec being attacked
+    apply_fn: Callable = dataclasses.field(repr=False, compare=False,
+                                           default=None)
+    init_state_fn: Callable = dataclasses.field(repr=False, compare=False,
+                                                default=None)
+    stateful: bool = False
+
+    def init_state(self):
+        """Initial attack state ({} for stateless attacks)."""
+        return self.init_state_fn() if self.init_state_fn else {}
+
+    def __call__(self, key, g, byz_mask, state, defense_vec=None):
+        return self.apply_fn(key, g, byz_mask, state, defense_vec)
+
+
+def make_adaptive_attack(name: str, spec, **hyper) -> DefenseAwareAttack:
+    """Build the named defense-aware attack against ``spec``."""
+    try:
+        factory = ADAPTIVE_ATTACKS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown adaptive attack {name!r}; registered: "
+            f"{sorted(ADAPTIVE_ATTACKS)}") from None
+    return factory(spec, **hyper)
+
+
+# ---------------------------------------------------------------------------
+# spec introspection helpers (host-side, build time)
+
+
+def _executing_rule(spec):
+    """Unwrap the composition chain to the rule whose selection window the
+    row-level perturbation must survive."""
+    while getattr(spec, "inner", None) is not None:
+        spec = spec.inner
+    return spec
+
+
+def _probe_spec(spec):
+    """The spec used to *simulate* the defense inside the attack: same math,
+    dense ``gather`` impl (probe the rule's semantics, not its kernels)."""
+    inner = _probe_spec(spec.inner) if spec.inner is not None else None
+    probe = dataclasses.replace(spec, inner=inner)
+    if probe.impl == "pallas":
+        probe = probe.with_impl("gather")
+    return probe
+
+
+def _probe_state(spec, center):
+    """Best-effort defense state for probing a stateful spec: every stateful
+    rule in the registry carries its memory under ``server_grad``."""
+    if not spec.stateful:
+        return None
+    st = {"server_grad": center}
+    if spec.inner is not None and spec.inner.stateful:
+        st["inner"] = _probe_state(spec.inner, center)
+    return st
+
+
+def _trim_count(rule) -> Optional[int]:
+    """Per-side trim count of a trimmed_mean spec (None for other rules)."""
+    if rule.name != "trimmed_mean":
+        return None
+    n, f = rule.n, rule.f
+    if not n:
+        return None
+    beta = rule.hp("beta", None)
+    b = int(math.ceil((beta if beta is not None else f / n) * n))
+    return min(b, (n - 1) // 2)
+
+
+def calibrate_alie_z(spec, margin: float = 0.25) -> float:
+    """z-score tailored to ``spec``'s selection window.
+
+    trimmed_mean trims b rows per side: place the Byzantine rows at
+    ``mu - z sd`` with z such that the *expected* number of honest rows
+    below them exceeds b (+ margin) — just inside the kept window, where
+    they are averaged at full weight.  Majority-selection rules (median,
+    krum, ...) get the classical ALIE supporter-count calibration.
+    """
+    rule = _executing_rule(spec)
+    n = rule.n or spec.n
+    if not n:
+        raise ValueError(
+            "spec_alie needs a spec with static n (make_spec(..., n=...)) "
+            "to calibrate its z-score")
+    f = rule.f
+    n_h = max(n - f, 1)
+    b = _trim_count(rule)
+    if b is not None:
+        # survive the lower trim: > b honest rows expected below the poison
+        phi = min(max((b + margin) / n_h, 1e-3), 0.5)
+        z = float(-ndtri(phi))
+    else:
+        # classical ALIE: enough honest "supporters" further from the mean
+        s = n // 2 + 1 - f
+        phi = max((n_h - s) / n_h, 0.5 + 1e-3)
+        z = float(ndtri(min(phi, 1.0 - 1e-6)))
+    return max(z, 0.1)
+
+
+def _moments32(g, byz_mask):
+    g32 = g.astype(jnp.float32)
+    mu, sd = honest_moments(g32, byz_mask)
+    return g32, mu, sd
+
+
+def _plant(g, byz_mask, bad_row):
+    """Replace Byzantine rows with ``bad_row``; honest rows bitwise kept."""
+    return jnp.where(byz_mask[:, None], bad_row[None, :].astype(g.dtype), g)
+
+
+# ---------------------------------------------------------------------------
+# the attacks
+
+
+@register_adaptive("spec_alie")
+def spec_alie(spec, margin: float = 0.25, z: Optional[float] = None,
+              z_max: float = 4.0, iters: int = 14, rho: float = 0.5):
+    """ALIE with z calibrated from the defense's trim/selection window.
+
+    trimmed_mean exposes its window analytically, so z comes from
+    :func:`calibrate_alie_z` at build time.  Selection rules (krum family,
+    bulyan, cge, ...) hide theirs, so the attack bisects the largest z
+    whose variance-aligned poison ``mu - z sd`` still *survives* the
+    defense (the induced aggregate shift along ``-sd`` retains at least
+    ``rho`` of a plain mean's) — the same in-jit line-search machinery as
+    :func:`min_max`, but along ALIE's within-distribution direction
+    instead of the reversed mean.  Static ALIE's fixed z lands outside the
+    selection set and gets discarded; the calibrated one rides just inside
+    it, at full weight, every round.
+    """
+    rule = _executing_rule(spec)
+    z_static = (float(z) if z is not None
+                else calibrate_alie_z(spec, margin)
+                if _trim_count(rule) is not None else None)
+    probe = _probe_spec(spec) if z_static is None else None
+
+    def apply(key, g, byz_mask, state, defense_vec=None):
+        g32, mu, sd = _moments32(g, byz_mask)
+        if z_static is not None:
+            return _plant(g, byz_mask, mu - z_static * sd), state
+        sn = jnp.maximum(jnp.linalg.norm(sd), 1e-12)
+        p = -sd / sn
+        n = g.shape[0]
+        fb = jnp.sum(byz_mask.astype(jnp.float32))
+        center = (defense_vec.astype(jnp.float32) if defense_vec is not None
+                  else jnp.zeros_like(mu))
+        pst = _probe_state(probe, center)
+
+        def survives(zc):
+            att = _plant(g32, byz_mask, mu - zc * sd)
+            agg = probe.aggregate(att, state=pst).astype(jnp.float32)
+            return jnp.dot(agg - mu, p) >= rho * zc * sn * fb / n
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            ok = survives(mid)
+            return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid))
+
+        lo, _ = jax.lax.fori_loop(
+            0, iters, body, (jnp.float32(0.0), jnp.float32(z_max)))
+        return _plant(g, byz_mask, mu - lo * sd), state
+
+    return DefenseAwareAttack(name="spec_alie", spec=spec, apply_fn=apply,
+                              init_state_fn=None, stateful=False)
+
+
+@register_adaptive("min_max")
+def min_max(spec, lam_max: float = 10.0, iters: int = 14, rho: float = 0.5):
+    """Largest reversed-mean deviation surviving ``spec.aggregate``.
+
+    Candidate Byzantine row: ``mu + lam * |mu| * p`` with ``p`` the unit
+    reversed honest mean.  A candidate *survives* when the induced aggregate
+    shift along p retains at least ``rho`` of the shift a plain mean would
+    grant the f rows — i.e. the rule accepted rather than filtered them.
+    Bisection over lam runs a fixed ``iters`` rounds under
+    ``jax.lax.fori_loop`` with the defense itself evaluated in the body, so
+    the whole search stays inside the jitted step.
+    """
+    probe = _probe_spec(spec)
+
+    def apply(key, g, byz_mask, state, defense_vec=None):
+        g32, mu, sd = _moments32(g, byz_mask)
+        norm = jnp.maximum(jnp.linalg.norm(mu), 1e-12)
+        p = -mu / norm
+        n = g.shape[0]
+        fb = jnp.sum(byz_mask.astype(jnp.float32))
+        center = (defense_vec.astype(jnp.float32) if defense_vec is not None
+                  else jnp.zeros_like(mu))
+        pst = _probe_state(probe, center)
+
+        def survives(lam):
+            att = _plant(g32, byz_mask, mu + lam * norm * p)
+            agg = probe.aggregate(att, state=pst).astype(jnp.float32)
+            shift = jnp.dot(agg - mu, p)
+            return shift >= rho * lam * norm * fb / n
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            ok = survives(mid)
+            return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid))
+
+        lo, _ = jax.lax.fori_loop(
+            0, iters, body,
+            (jnp.float32(0.0), jnp.float32(lam_max)))
+        return _plant(g, byz_mask, mu + lo * norm * p), state
+
+    return DefenseAwareAttack(name="min_max", spec=spec, apply_fn=apply,
+                              init_state_fn=None, stateful=False)
+
+
+@register_adaptive("slow_drift")
+def slow_drift(spec, z0: float = 0.3, rate: float = 0.02,
+               z_cap: float = 1.5, seed: int = 7):
+    """Direction-locked bias ramped below per-round detection thresholds.
+
+    Round t plants ``mu + z_t * sd * signs`` with ``z_t = min(z0 + rate*t,
+    z_cap)`` and a fixed Rademacher sign pattern (seeded, shape-derived —
+    constant across rounds, so the per-round bias accumulates instead of
+    averaging out).  Every single round sits inside the honest spread;
+    only a defense with memory sees the drift.
+    """
+    def init_state():
+        return {"t": jnp.zeros((), jnp.float32)}
+
+    def apply(key, g, byz_mask, state, defense_vec=None):
+        g32, mu, sd = _moments32(g, byz_mask)
+        signs = jax.random.rademacher(
+            jax.random.PRNGKey(seed), (g.shape[1],), jnp.float32)
+        z_t = jnp.minimum(z0 + rate * state["t"], z_cap)
+        out = _plant(g, byz_mask, mu + z_t * sd * signs)
+        return out, {"t": state["t"] + 1.0}
+
+    return DefenseAwareAttack(name="slow_drift", spec=spec, apply_fn=apply,
+                              init_state_fn=init_state, stateful=True)
+
+
+__all__ = [
+    "ADAPTIVE_ATTACKS", "DefenseAwareAttack", "make_adaptive_attack",
+    "is_adaptive_attack", "calibrate_alie_z", "register_adaptive",
+]

@@ -39,12 +39,21 @@ def make_byzantine_mask(n: int, f: int, fixed: bool = True, key=None):
     return jnp.isin(jnp.arange(n), perm[:f])
 
 
-def _honest_stats(g, byz_mask):
+def honest_moments(g, byz_mask):
+    """Per-coordinate mean and std of the honest rows only.
+
+    Shared by the static zoo (``alie``, ``ipm``, ...) and the defense-aware
+    attacks in :mod:`repro.core.attacks.adaptive` — the omniscient adversary's
+    view of the honest population.
+    """
     w = (~byz_mask).astype(g.dtype)[:, None]
     cnt = jnp.maximum(jnp.sum(w), 1.0)
     mu = jnp.sum(g * w, axis=0) / cnt
     var = jnp.sum(jnp.square(g - mu[None]) * w, axis=0) / cnt
     return mu, jnp.sqrt(var + 1e-12)
+
+
+_honest_stats = honest_moments
 
 
 def _replace(g, byz_mask, bad):

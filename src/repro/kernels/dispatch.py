@@ -133,6 +133,15 @@ PALLAS_RULES = {
     "sparse_mean": _sparse_mean,
 }
 
+# rules whose flat_fn fuses its own kernel stages instead of fitting the
+# stateless (stack, f, hyper) contract above: centered_clip's fixed-point
+# loop carries the server center across iterations, so only its
+# model-sized multiply-accumulate rides a kernel
+# (wsum.clipped_weighted_sum) — requested with an explicit
+# ``impl="pallas"`` (``auto`` keeps the dense flat body: the kernel
+# changes the reduce association, so opting in is a numerics decision)
+FLAT_SELF_KERNELED = {"centered_clip"}
+
 
 # ---------------------------------------------------------------------------
 # masked / weighted rules: fused masked variants (async quorums) —

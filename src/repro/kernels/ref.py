@@ -89,6 +89,41 @@ def masked_stat_ref(g, mask, wn, stat: str, b: int = 0):
     return arrived_stat_from_sorted(s, mask, stat, b)
 
 
+def arrived_mean_closest_ref(g, mask, stat: str, f: int):
+    """(d,) fp32: the phocas / mean_around_median trust window over the
+    ARRIVED rows only.
+
+    Two count-windowed stages, both rank-indexed by the traced arrived
+    count (fixed shapes, no recompiles):
+
+      1. center — :func:`arrived_stat_from_sorted` on the +inf-sentinel
+         sort (``trimmed_mean`` with b=f for phocas, ``median`` for
+         mean_around_median);
+      2. window — per coordinate, the ``k = clip(cnt - f, 1, cnt)``
+         arrived values closest to the center, averaged.  Absent rows get
+         +inf distances (their garbage never enters the distance, the
+         ranking, or the sum — rank gating is a where-select, so inf/NaN
+         cannot leak through a zero weight).
+
+    Below ``f + 1`` arrivals the window degrades gracefully to the single
+    closest arrived value; zero arrivals return an exact 0 (the engine's
+    zero-total guard scales the update to 0 anyway)."""
+    import jax
+    mb = mask.astype(bool)
+    xf = g.astype(jnp.float32)
+    s = jnp.sort(jnp.where(mb[:, None], xf, jnp.inf), axis=0)
+    b = f if stat == "trimmed_mean" else 0
+    center = arrived_stat_from_sorted(s, mask, stat, b=b)
+    cnt = jnp.sum(mask.astype(jnp.float32) > 0.5).astype(jnp.int32)
+    k = jnp.clip(cnt - jnp.int32(f), 1, jnp.maximum(cnt, 1))
+    dist = jnp.where(mb[:, None], jnp.abs(xf - center[None]), jnp.inf)
+    order = jnp.argsort(dist, axis=0)           # stable: ties keep row order
+    ranks = jnp.argsort(order, axis=0)
+    keep = ranks < k
+    out = jnp.sum(jnp.where(keep, xf, 0.0), axis=0) / k.astype(jnp.float32)
+    return jnp.where(cnt > 0, out, 0.0)
+
+
 def masked_sign_vote_ref(g, mask):
     """(d,) fp32 oracle for masked_sign_vote: majority vote over the
     arrived rows only (absent rows cast no vote)."""

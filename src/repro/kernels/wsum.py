@@ -114,6 +114,53 @@ def masked_weighted_sum(w, g, mask, mean, *, interpret: bool = True):
     return out[0]
 
 
+def _cclip_wsum_kernel(lam_ref, g_ref, v_ref, out_ref):
+    """One centered-clip fixed-point step per tile:
+
+        out = v + sum_i lam_i (x_i - v) = (1 - sum_i lam_i) v + lam^T X
+
+    with lam_i = w_i/tot * min(1, tau/||x_i - v||) precomputed by the
+    caller (the clip radius needs the FULL row norm — a cross-tile
+    reduction — so the scalar stage stays outside; the model-sized
+    multiply-accumulate is what fuses here).  Rows are gated on lam > 0,
+    so a dead row carrying inf/NaN cannot leak through 0 * x."""
+    lam = lam_ref[...][0].astype(jnp.float32)         # (n,)
+    x = g_ref[...]
+    v = v_ref[...][0].astype(jnp.float32)             # (T,)
+    xf = jnp.where((lam > 0.0)[:, None], x.astype(jnp.float32), 0.0)
+    acc = jax.lax.dot_general(
+        lam[None], xf, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]         # (T,)
+    out_ref[...] = ((1.0 - jnp.sum(lam)) * v + acc)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clipped_weighted_sum(lam, g, v, *, interpret: bool = True):
+    """lam: (n,) NON-NEGATIVE clip-folded weights, g: (n, d) native dtype,
+    v: (d,) fp32 current center -> (d,) fp32 updated center
+    ``v + sum_i lam_i (g_i - v)`` — the application stage of one
+    centered-clipping iteration (Karimireddy et al. momentum clipping),
+    fused per tile without materializing the (n, d) difference stack.
+    d multiple of TILE_D."""
+    n, d = g.shape
+    assert d % TILE_D == 0, d
+    w_blk = block_d(d, interpret)
+    out = pl.pallas_call(
+        _cclip_wsum_kernel,
+        grid=(d // w_blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, w_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, w_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(lam.astype(jnp.float32).reshape(1, n), g,
+      v.astype(jnp.float32).reshape(1, d))
+    return out[0]
+
+
 def _sparse_mean_body(xf, cw):
     """Per-coordinate weighted mean over the rows that SENT the
     coordinate: cw is the per-coordinate weight ((coord != 0) * row

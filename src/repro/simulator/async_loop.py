@@ -57,11 +57,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save
-from repro.core.aggregators import tree_where_agents
+from repro.core.aggregators import tree_stack_ravel, tree_where_agents
 from repro.core.flat import (FlatPlan, QUANT_DTYPES, fake_quantize,
                              quantize_rows)
 from repro.obs.counters import count_trace
-from repro.core.attacks import get_attack, make_byzantine_mask
+from repro.core.attacks import (get_attack, is_adaptive_attack,
+                                make_adaptive_attack, make_byzantine_mask)
 from repro.core.momentum import init_momentum, worker_momentum
 from repro.core.redundancy.coding import (coding_groups,
                                           flat_draco_aggregate,
@@ -143,8 +144,9 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
     churn within a bucket never recompiles and churn across the bucketed
     range compiles at most once per bucket."""
     from repro.training.step import tree_attack
+    adaptive_name = bz.attack if is_adaptive_attack(bz.attack) else None
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
-        if bz.attack != "none" else None
+        if bz.attack != "none" and adaptive_name is None else None
     byz_mask = make_byzantine_mask(bz.n_agents, bz.f)
     spec = bz.resolve_spec()
     if spec.staleness_aware:                 # recurses through wrappers
@@ -164,6 +166,13 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
         spec = spec.with_impl_hyper_if_supported(native_dtype=True)
     spec = spec.respecialize(bucket) if bucket is not None else spec
     stateful = spec.stateful
+    # defense-aware attack, compiled against the spec the defense actually
+    # runs — the respecialized BUCKET spec under elastic membership (the
+    # adversary tracks the live (n, f) window), applied on the full
+    # in-flight arena.  Attack state rides inside the agg_state slot as
+    # {"agg": ..., "atk": ...} so the jitted signature is unchanged.
+    adaptive = (make_adaptive_attack(adaptive_name, spec, **bz.attack_hyper)
+                if adaptive_name is not None else None)
     # roster-aware gradient coding: the group table is derived HERE, at
     # step-build (respecialize) time, from the bucket capacity — lru-cached
     # per (n, r) like the trim tables, baked into the traced step as a
@@ -187,6 +196,9 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                    key, refresh, contrib_w, use_coded,
                    roster_idx=None, roster_valid=None):
         count_trace("async_step")
+        atk_state = None
+        if adaptive is not None:
+            atk_state, agg_state = agg_state["atk"], agg_state["agg"]
         # (2) fresh gradients at the current version for dispatching agents
         losses, grads = jax.vmap(
             jax.value_and_grad(agent_loss), in_axes=(None, 0))(params, batch)
@@ -203,6 +215,21 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
         sent = buffer
         if attack_fn is not None:
             sent = tree_attack(attack_fn, key, sent, byz_mask)
+        elif adaptive is not None:
+            # defense-aware attacks operate on the raveled (n, P) arena —
+            # min-max needs whole-row geometry, not per-leaf slices.  The
+            # omniscient adversary also reads the defense's carried center
+            # (state-aware threat model).
+            aplan = FlatPlan.for_tree(sent)
+            arows = aplan.ravel(sent, jnp.float32)
+            dvec = None
+            if stateful and "server_grad" in agg_state:
+                dvec = tree_stack_ravel(jax.tree.map(
+                    lambda l: l.astype(jnp.float32)[None],
+                    agg_state["server_grad"]))[0]
+            arows, atk_state = adaptive(key, arows, byz_mask, atk_state,
+                                        dvec)
+            sent = aplan.unravel_stack(arows)
         if bz.agg_dtype and not quant:
             sent = jax.tree.map(
                 lambda l: l.astype(jnp.dtype(bz.agg_dtype)), sent)
@@ -260,7 +287,8 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                 rows, rmask, rw = wire, mask, contrib_w
                 rqs = qs
             vec = spec.aggregate_flat(rows, mask=rmask, weights=rw,
-                                      scale=rqs)
+                                      scale=rqs,
+                                      state=agg_state if stateful else None)
             if fallback_r > 0:
                 # quorum missed: decode the repetition code over the SAME
                 # arena rows (both candidates are (P,) fp32 — one select,
@@ -331,6 +359,8 @@ def make_async_step(cfg, bz, optimizer, fallback_r: int = 0,
                      "contrib_w": contrib_w.astype(jnp.float32)}
         if stateful:
             agg_state = spec.update_state(agg_state, agg)
+        if adaptive is not None:
+            agg_state = {"agg": agg_state, "atk": atk_state}
 
         # (4) server-side optimizer
         updates, opt_state = optimizer.update(agg, opt_state, params)
@@ -401,6 +431,7 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             spec = bz.resolve_spec()
             el = None
     stateful = spec.stateful
+    adaptive = is_adaptive_attack(bz.attack)
     contrib_w = staleness_weights(sim, atrace)
     if (bz.group_size > 1 or bz.reshard) and (stateful
                                               or not atrace.is_synchronous()):
@@ -430,10 +461,13 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
                       attack=bz.attack, f=bz.f, seed=seed,
                       faults=[repr(f) for f in sim.faults])
     # stateful aggregators must observe (and update) their state every
-    # step, so they always run the general path; the synchronous train
-    # step stays the stateless fast path
-    step_fn = None if stateful else make_train_step(cfg, bz, optimizer,
-                                                    telemetry=telemetry)
+    # step, so they always run the general path; likewise defense-aware
+    # attacks (their state and the defense's center thread through the
+    # async step).  The synchronous train step stays the stateless,
+    # static-attack fast path.
+    step_fn = (None if stateful or adaptive
+               else make_train_step(cfg, bz, optimizer,
+                                    telemetry=telemetry))
     # donate the in-flight gradient buffer (the step returns its updated
     # twin): on accelerator backends the buffer-sized HBM block is reused
     # in place — the flat pipeline's "donated arena"; CPU ignores
@@ -463,6 +497,13 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
     agg_state = (spec.init_state(jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params))
         if stateful else {})
+    if adaptive:
+        # attack state bundles into the agg_state slot — the jitted step
+        # signature and every call site stay unchanged.  State structure
+        # is bucket-independent, so it threads across respecializations.
+        agg_state = {"agg": agg_state,
+                     "atk": make_adaptive_attack(
+                         bz.attack, spec, **bz.attack_hyper).init_state()}
 
     # a step is "pure" iff it is exactly the synchronous step: the FULL
     # roster dispatches AND delivers with zero staleness
@@ -470,7 +511,7 @@ def async_train_loop(cfg, bz, optimizer, dataset, steps: int,
             & (atrace.staleness.max(1, initial=0) == 0))
     if roster is not None:
         pure &= roster.all(1)
-    if _force_general or stateful:
+    if _force_general or stateful or adaptive:
         pure = np.zeros(steps, bool)
 
     # in-flight gradient buffer (fp32 covers every exchange dtype) and

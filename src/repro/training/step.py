@@ -175,6 +175,12 @@ def make_train_step(cfg, bz: ByzantineConfig, optimizer,
     bucket's (n, f) plan; both roster operands are traced, so membership
     churn compiles at most once per bucket.  ``bucket=None`` is exactly the
     historical n-static step, bit-for-bit."""
+    from repro.core.attacks import is_adaptive_attack
+    if is_adaptive_attack(bz.attack):
+        raise NotImplementedError(
+            f"{bz.attack} is a defense-aware attack — run it through the "
+            "async loop (repro.simulator.async_loop threads attack state "
+            "and the defense's center alongside aggregator state)")
     attack_fn = get_attack(bz.attack, **bz.attack_hyper) \
         if bz.attack != "none" else None
     byz_mask = make_byzantine_mask(bz.n_agents, bz.f)

@@ -13,5 +13,5 @@ def pytest_collection_modifyitems(config, items):
     schedules) are auto-marked ``slow`` so the tier-1 `-m "not slow"` lane
     stays fast; the dedicated slow/membership CI jobs run them."""
     for item in items:
-        if "churn_fuzz" in item.name:
+        if "churn_fuzz" in item.name or "full_leaderboard" in item.name:
             item.add_marker(pytest.mark.slow)

@@ -3,7 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.attacks import ATTACKS, apply_attack, make_byzantine_mask
+from repro.core.aggregators import make_spec
+from repro.core.attacks import (ADAPTIVE_ATTACKS, ATTACKS, apply_attack,
+                                calibrate_alie_z, get_attack, honest_moments,
+                                make_adaptive_attack, make_byzantine_mask)
 
 N, F, D = 10, 3, 16
 KEY = jax.random.PRNGKey(0)
@@ -61,3 +64,163 @@ def test_mimic_copies_victim(g):
 def test_mobile_mask():
     m = make_byzantine_mask(8, 3, fixed=False, key=jax.random.PRNGKey(7))
     assert int(jnp.sum(m)) == 3
+
+
+def test_honest_moments_is_the_masked_moment_law(g):
+    """The shared helper the static AND adaptive attacks calibrate from:
+    fp32 mean/std over the non-Byzantine rows, eps-stabilized — pinned to
+    the plain formula so the attack family stays mutually consistent."""
+    mask = make_byzantine_mask(N, F)
+    mu, sd = honest_moments(g, mask)
+    ref_mu = jnp.mean(g[F:], axis=0)
+    ref_sd = jnp.sqrt(jnp.var(g[F:], axis=0) + 1e-12)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(ref_mu), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sd), np.asarray(ref_sd), rtol=1e-6)
+    # and the calibrated attacks plant exactly mu - z * sd (alie contract)
+    ga = apply_attack("alie", KEY, g, mask)
+    np.testing.assert_allclose(np.asarray(ga[0]), np.asarray(mu - 1.5 * sd),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# defense-aware attacks (core.attacks.adaptive)
+
+AN, AF, AD = 12, 2, 32
+
+
+@pytest.fixture
+def ag():
+    return jax.random.normal(jax.random.PRNGKey(3), (AN, AD)) * 0.5 + 1.0
+
+
+def _run_adaptive(name, spec, g, byz, defense_vec=None, steps=1):
+    atk = make_adaptive_attack(name, spec)
+    st = atk.init_state()
+
+    @jax.jit
+    def one(key, g, st):
+        return atk(key, g, byz, st, defense_vec)
+
+    out = g
+    for t in range(steps):
+        out, st = one(jax.random.PRNGKey(100 + t), g, st)
+    return out, st
+
+
+@pytest.mark.parametrize("name", sorted(ADAPTIVE_ATTACKS))
+def test_adaptive_honest_rows_untouched(name, ag):
+    byz = make_byzantine_mask(AN, AF)
+    spec = make_spec("trimmed_mean", f=AF, n=AN)
+    out, _ = _run_adaptive(name, spec, ag, byz)
+    np.testing.assert_array_equal(np.asarray(out[AF:]), np.asarray(ag[AF:]))
+    assert float(jnp.max(jnp.abs(out[:AF] - ag[:AF]))) > 1e-6
+
+
+def test_calibrated_z_sits_inside_the_trim_window():
+    """trimmed_mean(n=12, f=2) trims 2 rows per side; the calibrated z is
+    small enough to ride inside the kept window yet well above the
+    degenerate classical value."""
+    spec = make_spec("trimmed_mean", f=AF, n=AN)
+    z = calibrate_alie_z(spec)
+    assert 0.3 < z < 1.5, z
+
+
+def test_spec_aware_attacks_beat_static_on_krum(ag):
+    """THE acceptance contrast: krum filters the static attacks exactly
+    (it selects the same honest row, displacement literally zero) while
+    the spec-aware line-searched poisons ride inside its selection set and
+    displace the estimate.  A defense that is sound against yesterday's
+    attack catalogue is NOT sound against an adversary holding the spec."""
+    byz = make_byzantine_mask(AN, AF)
+    spec = make_spec("krum", f=AF, n=AN, impl="gather")
+    clean = spec.aggregate(ag)
+
+    def disp(stack):
+        return float(jnp.linalg.norm(spec.aggregate(stack) - clean))
+
+    for name, hyper in (("alie", {"z": 1.5}), ("alie", {"z": 3.0}),
+                        ("ipm", {"epsilon": 0.5}), ("large_value", {}),
+                        ("sign_flip", {})):
+        ga = get_attack(name, **hyper)(jax.random.PRNGKey(100), ag, byz)
+        assert disp(ga) == 0.0, (name, hyper)
+    for name in ("spec_alie", "min_max"):
+        out, _ = _run_adaptive(name, spec, ag, byz)
+        assert disp(out) > 1.0, name
+
+
+@pytest.mark.parametrize("rule,hyper", [("multi_krum", {"m": 4}),
+                                        ("mda", {})])
+def test_spec_aware_attacks_outdisplace_static(rule, hyper, ag):
+    """Selection defenses with averaging: the line-searched poisons
+    displace the estimate measurably further than the whole static
+    catalogue's best shot."""
+    byz = make_byzantine_mask(AN, AF)
+    spec = make_spec(rule, f=AF, n=AN, impl="gather", **hyper)
+    clean = spec.aggregate(ag)
+
+    def disp(stack):
+        return float(jnp.linalg.norm(spec.aggregate(stack) - clean))
+
+    static = max(
+        disp(get_attack(name, **h)(jax.random.PRNGKey(100), ag, byz))
+        for name, h in (("alie", {"z": 1.5}), ("alie", {"z": 3.0}),
+                        ("ipm", {"epsilon": 0.5}), ("large_value", {}),
+                        ("sign_flip", {})))
+    for name in ("spec_alie", "min_max"):
+        out, _ = _run_adaptive(name, spec, ag, byz)
+        assert disp(out) > 1.25 * static, (name, disp(out), static)
+
+
+def test_slow_drift_ramps_below_the_radar(ag):
+    """Each round's bias sits inside the honest spread (z_t <= z_cap), the
+    sign pattern is locked across rounds (so the bias accumulates), and
+    the ramp grows monotonically until the cap."""
+    byz = make_byzantine_mask(AN, AF)
+    spec = make_spec("trimmed_mean", f=AF, n=AN)
+    atk = make_adaptive_attack("slow_drift", spec)
+    st = atk.init_state()
+    mu, sd = honest_moments(ag, byz)
+    devs, signs = [], []
+    for t in range(70):
+        out, st = atk(jax.random.PRNGKey(t), ag, byz, st)
+        z_eff = (out[0] - mu) / sd
+        devs.append(float(jnp.max(jnp.abs(z_eff))))
+        signs.append(np.sign(np.asarray(z_eff)))
+    assert devs[0] < devs[10] < devs[40]         # the ramp
+    assert max(devs) <= 1.5 + 1e-4               # never beyond z_cap
+    for s in signs[1:]:
+        np.testing.assert_array_equal(s, signs[0])   # locked direction
+
+
+def test_centered_clip_holds_under_adaptive_attacks(ag):
+    """The history-filter defense the adaptive attacks were built to
+    punish everything else with: centered_clip's carried center bounds the
+    per-round displacement by iters * tau, so even the spec-aware poisons
+    (compiled against centered_clip itself) keep the estimate near the
+    honest mean — while the undefended mean is dragged an order of
+    magnitude further."""
+    byz = make_byzantine_mask(AN, AF)
+    hm = jnp.sum(jnp.where(byz[:, None], 0, ag), 0) / (AN - AF)
+    spec = make_spec("centered_clip", f=AF, n=AN, tau=1.0)
+    st = {"server_grad": hm}
+    clean = float(jnp.linalg.norm(spec.aggregate(ag, state=st) - hm))
+    mean_spec = make_spec("mean", f=0, n=AN)
+    for name in ("spec_alie", "min_max", "slow_drift"):
+        out, _ = _run_adaptive(name, spec, ag, byz, defense_vec=hm)
+        dev = float(jnp.linalg.norm(spec.aggregate(out, state=st) - hm))
+        assert dev <= 2.0 * max(clean, 1e-3), (name, dev, clean)
+        out_mean, _ = _run_adaptive("min_max", mean_spec, ag, byz)
+        broken = float(jnp.linalg.norm(mean_spec.aggregate(out_mean) - hm))
+        assert broken > 5.0 * dev, (name, broken, dev)
+
+
+def test_adaptive_attack_refused_by_sync_step():
+    """Defense-aware attacks need the aggregate-state thread that only the
+    async loop carries — the sync step must refuse loudly, not silently
+    run the attack without its state."""
+    from repro.optim import adamw, constant
+    from repro.training import ByzantineConfig, make_train_step
+    bz = ByzantineConfig(n_agents=AN, f=AF, aggregator="trimmed_mean",
+                         attack="spec_alie")
+    with pytest.raises(NotImplementedError, match="defense-aware"):
+        make_train_step(None, bz, adamw(constant(1e-3)))

@@ -825,3 +825,55 @@ def test_quantized_flat_loop_compiles_once_per_bucket():
     used = TRACE_COUNTS["async_step"] - before
     used_sync = TRACE_COUNTS["train_step"] - before_sync
     assert used + used_sync <= len(el.buckets) + 1, (used, used_sync)
+
+
+# ---------------------------------------------------------------------------
+# 10. centered_clip's fused MAC (PR 10): the kernel computes one
+# fixed-point step of centered clipping; the scalar clip-radius stage
+# stays outside (cross-tile row norms), so the kernel law is exactly
+# (1 - sum lam) v + lam^T X — pinned here against that expression, with
+# the lam > 0 gate keeping dead-row inf/NaN out of the accumulate
+
+
+def test_clipped_weighted_sum_matches_the_law():
+    from repro.kernels import clipped_weighted_sum
+
+    n, d = 10, 512
+    g = data(n, d, jnp.float32, 0)
+    v = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    lam = jax.random.uniform(jax.random.PRNGKey(6), (n,),
+                             minval=0.0, maxval=0.12)
+    lam = lam.at[jnp.array([1, 4])].set(0.0)
+    # a zeroed-lam row carrying non-finite payload must not leak
+    g = g.at[1].set(jnp.inf).at[4].set(jnp.nan)
+    out = clipped_weighted_sum(lam, g, v, interpret=True)
+    xf = jnp.where((lam > 0.0)[:, None], g, 0.0)
+    ref_out = (1.0 - jnp.sum(lam)) * v + lam @ xf
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_centered_clip_flat_pallas_matches_gather(mode):
+    """impl="pallas" routes centered_clip's per-iteration MAC through the
+    fused kernel (explicit opt-in — auto keeps the dense body); the full
+    fixed-point iterate must agree with the gather engine to fp32
+    accumulation tolerance on tile-aligned P and fall back BIT-FOR-BIT
+    on non-multiple-of-tile P (shared dense body)."""
+    n = 12
+    for d, bitwise in ((512, False), (771, True)):
+        g = data(n, d, jnp.float32, 1)
+        v = jax.random.normal(jax.random.PRNGKey(7), (d,))
+        mask, w = mode_args(mode, n, 1)
+        sp = make_spec("centered_clip", f=F, n=n, tau=1.0, impl="pallas")
+        sg = make_spec("centered_clip", f=F, n=n, tau=1.0, impl="gather")
+        st = {"server_grad": v}
+        op = np.asarray(sp.aggregate_flat(g, mask=mask, weights=w,
+                                          state=st))
+        og = np.asarray(sg.aggregate_flat(g, mask=mask, weights=w,
+                                          state=st))
+        if bitwise:
+            np.testing.assert_array_equal(op, og)
+        else:
+            np.testing.assert_allclose(op, og, rtol=3e-6, atol=3e-6)

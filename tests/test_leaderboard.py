@@ -1,0 +1,101 @@
+"""The convergence leaderboard (benchmarks/bench_convergence.py) as a test
+surface: the grid covers what the PR promises, the artifact gate catches
+the failures it claims to catch, and (slow lane) representative full-grid
+cells actually run and hold their acceptance contrasts end to end.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+_BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "bench_convergence.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_convergence",
+                                                  _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return _load()
+
+
+def test_full_grid_covers_the_promised_cells(bench):
+    """The full grid crosses every catalogue rule with every attack in
+    sync, and tracks the memory rules + trimmed_mean under the adaptive
+    attacks in BOTH fault regimes."""
+    cells = set(bench.grid(quick=False))
+    for rule in bench.FULL_RULES:
+        for attack in bench.FULL_ATTACKS:
+            assert ("sync", attack, rule) in cells
+    for regime in ("stragglers", "churn"):
+        for rule in bench.MEMORY_RULES + ("trimmed_mean",):
+            assert (regime, "none", rule) in cells        # the baseline
+            for attack in bench.ADAPTIVE:
+                assert (regime, attack, rule) in cells
+    # smoke is a strict subset of full
+    assert set(bench.grid(quick=True)) <= cells
+
+
+def _cell(regime, attack, rule, loss, compiles=None):
+    return {"regime": regime, "attack": attack, "rule": rule,
+            "final_loss": loss, "suspicion_acc": None, "compiles": compiles}
+
+
+def test_artifact_gate_catches_each_violation_class(bench):
+    """check_artifact is CI's acceptance oracle — pin all three violation
+    classes and the clean case."""
+    ok = {"rows": [
+        _cell("sync", "none", "mean", 0.5),
+        _cell("sync", "min_max", "mean", 4.0),
+        _cell("sync", "none", "centered_clip", 0.5),
+        _cell("sync", "min_max", "centered_clip", 0.9),
+        _cell("churn", "none", "centered_clip", 0.5, compiles=2),
+    ]}
+    assert bench.check_artifact(ok) == []
+    # the undefended mean shrugging off an attack is itself a red flag
+    # (the attack column would be vacuous)
+    weak = {"rows": [_cell("sync", "none", "mean", 0.5),
+                     _cell("sync", "min_max", "mean", 0.6)]}
+    assert any("NOT broken" in v for v in bench.check_artifact(weak))
+    # a memory rule beyond 2x clean under any attack fails the PR contract
+    degraded = {"rows": [_cell("sync", "none", "server_momentum", 0.5),
+                         _cell("sync", "spec_alie", "server_momentum", 1.2)]}
+    assert any("degraded" in v for v in bench.check_artifact(degraded))
+    # churn cells above the elastic bucket budget fail
+    blown = {"rows": [_cell("churn", "none", "centered_clip", 0.5,
+                            compiles=len(bench.BUCKETS) + 1)]}
+    assert any("compile budget" in v for v in bench.check_artifact(blown))
+
+
+def test_full_leaderboard_representative_cells(bench, tmp_path):
+    """Slow lane (auto-marked by name): run full-grid-only cells at the
+    full step count and hold the PR's headline claims end to end —
+    krum's loss degrades under the spec-aware poison it admits, and the
+    memory rules hold within 2x of clean under the adaptive attacks in
+    every regime, inside the churn compile budget."""
+    steps = 60
+    krum_clean = bench.run_cell("krum", "none", "sync", steps)
+    krum_adapt = bench.run_cell("krum", "spec_alie", "sync", steps)
+    assert np.isfinite(krum_adapt["final_loss"])
+    assert krum_adapt["final_loss"] > 1.2 * krum_clean["final_loss"], (
+        krum_clean, krum_adapt)
+    for regime in ("sync", "stragglers", "churn"):
+        for rule in bench.MEMORY_RULES:
+            clean = bench.run_cell(rule, "none", regime, steps)
+            hit = bench.run_cell(rule, "slow_drift", regime, steps)
+            bound = 2.0 * max(clean["final_loss"], bench.LOSS_FLOOR)
+            assert hit["final_loss"] <= bound, (regime, rule, clean, hit)
+            if regime == "churn":
+                assert hit["compiles"] <= len(bench.BUCKETS)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q", "-m", "not slow"]))

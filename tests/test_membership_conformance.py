@@ -71,6 +71,16 @@ RULES = {
     # (fragile: one adversary breaks it, exactly like mean)
     "sign_sgd": dict(bounded_output=True),
     "sparse_mean": dict(f=0, own_masked=True, fragile=True),
+    # defenses with memory (PR 10): centered_clip iterates a tau-clip
+    # around the CARRIED center, so its estimate moves at most
+    # iters * tau per round regardless of coalition size — the beyond-f
+    # break is a steered (but still magnitude-saturated) center, asserted
+    # by the clip_bounded branch; its masked law is the zero-gated clip
+    # sum around the carried state, not the impute-then-scale law
+    "centered_clip": dict(stateful=True, own_masked=True, clip_bounded=True,
+                          hyper={"tau": 1.0}),
+    "server_momentum": dict(wrapper=True, stateful=True,
+                            hyper={"beta": 0.9}),
     "clipped": dict(wrapper=True, hyper={"tau": 50.0}),
     "bucketed": dict(wrapper=True, grouping=True, hyper={"group_size": 2}),
     "staleness_discounted": dict(wrapper=True, staleness=True),
@@ -202,6 +212,25 @@ def expected_masked(spec, g, mask, w, st):
     wv = (mf if w is None else w.astype(jnp.float32) * mf)
     cnt = jnp.maximum(mf.sum(), 1.0)
     tot = jnp.maximum(wv.sum(), 1e-30)
+    if spec.name in ("phocas", "mean_around_median"):
+        # the two-stage trust window over the ARRIVED rows only: center
+        # from the arrived-window order statistic, then the cnt - f
+        # arrived values closest to it (stable ties), scaled by tot/cnt
+        live = np.flatnonzero(np.asarray(mask))
+        sub = np.asarray(g, np.float32)[live]
+        c, f = len(live), spec.f
+        s = np.sort(sub, axis=0)
+        if spec.name == "phocas":
+            b = min(f, (c - 1) // 2)
+            center = s[b:c - b].mean(axis=0)
+        else:
+            lo = (c - 1) // 2
+            center = s[lo:c - lo].mean(axis=0)
+        k = max(c - f, 1)
+        idx = np.argsort(np.abs(sub - center[None]), axis=0,
+                         kind="stable")[:k]
+        agg = np.take_along_axis(sub, idx, axis=0).mean(axis=0)
+        return agg * float(tot / cnt)
     if spec.name in ("coordinate_median", "trimmed_mean", "sign_sgd"):
         live = np.flatnonzero(np.asarray(mask))
         sub = np.asarray(g, np.float32)[live]
@@ -275,6 +304,25 @@ def test_attack_does_not_leak_through_absence(rule, impl):
     the honest statistic, so a single straggler let a large_value attack
     straight through.  The arrived-window law keeps the f-of-arrived
     breakdown bound: the result must stay at honest magnitude."""
+    spec = build(rule, impl=impl)
+    g = data(N, D, 77) * 0.1                       # honest rows, O(0.1)
+    g = jnp.asarray(g).at[0].set(1e6).at[1].set(1e6)   # 2 Byzantine
+    mask = jnp.ones((N,), bool).at[-2:].set(False)     # 2 honest absent
+    out = np.asarray(spec.aggregate(g, mask=mask))
+    assert np.isfinite(out).all(), rule
+    assert float(np.max(np.abs(out))) < 10.0, (rule, impl, out[:4])
+
+
+@pytest.mark.parametrize("impl", ["gather", "auto"])
+@pytest.mark.parametrize("rule", ["phocas", "mean_around_median"])
+def test_trust_window_attack_does_not_leak_through_absence(rule, impl):
+    """The same regression for the two-stage trust-window rules: under the
+    old impute-at-mean law the ghost rows sat at the contaminated mean and
+    the closest-to-center stage happily kept them — with 2 of 12 rows
+    absent and 2 Byzantine rows at 1e6, masked phocas returned an
+    attack-scaled estimate.  The arrived-window law (center AND window
+    both over arrived rows only, absent rows at +inf distance) keeps the
+    result at honest magnitude."""
     spec = build(rule, impl=impl)
     g = data(N, D, 77) * 0.1                       # honest rows, O(0.1)
     g = jnp.asarray(g).at[0].set(1e6).at[1].set(1e6)   # 2 Byzantine
@@ -365,6 +413,22 @@ def test_breakdown_beyond_f(rule):
         assert aligned(g_ok) > 0.9, "honest majority lost its own vote"
         assert aligned(g_bad) < 0.1, (
             f"{rule}: a beyond-f majority failed to steer the sign vote")
+        return
+    if RULES[rule].get("clip_bounded"):
+        # tau-clipping saturates: the estimate moves at most iters * tau
+        # per round, so deviation CANNOT scale with the attack magnitude
+        # even beyond f — the break is a STEERED CENTER instead: a
+        # majority drags the carried center measurably farther than <= f
+        # adversaries ever can, while staying magnitude-saturated
+        dev_f, _, _ = deviation(spec, N, spec.f, 1e3, 0)
+        dev_maj1, _, _ = deviation(spec, N, N // 2 + 1, 1e3, 0)
+        dev_maj2, _, _ = deviation(spec, N, N // 2 + 1, 1e4, 0)
+        assert dev_maj1 >= 3.0 * max(dev_f, 1e-6), (
+            f"{rule}: a beyond-f majority failed to steer the clip center "
+            f"({dev_f:.3g} -> {dev_maj1:.3g})")
+        assert dev_maj2 <= 2.0 * dev_maj1 + 1e-3, (
+            f"{rule}: clip saturation broken — deviation scaled with the "
+            f"attack magnitude ({dev_maj1:.3g} -> {dev_maj2:.3g})")
         return
     a_bad = (1 if rule == "mean" or RULES[rule].get("fragile")
              else (N // 2 + 1))

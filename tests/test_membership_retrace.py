@@ -129,6 +129,31 @@ def test_sync_step_churn_compiles_at_most_once_per_bucket():
         f"sync step retraced {n_traces} times over {len(BUCKETS)} buckets")
 
 
+def test_stateful_adaptive_churn_compiles_at_most_once_per_bucket():
+    """PR 10: a STATEFUL rule (centered_clip, center carried across
+    rounds) under a DEFENSE-AWARE attack (spec_alie line-searches z
+    against each bucket's respecialized spec, inside the trace) through
+    200 churn steps — the {agg, atk} state bundle and the per-bucket
+    attack rebuild must not cost a single compile beyond the bucket
+    budget."""
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N,
+                     per_agent_batch=1)
+    spec = make_spec("centered_clip", f=frac(0.25), tau=1.0,
+                     n=elastic(N, buckets=BUCKETS))
+    bz = ByzantineConfig(n_agents=N, f=2, aggregator=spec,
+                         attack="spec_alie")
+    sim = SimConfig(faults=CHURN, seed=2)
+    before = TRACE_COUNTS["async_step"]
+    _, h = async_train_loop(CFG, bz, adamw(constant(1e-3)), ds,
+                            steps=STEPS, sim=sim, log_every=STEPS,
+                            log_fn=lambda *_: None)
+    assert np.isfinite(h[-1]["loss"])
+    n_async = TRACE_COUNTS["async_step"] - before
+    assert n_async <= len(BUCKETS), (
+        f"stateful+adaptive loop retraced {n_async} times over "
+        f"{len(BUCKETS)} buckets")
+
+
 def test_serving_churn_compiles_at_most_once_per_bucket():
     """generate_replicated under replica churn: the agreement step
     compiles once per bucket across a 200-token decode."""

@@ -237,6 +237,38 @@ def test_recorder_on_is_bit_identical(tmp_path):
     assert all(e.get("telemetry") for e in steps)
 
 
+def test_stateful_loop_recorder_bit_identical():
+    """The PR-10 extension of the contract: a STATEFUL rule (centered_clip
+    carries its center across rounds) under a defense-aware attack takes
+    the general async path with the {agg, atk} state bundle — attaching a
+    Recorder must still leave the trained parameters bitwise unchanged."""
+    ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N, per_agent_batch=1)
+    bz = ByzantineConfig(n_agents=N, f=2,
+                         aggregator=make_spec("centered_clip", f=2, n=N,
+                                              tau=1.0),
+                         attack="slow_drift", attack_hyper={})
+    sim = SimConfig(faults=(Straggler(dist="pareto", scale=1.0, prob=0.5,
+                                      agents=(0, 1)),),
+                    quorum=6, max_staleness=3, seed=0)
+
+    def run(recorder):
+        return async_train_loop(CFG, bz, adamw(constant(1e-3)), ds, steps=8,
+                                sim=sim, log_every=8, log_fn=lambda *_: None,
+                                recorder=recorder)
+    p_off, h_off = run(None)
+    rec = Recorder()
+    p_on, h_on = run(rec)
+    rec.close()
+    assert _leaves_equal(p_off, p_on)
+    assert [h["loss"] for h in h_off] == [h["loss"] for h in h_on]
+    steps = [e for e in rec.events if e["kind"] == "step"]
+    assert len(steps) == 8
+    # the telemetry rows carry centered_clip's effective clip weights
+    ser = agent_series(rec.events)
+    assert ser["sel_w"].shape == (8, N)
+    assert np.isfinite(ser["sel_w"][ser["mask"].astype(bool)]).all()
+
+
 def test_sync_loop_recorder_bit_identical():
     ds = SyntheticLM(vocab_size=32, seq_len=8, n_agents=N, per_agent_batch=1)
     bz = ByzantineConfig(n_agents=N, f=2,
